@@ -1,0 +1,48 @@
+"""Paper Fig. 6: (a) per-layer inference latency mean/variance per scheme;
+(b) E2E token-generation latency comparison."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (rand_intra_cg_plan, rand_intra_plan, rand_place_plan,
+                        simulate_token_generation, spacemoe_plan)
+
+from .common import N_EXPERTS, N_LAYERS, Timer, emit, paper_world
+
+
+def run(n_tokens: int = 600, seed: int = 0) -> dict:
+    con, topo, activ, wl, comp = paper_world(seed=seed)
+    ccfg = con.cfg
+    plans = {
+        "SpaceMoE": spacemoe_plan(con, topo, activ, wl, comp),
+        "RandPlace": rand_place_plan(ccfg, N_LAYERS, N_EXPERTS,
+                                     np.random.default_rng(seed + 1)),
+        "RandIntra": rand_intra_plan(ccfg, N_LAYERS, N_EXPERTS,
+                                     np.random.default_rng(seed + 2)),
+        "RandIntra-CG": rand_intra_cg_plan(ccfg, N_LAYERS, N_EXPERTS,
+                                           np.random.default_rng(seed + 3)),
+    }
+    out = {}
+    for scheme, plan in plans.items():
+        with Timer() as t:
+            res = simulate_token_generation(
+                plan, topo, activ, wl, comp, np.random.default_rng(5),
+                n_tokens=n_tokens,
+            )
+        mean, std = res.layer_stats()
+        out[scheme] = {
+            "layer_mean_ms": (mean * 1e3).round(3).tolist(),
+            "layer_std_ms": (std * 1e3).round(3).tolist(),
+            "e2e_s": res.mean_s,
+        }
+        emit(
+            f"fig6a/{scheme}", t.seconds / n_tokens * 1e6,
+            f"layer_mean_ms={float(mean.mean()*1e3):.3f};"
+            f"layer_std_ms={float(std.mean()*1e3):.3f};"
+            f"e2e_s={res.mean_s:.4f}",
+        )
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks (CPU interpret mode — correctness-grade timing;
+the derived column reports the roofline-relevant work per call).
+
+On-TPU performance claims for these kernels are made via the §Roofline
+analysis, not via CPU wall-clock; interpret mode executes the kernel body
+in Python and is orders of magnitude slower than Mosaic on TPU.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import decode_attention, gmm
+from repro.kernels.ref import decode_attention_ref, gmm_ref
+
+from .common import emit
+
+
+def _bench(fn, *args, iters: int = 3) -> float:
+    fn(*args)                                   # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> dict:
+    out = {}
+    # MoE grouped matmul: llama-moe-3.5b decode bucket shape
+    e, c, k, n = 8, 64, 512, 344
+    x = jax.random.normal(jax.random.PRNGKey(0), (e, c, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (e, k, n), jnp.float32)
+    flops = 2 * e * c * k * n
+    t_k = _bench(lambda a, b: gmm(a, b, interpret=True), x, w)
+    t_r = _bench(gmm_ref, x, w)
+    np.testing.assert_allclose(np.asarray(gmm(x, w, interpret=True)),
+                               np.asarray(gmm_ref(x, w)), atol=1e-4)
+    emit("kernels/moe_gmm_interp", t_k * 1e6,
+         f"gflops_per_call={flops/1e9:.3f};ref_us={t_r*1e6:.1f};allclose=1")
+    out["gmm"] = (t_k, t_r)
+
+    # decode attention: 8 kv heads, G=4, 4k cache
+    b, hkv, g, s, hd = 2, 8, 4, 4096, 128
+    q = jax.random.normal(jax.random.PRNGKey(2), (b, hkv, g, hd), jnp.float32)
+    kc = jax.random.normal(jax.random.PRNGKey(3), (b, hkv, s, hd), jnp.float32)
+    vc = jax.random.normal(jax.random.PRNGKey(4), (b, hkv, s, hd), jnp.float32)
+    pos = jnp.full((b,), s - 1, jnp.int32)
+    cache_bytes = 2 * b * hkv * s * hd * 4
+    t_k = _bench(lambda *a: decode_attention(*a, interpret=True), q, kc, vc, pos)
+    t_r = _bench(decode_attention_ref, q, kc, vc, pos)
+    np.testing.assert_allclose(
+        np.asarray(decode_attention(q, kc, vc, pos, interpret=True)),
+        np.asarray(decode_attention_ref(q, kc, vc, pos)), atol=1e-4)
+    emit("kernels/decode_attn_interp", t_k * 1e6,
+         f"cache_mb_per_call={cache_bytes/1e6:.1f};ref_us={t_r*1e6:.1f};"
+         f"allclose=1")
+    out["decode_attn"] = (t_k, t_r)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Paper Sec. VIII open challenge: link-state-aware token routing.
+
+The paper's placement assumes routing always sees the current topology.
+This bench quantifies what stale link-state information costs: paths are
+chosen from the topology ``s`` slots ago; where the network changed, the
+token pays the worse path plus a re-route penalty (discovery/handshake,
+one slot-scale RTT ~ 30 ms).  The gap between s=0 and s>0 is the value of
+link-state-aware routing — and SpaceMoE's short routes make it the most
+robust scheme (fewer links per path, fewer chances to be stale).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (rand_intra_cg_plan, simulate_token_generation,
+                        spacemoe_plan)
+
+from .common import N_EXPERTS, N_LAYERS, Timer, emit, paper_world
+
+REROUTE_PENALTY_S = 0.030
+
+
+def run(n_tokens: int = 250) -> dict:
+    con, topo, activ, wl, comp = paper_world(seed=0, n_slots=60)
+    plans = {
+        "SpaceMoE": spacemoe_plan(con, topo, activ, wl, comp),
+        "RandIntra-CG": rand_intra_cg_plan(
+            con.cfg, N_LAYERS, N_EXPERTS, np.random.default_rng(3)),
+    }
+    out: dict = {}
+    for scheme, plan in plans.items():
+        for staleness in (0, 1, 5, 20):
+            with Timer() as t:
+                r = simulate_token_generation(
+                    plan, topo, activ, wl, comp, np.random.default_rng(5),
+                    n_tokens=n_tokens, route_staleness=staleness,
+                    reroute_penalty_s=REROUTE_PENALTY_S,
+                )
+            out[(scheme, staleness)] = r.mean_s
+            emit(f"linkstate/{scheme}/stale_{staleness}",
+                 t.seconds * 1e6 / n_tokens,
+                 f"s_per_token={r.mean_s:.4f};drop={r.drop_rate:.4f}")
+        fresh = out[(scheme, 0)]
+        worst = out[(scheme, 20)]
+        emit(f"linkstate/{scheme}/staleness_cost", 0.0,
+             f"overhead_at_20_slots={(worst/fresh-1)*100:.1f}%")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Paper Sec. VI-B / Table I: multi-expert satellites and the
+propagation-computing trade-off.
+
+Sweeps experts-per-satellite (N_E) x onboard parallelism (eta) for the
+slotted (concentrate) vs spread placements; the crossover the paper
+predicts — concentrate when propagation-limited, spread when
+compute-limited — is the derived output.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (ComputeConfig, multi_expert_plan,
+                        simulate_token_generation)
+
+from .common import Timer, emit, paper_world
+
+
+def run(n_tokens: int = 250) -> dict:
+    con, topo, activ, wl, _ = paper_world(seed=0, n_slots=60)
+    out: dict = {}
+    # Table I platforms: RAD5545 (3.7 GFLOPS), SBC-2A72 (10.4), iX10 (fast)
+    platforms = {
+        "RAD5545": ComputeConfig(peak_gflops=3.7, utilization=0.7),
+        "SBC-2A72": ComputeConfig(peak_gflops=10.4, utilization=0.7),
+        "iX10": ComputeConfig(peak_gflops=1000.0, utilization=0.7),
+    }
+    for pname, comp in platforms.items():
+        for n_e in (2, 4):
+            res = {}
+            for mode in ("slotted", "spread"):
+                plan = multi_expert_plan(con, topo, activ, n_e, mode)
+                with Timer() as t:
+                    r = simulate_token_generation(
+                        plan, topo, activ, wl, comp,
+                        np.random.default_rng(5), n_tokens=n_tokens, eta=1.0)
+                res[mode] = r.mean_s
+            better = min(res, key=res.get)
+            emit(f"multi_expert/{pname}/N_E={n_e}",
+                 t.seconds * 1e6 / n_tokens,
+                 f"slotted_s={res['slotted']:.4f};spread_s={res['spread']:.4f};"
+                 f"better={better}")
+            out[(pname, n_e)] = res
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Placement machinery benchmarks:
+
+- planner scaling: spacemoe_plan cost vs constellation size (the paper
+  claims O(I log I + V log V) per layer — Sec. V end);
+- optimality gap: Theorem-1 closed-form objective vs brute force (small I)
+  and vs Monte-Carlo of the actual simulator;
+- TPU transplant: expected dispatch-cost reduction of the Theorem-1
+  expert->device permutation vs identity, per MoE arch in the pool.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (ActivationModel, ConstellationConfig, Constellation,
+                        LinkConfig, TorusSpec, activation_probs,
+                        brute_force_optimal, expected_dispatch_cost,
+                        identity_plan, layer_latency_closed_form,
+                        plan_expert_devices, sample_topology, spacemoe_plan,
+                        theorem1_assignment)
+
+from .common import Timer, emit
+
+
+def run() -> dict:
+    out: dict = {}
+
+    # planner scaling
+    for nx, ny in ((9, 8), (17, 16), (33, 32)):
+        ccfg = ConstellationConfig.scaled(nx, ny, n_slots=20)
+        con = Constellation(ccfg)
+        topo = sample_topology(con, LinkConfig(), np.random.default_rng(0))
+        activ = ActivationModel.zipf(8, 8, 2, seed=0)
+        with Timer() as t:
+            spacemoe_plan(con, topo, activ)
+        emit(f"placement/plan_{nx}x{ny}", t.seconds * 1e6,
+             f"sats={ccfg.n_sats};layers=8")
+        out[f"plan_{nx}x{ny}"] = t.seconds
+
+    # optimality: Theorem 1 == brute force on I<=6
+    rng = np.random.default_rng(0)
+    gaps = []
+    for trial in range(20):
+        n, k = 6, 2
+        tau = np.sort(rng.uniform(0.01, 0.3, n))
+        w = rng.gamma(2, 1, n) + 0.05
+        probs = activation_probs(w, k)
+        assign = theorem1_assignment(probs, tau)
+        r2e = np.empty(n, dtype=np.int64)
+        r2e[assign] = np.arange(n)
+        thm = layer_latency_closed_form(tau, w, r2e, k)
+        _, best = brute_force_optimal(tau, w, k)
+        gaps.append(thm - best)
+    emit("placement/theorem1_optimality_gap", 0.0,
+         f"max_gap={max(gaps):.2e};trials=20")
+    out["max_gap"] = max(gaps)
+
+    # TPU transplant per MoE arch
+    for arch in ("granite-moe-3b-a800m", "deepseek-moe-16b",
+                 "jamba-1.5-large-398b", "llama-moe-3.5b"):
+        cfg = get_config(arch)
+        e, k = cfg.n_experts, cfg.top_k
+        n_dev = max(d for d in range(1, 17) if e % d == 0)  # EP ring size
+        ring = TorusSpec(shape=(n_dev,), wrap=True)
+        w = ActivationModel.zipf(1, e, k, seed=1).weights[0]
+        with Timer() as t:
+            plan = plan_expert_devices(w, k, ring,
+                                       bytes_per_token=2.0 * cfg.d_model)
+        base = identity_plan(e, ring, bytes_per_token=2.0 * cfg.d_model)
+        c_t = expected_dispatch_cost(plan, w, k)
+        c_i = expected_dispatch_cost(base, w, k)
+        emit(f"placement/device_{arch}", t.seconds * 1e6,
+             f"theorem1_us={c_t*1e6:.2f};identity_us={c_i*1e6:.2f};"
+             f"reduction={100*(1-c_t/c_i):.1f}%")
+        out[arch] = (c_t, c_i)
+    return out
+
+
+if __name__ == "__main__":
+    run()

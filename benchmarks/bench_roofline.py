@@ -1,0 +1,46 @@
+"""Roofline summary: read the dry-run JSON artifacts and print the
+per-cell three-term roofline table (the §Roofline deliverable feed)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def run() -> dict:
+    cells = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    out: dict = {}
+    n_ok = n_skip = n_fail = 0
+    for path in cells:
+        with open(path) as f:
+            rec = json.load(f)
+        cell = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec["status"] == "skip":
+            n_skip += 1
+            continue
+        if rec["status"] != "ok":
+            n_fail += 1
+            emit(f"roofline/{cell}", 0.0, "status=FAIL")
+            continue
+        n_ok += 1
+        r = rec["roofline"]
+        emit(
+            f"roofline/{cell}",
+            r["compute_s"] * 1e6,
+            f"dominant={r['dominant']};compute_s={r['compute_s']:.5f};"
+            f"memory_s={r['memory_s']:.5f};"
+            f"collective_s={r['collective_s']:.5f};"
+            f"useful_flops_ratio={r['useful_flops_ratio']:.3f};"
+            f"roofline_fraction={r['roofline_fraction']:.4f}",
+        )
+        out[cell] = r
+    emit("roofline/summary", 0.0, f"ok={n_ok};skip={n_skip};fail={n_fail}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

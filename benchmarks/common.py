@@ -1,0 +1,52 @@
+"""Shared benchmark setup: the paper's experimental configuration
+(Sec. VII-A) and a fast variant for CI-style runs."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        sample_topology)
+
+# Paper Sec. VII-A: 33 planes x 32 sats, F=13, 550 km, 87 deg, 200 slots,
+# 0.12 rad/s PAT threshold, survival 0.95, >=100 Gbps ISLs, SBC-2A72 at 70%.
+PAPER_CONSTELLATION = ConstellationConfig()
+PAPER_LINK = LinkConfig(token_dim=4096, bits_per_value=16, isl_rate_gbps=100.0)
+PAPER_COMPUTE = ComputeConfig(peak_gflops=10.4, utilization=0.7)
+
+# LLaMA-MoE-3.5B: 32 layers x 8 experts, top-2.
+N_LAYERS, N_EXPERTS, TOP_K = 32, 8, 2
+
+DATASETS = ["OpenBookQA", "PIQA", "ARC-E", "ARC-C", "WinoGrande", "BoolQ",
+            "SciQ", "HellaSwag"]
+
+
+def paper_world(seed: int = 0, n_slots: int | None = None,
+                cfg: ConstellationConfig | None = None):
+    """(constellation, topology, activation, workload, compute)."""
+    ccfg = cfg or PAPER_CONSTELLATION
+    if n_slots is not None:
+        import dataclasses
+        ccfg = dataclasses.replace(ccfg, n_slots=n_slots)
+    con = Constellation(ccfg)
+    topo = sample_topology(con, PAPER_LINK, np.random.default_rng(seed))
+    activ = ActivationModel.zipf(N_LAYERS, N_EXPERTS, TOP_K, seed=seed)
+    wl = MoEWorkload.llama_moe_3p5b()
+    return con, topo, activ, wl, PAPER_COMPUTE
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+
+
+def emit(name: str, us_per_call: float, derived: str) -> str:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    print(row)
+    return row

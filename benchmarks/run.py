@@ -1,0 +1,54 @@
+"""Benchmark entrypoint — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only table2 fig7
+    PYTHONPATH=src python -m benchmarks.run --fast     # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset: table2 fig6 fig7 kernels placement "
+                         "multi_expert roofline")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    from . import (bench_fig6, bench_fig7, bench_kernels, bench_linkstate,
+                   bench_multi_expert, bench_placement, bench_roofline,
+                   bench_table2)
+
+    n_tok = 120 if args.fast else 400
+    suite = {
+        "table2": lambda: bench_table2.run(
+            n_tokens=n_tok, n_slots=60 if args.fast else None),
+        "fig6": lambda: bench_fig6.run(n_tokens=150 if args.fast else 600),
+        "fig7": lambda: bench_fig7.run(n_tokens=80 if args.fast else 250),
+        "multi_expert": lambda: bench_multi_expert.run(
+            n_tokens=80 if args.fast else 250),
+        "placement": bench_placement.run,
+        "kernels": bench_kernels.run,
+        "linkstate": lambda: bench_linkstate.run(
+            n_tokens=80 if args.fast else 250),
+        "roofline": bench_roofline.run,
+    }
+    selected = args.only or list(suite)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in selected:
+        if name not in suite:
+            print(f"unknown bench {name!r}", file=sys.stderr)
+            raise SystemExit(2)
+        suite[name]()
+    print(f"# total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Elastic failover study: node failures and stragglers during MoE serving.
+
+Maps the paper's ISL-outage model (Eq. 3) onto device failures on the EP
+ring: as devices die, the Theorem-1 re-plan concentrates surviving slots
+around the dispatch origin, trading weight-migration bytes for expected
+dispatch latency (paper Sec. VI-B's multi-expert regime appears
+automatically as capacity shrinks).
+
+    PYTHONPATH=src python examples/elastic_failover.py
+"""
+import numpy as np
+
+from repro.core import (ActivationModel, TorusSpec, expected_dispatch_cost,
+                        plan_expert_devices)
+from repro.distributed import (migration, replan_on_failure,
+                               replan_with_stragglers)
+
+E, TOP_K = 64, 6                      # deepseek-moe-16b MoE geometry
+BYTES_PER_EXPERT = 3 * 2048 * 1408 * 2   # bf16 expert weights
+
+
+def main():
+    w = ActivationModel.zipf(1, E, TOP_K, seed=0).weights[0]
+    torus = TorusSpec(shape=(4, 4))
+    plan = plan_expert_devices(w, TOP_K, torus)
+    print(f"initial: {E} experts on {torus.n_devices} devices, "
+          f"expected dispatch {expected_dispatch_cost(plan, w, TOP_K)*1e6:.2f} us")
+
+    rng = np.random.default_rng(0)
+    failed: set[int] = set()
+    for round_i in range(4):
+        nxt = int(rng.choice([d for d in range(torus.n_devices)
+                              if d not in failed]))
+        failed.add(nxt)
+        new_plan, survivors = replan_on_failure(w, TOP_K, torus, failed)
+        mig = migration(plan, new_plan, BYTES_PER_EXPERT, survivors)
+        cost = expected_dispatch_cost(new_plan, w, TOP_K)
+        print(f"round {round_i+1}: device {nxt} fails "
+              f"({len(survivors)} left, {new_plan.experts_per_device}/dev) -> "
+              f"move {len(mig.moved_experts)} experts "
+              f"({mig.bytes_moved/1e6:.0f} MB), dispatch {cost*1e6:.2f} us")
+        plan = new_plan
+
+    print("\nstraggler mitigation (no failure, device 0 slowed 20x):")
+    base = plan_expert_devices(w, TOP_K, torus)
+    hot_on_0 = [e for e in range(E) if base.device_of_expert(e) == 0]
+    slow = replan_with_stragglers(w, TOP_K, torus, {0: 20.0})
+    hot_after = [e for e in range(E) if slow.device_of_expert(e) == 0]
+    p = ActivationModel(weights=w[None], top_k=TOP_K).probs(0)
+    print(f"  device-0 expert load before: {p[hot_on_0].sum():.3f}  "
+          f"after: {p[hot_after].sum():.3f} (hot experts drained)")
+
+
+if __name__ == "__main__":
+    main()

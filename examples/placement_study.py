@@ -1,0 +1,51 @@
+"""Placement study: how network parameters shape SpaceMoE's advantage
+(a quick interactive version of paper Fig. 7).
+
+    PYTHONPATH=src python examples/placement_study.py
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        rand_intra_cg_plan, sample_topology,
+                        simulate_token_generation, spacemoe_plan)
+
+N_LAYERS, N_EXPERTS, TOP_K = 8, 8, 2   # N_y >= L must hold at every size
+
+
+def latency(ccfg, seed=0, n_tokens=200):
+    con = Constellation(ccfg)
+    topo = sample_topology(con, LinkConfig(), np.random.default_rng(seed))
+    activ = ActivationModel.zipf(N_LAYERS, N_EXPERTS, TOP_K, seed=1)
+    wl = MoEWorkload.llama_moe_3p5b()
+    comp = ComputeConfig()
+    sm = simulate_token_generation(
+        spacemoe_plan(con, topo, activ, wl, comp), topo, activ, wl, comp,
+        np.random.default_rng(5), n_tokens)
+    cg = simulate_token_generation(
+        rand_intra_cg_plan(ccfg, N_LAYERS, N_EXPERTS, np.random.default_rng(7)),
+        topo, activ, wl, comp, np.random.default_rng(5), n_tokens)
+    return sm.mean_s, cg.mean_s
+
+
+def main():
+    base = ConstellationConfig.scaled(17, 16, n_slots=30)
+    print("altitude sweep (s/token):")
+    for alt in (350, 550, 800, 1100):
+        sm, cg = latency(dataclasses.replace(base, altitude_km=float(alt)))
+        print(f"  {alt:5d} km: SpaceMoE {sm:.3f}  RandIntra-CG {cg:.3f}")
+    print("survival-probability sweep:")
+    for p in (0.8, 0.9, 0.95, 1.0):
+        sm, cg = latency(dataclasses.replace(base, survival_prob=p))
+        print(f"  P_sw={p:.2f}: SpaceMoE {sm:.3f}  RandIntra-CG {cg:.3f}")
+    print("constellation-size sweep:")
+    for nx, ny in ((13, 12), (17, 16), (25, 24)):
+        sm, cg = latency(ConstellationConfig.scaled(nx, ny, n_slots=30))
+        print(f"  {nx}x{ny} ({nx*ny} sats): SpaceMoE {sm:.3f}  "
+              f"RandIntra-CG {cg:.3f}")
+
+
+if __name__ == "__main__":
+    main()

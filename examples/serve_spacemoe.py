@@ -1,0 +1,29 @@
+"""End-to-end serving driver (the paper's kind is inference).
+
+Runs the full pipeline on the paper's model family: router calibration ->
+Theorem-1 expert->device placement -> batched prefill+decode -> space-
+network latency accounting -> elastic failover demo.
+
+    PYTHONPATH=src python examples/serve_spacemoe.py
+    PYTHONPATH=src python examples/serve_spacemoe.py --arch deepseek-moe-16b
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama-moe-3.5b")
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+    serve_main([
+        "--arch", args.arch, "--smoke",
+        "--batch", "4", "--prompt-len", "32",
+        "--decode-tokens", str(args.tokens),
+        "--space-sim", "--fail-device", "1",
+    ])
+
+
+if __name__ == "__main__":
+    main()

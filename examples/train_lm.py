@@ -1,0 +1,57 @@
+"""Train a language model end-to-end with checkpoint/restart.
+
+Default: a ~10M-param smollm-family config sized for this CPU container
+(few hundred steps in minutes).  ``--full-135m`` trains the real
+smollm-135m config (sized for accelerators; the production-mesh sharding
+for it is proven by the dry-run).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    # fault-tolerance: kill mid-run, then re-run the same command — it
+    # resumes from the last checkpoint with no data skipped/repeated.
+"""
+import argparse
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch.train import main as train_main  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full-135m", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/spacemoe_train_ckpt")
+    ap.add_argument("--schedule", default="wsd", choices=["wsd", "cosine"])
+    args = ap.parse_args()
+
+    if args.full_135m:
+        argv = ["--arch", "smollm-135m", "--steps", str(args.steps),
+                "--batch", "4", "--seq", "256"]
+    else:
+        # ~10M-param same-family config: 6 layers, d=256
+        from repro.configs import smollm_135m
+        cfg = dataclasses.replace(
+            smollm_135m.CONFIG, n_layers=6, d_model=256, n_heads=8,
+            n_kv_heads=4, head_dim=32, d_ff=683, vocab_size=8192,
+            name="smollm-10m", compute_dtype="float32",
+            attn_q_chunk=64, attn_kv_chunk=128,
+        )
+        # register it so launch.train can find it
+        import repro.configs as C
+        C.REGISTRY["smollm-10m"] = cfg
+        argv = ["--arch", "smollm-10m", "--steps", str(args.steps),
+                "--batch", "8", "--seq", "128"]
+    argv += ["--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+             "--schedule", args.schedule, "--lr", "1e-3"]
+    out = train_main(argv)
+    losses = out["losses"]
+    if losses:
+        print(f"[example] loss {losses[0]:.3f} -> {losses[-1]:.3f} over "
+              f"{len(losses)} steps ({out['n_params']/1e6:.1f}M params)")
+
+
+if __name__ == "__main__":
+    main()

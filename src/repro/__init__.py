@@ -1,0 +1,1 @@
+"""SpaceMoE reproduction: core placement + JAX multi-pod framework."""

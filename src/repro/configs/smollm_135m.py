@@ -1,0 +1,23 @@
+"""smollm-135m [dense] — 30L d576 9H (GQA kv=3) d_ff=1536 vocab 49152;
+llama-arch small.  [hf:HuggingFaceTB/SmolLM-135M]
+
+Also the arch used by the real end-to-end training driver
+(examples/train_smollm.py): ~135M params trains for a few hundred steps on
+CPU in this container.
+"""
+from repro.models.config import LayerSpec, ModelConfig
+
+ARCH_ID = "smollm-135m"
+
+CONFIG = ModelConfig(
+    name=ARCH_ID,
+    n_layers=30,
+    d_model=576,
+    n_heads=9,
+    n_kv_heads=3,
+    d_ff=1536,
+    vocab_size=49152,
+    pattern=(LayerSpec("attn", "dense"),),
+    rope_theta=10000.0,
+    tie_embeddings=True,
+)

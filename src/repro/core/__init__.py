@@ -1,0 +1,44 @@
+"""SpaceMoE core — the paper's contribution.
+
+Constellation + time-varying topology (Sec. II), conditional-Poisson
+activation model (Sec. III-C), two-level placement with the Theorem-1
+optimal intra-layer rule (Sec. IV-V), E2E latency simulator (Sec. IV-B),
+and the TPU transplant (expert->device placement on an ICI torus).
+"""
+from .activation import (ActivationModel, activation_probs,
+                         activation_probs_jax, esp, esp_jax,
+                         esp_prefix_table, sample_topk, subset_pmf)
+from .constellation import (EARTH_RADIUS_M, SPEED_OF_LIGHT, Constellation,
+                            ConstellationConfig)
+from .device_placement import (DevicePlacementPlan, TorusSpec,
+                               expected_dispatch_cost, identity_plan,
+                               plan_expert_devices)
+from .latency import (ComputeConfig, LinkConfig, TopologySample,
+                      expected_path_latency, gateway_distance_table,
+                      sample_topology)
+from .objective import (brute_force_optimal, layer_latency_closed_form,
+                        layer_latency_monte_carlo)
+from .placement import (MultiExpertPlan, PlacementPlan, central_gateway,
+                        multi_expert_plan, rand_intra_cg_plan,
+                        rand_intra_plan, rand_place_plan, ring_subnets,
+                        spacemoe_plan, theorem1_assignment)
+from .simulator import SimResult, simulate_token_generation
+from .workload import MoEWorkload
+
+__all__ = [
+    "ActivationModel", "activation_probs", "activation_probs_jax", "esp",
+    "esp_jax", "esp_prefix_table", "sample_topk", "subset_pmf",
+    "EARTH_RADIUS_M", "SPEED_OF_LIGHT", "Constellation", "ConstellationConfig",
+    "DevicePlacementPlan", "TorusSpec", "expected_dispatch_cost",
+    "identity_plan", "plan_expert_devices",
+    "ComputeConfig", "LinkConfig", "TopologySample", "expected_path_latency",
+    "gateway_distance_table", "sample_topology",
+    "brute_force_optimal", "layer_latency_closed_form",
+    "layer_latency_monte_carlo",
+    "MultiExpertPlan", "PlacementPlan", "central_gateway",
+    "multi_expert_plan", "rand_intra_cg_plan", "rand_intra_plan",
+    "rand_place_plan", "ring_subnets", "spacemoe_plan",
+    "theorem1_assignment",
+    "SimResult", "simulate_token_generation",
+    "MoEWorkload",
+]

@@ -1,0 +1,230 @@
+"""Expert-activation model (paper Sec. III-C).
+
+The top-K active expert set follows the conditional-Poisson distribution
+the paper calls PPSWOR:
+
+    Pr(S_hat = U) = prod_{i in U} w_i / e_K(w_1..w_I)        (Eq. 12)
+
+with e_K the K-th elementary symmetric polynomial (Eq. 13) and per-expert
+activation probability
+
+    P_i = 1 - e_K(w \\ i) / e_K(w)                            (Eq. 14).
+
+Everything here is exact (dynamic programming over elementary symmetric
+polynomials), with a numpy float64 path used by the planner/simulator and
+a jax path (``lax.scan``) so the model composes into jit'd programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------- #
+# Elementary symmetric polynomials (numpy, float64)
+# --------------------------------------------------------------------- #
+
+
+def esp(weights: np.ndarray, k_max: int) -> np.ndarray:
+    """e_0..e_{k_max} of ``weights`` — Newton DP, O(I*K).
+
+    Weights are pre-scaled by their mean for numerical range; the scaling
+    is undone exactly (e_k(c*w) = c^k e_k(w)).
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    scale = w.mean() if w.size else 1.0
+    if scale <= 0:
+        raise ValueError("importance weights must be positive")
+    ws = w / scale
+    e = np.zeros(k_max + 1, dtype=np.float64)
+    e[0] = 1.0
+    for wi in ws:
+        e[1 : k_max + 1] = e[1 : k_max + 1] + wi * e[0:k_max]
+    return e * scale ** np.arange(k_max + 1)
+
+
+def esp_prefix_table(weights: np.ndarray, k_max: int) -> np.ndarray:
+    """E[i, k] = e_k(w_1..w_i), shape (I+1, K+1) — scaled-stable DP."""
+    w = np.asarray(weights, dtype=np.float64)
+    scale = w.mean() if w.size else 1.0
+    ws = w / scale
+    n = len(ws)
+    table = np.zeros((n + 1, k_max + 1), dtype=np.float64)
+    table[:, 0] = 1.0
+    for i in range(1, n + 1):
+        table[i, 1:] = table[i - 1, 1:] + ws[i - 1] * table[i - 1, :-1]
+    return table * scale ** np.arange(k_max + 1)[None, :]
+
+
+def activation_probs(weights: np.ndarray, k: int) -> np.ndarray:
+    """P_i = Pr(i in S_hat) via Eq. 14: 1 - e_K(w \\ i) / e_K(w).
+
+    Each leave-one-out ESP is computed by a direct DP over the remaining
+    I-1 weights (all-positive additions, unconditionally stable; the
+    textbook subtractive recurrence cancels catastrophically when one
+    weight dominates or K ~ I).  O(I^2 K) — trivial at MoE sizes.
+
+    Properties: sum_i P_i = K; P_i monotone increasing in w_i.
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    n = len(w)
+    if k >= n:
+        return np.ones(n)
+    ws = w / w.mean()
+    e_full = esp(ws, k)[k]
+    probs = np.empty(n)
+    for i in range(n):
+        loo = esp(np.delete(ws, i), k)[k]
+        probs[i] = 1.0 - loo / e_full
+    return probs
+
+
+def sample_topk(
+    weights: np.ndarray, k: int, rng: np.random.Generator, n_draws: int = 1
+) -> np.ndarray:
+    """Exact conditional-Poisson samples of Eq. 12, shape (n_draws, K).
+
+    Sequential ESP-ratio method: scanning items i = I..1 with ``r`` slots
+    remaining, include item i with probability
+
+        w_i * e_{r-1}(w_1..w_{i-1}) / e_r(w_1..w_i),
+
+    which marginalizes exactly to Eq. 12.  Vectorized over draws.
+    """
+    w = np.asarray(weights, dtype=np.float64)
+    n = len(w)
+    if not (0 < k <= n):
+        raise ValueError(f"need 0 < K <= I, got K={k}, I={n}")
+    table = esp_prefix_table(w / w.mean(), k)      # scale cancels in ratios
+    ws = w / w.mean()
+
+    remaining = np.full(n_draws, k, dtype=np.int64)
+    out = np.zeros((n_draws, k), dtype=np.int64)
+    for i in range(n, 0, -1):
+        r = remaining
+        num = ws[i - 1] * table[i - 1, np.maximum(r - 1, 0)]
+        den = table[i, r]
+        with np.errstate(invalid="ignore", divide="ignore"):
+            p = np.where(r > 0, num / den, 0.0)
+        take = rng.random(n_draws) < p
+        idx = np.where(take)[0]
+        out[idx, remaining[idx] - 1] = i - 1
+        remaining = remaining - take.astype(np.int64)
+    assert (remaining == 0).all()
+    return out
+
+
+def subset_pmf(weights: np.ndarray, k: int) -> dict[tuple[int, ...], float]:
+    """Exact PMF over all size-K subsets (enumeration; small I only)."""
+    import itertools
+
+    w = np.asarray(weights, dtype=np.float64)
+    denom = esp(w, k)[k]
+    return {
+        u: float(np.prod(w[list(u)]) / denom)
+        for u in itertools.combinations(range(len(w)), k)
+    }
+
+
+# --------------------------------------------------------------------- #
+# JAX path — composable into jit'd programs
+# --------------------------------------------------------------------- #
+
+
+def esp_jax(weights: jnp.ndarray, k_max: int) -> jnp.ndarray:
+    """e_0..e_{k_max} via lax.scan (same DP as :func:`esp`)."""
+    w = jnp.asarray(weights)
+    scale = jnp.mean(w)
+    ws = w / scale
+
+    def step(e, wi):
+        e = e.at[1:].add(wi * e[:-1])
+        return e, None
+
+    e0 = jnp.zeros(k_max + 1, dtype=w.dtype).at[0].set(1.0)
+    e, _ = jax.lax.scan(step, e0, ws)
+    return e * scale ** jnp.arange(k_max + 1)
+
+
+def activation_probs_jax(weights: jnp.ndarray, k: int) -> jnp.ndarray:
+    """JAX version of :func:`activation_probs` (Eq. 14)."""
+    w = jnp.asarray(weights)
+    ws = w / jnp.mean(w)
+    e_full = esp_jax(ws, k)
+
+    def step(loo_prev, ej):
+        loo = ej - ws * loo_prev
+        return loo, None
+
+    loo0 = jnp.ones_like(ws)
+    loo_k, _ = jax.lax.scan(step, loo0, e_full[1 : k + 1])
+    return 1.0 - loo_k / e_full[k]
+
+
+# --------------------------------------------------------------------- #
+# Per-layer activation statistics container
+# --------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationModel:
+    """Importance weights per MoE layer, shape (L, I); top-K per Eq. 12."""
+
+    weights: np.ndarray      # (L, I) positive
+    top_k: int
+
+    def __post_init__(self):
+        if (np.asarray(self.weights) <= 0).any():
+            raise ValueError("importance weights must be positive")
+
+    @property
+    def n_layers(self) -> int:
+        return self.weights.shape[0]
+
+    @property
+    def n_experts(self) -> int:
+        return self.weights.shape[1]
+
+    def probs(self, layer: int) -> np.ndarray:
+        return activation_probs(self.weights[layer], self.top_k)
+
+    def all_probs(self) -> np.ndarray:
+        return np.stack([self.probs(l) for l in range(self.n_layers)])
+
+    def sample(self, layer: int, rng: np.random.Generator, n_draws: int = 1) -> np.ndarray:
+        return sample_topk(self.weights[layer], self.top_k, rng, n_draws)
+
+    # -- constructors ---------------------------------------------------
+    @staticmethod
+    def zipf(n_layers: int, n_experts: int, top_k: int, s: float = 1.2,
+             seed: int = 0) -> "ActivationModel":
+        """Zipf-skewed weights with a per-layer random expert order.
+
+        Real MoE gating statistics are heavy-tailed (a few hot experts per
+        layer); the paper estimates them from LLaMA-MoE traces, which we do
+        not have offline — Zipf(s) is the standard surrogate.
+        """
+        rng = np.random.default_rng(seed)
+        base = (1.0 + np.arange(n_experts)) ** (-s)
+        w = np.stack([rng.permutation(base) for _ in range(n_layers)])
+        return ActivationModel(weights=w, top_k=top_k)
+
+    @staticmethod
+    def uniform(n_layers: int, n_experts: int, top_k: int) -> "ActivationModel":
+        return ActivationModel(
+            weights=np.ones((n_layers, n_experts)), top_k=top_k
+        )
+
+    @staticmethod
+    def from_router_counts(counts: np.ndarray, top_k: int,
+                           smoothing: float = 1.0) -> "ActivationModel":
+        """Estimate weights from observed expert-selection counts (L, I).
+
+        Activation probabilities are monotone in the weights (Eq. 14), so
+        smoothed empirical frequencies are a consistent plug-in.
+        """
+        counts = np.asarray(counts, dtype=np.float64) + smoothing
+        return ActivationModel(weights=counts / counts.sum(axis=1, keepdims=True),
+                               top_k=top_k)

@@ -1,0 +1,67 @@
+"""Per-token FLOP accounting for the distributed MoE workload (Eq. 16 input).
+
+The gateway satellite executes attention (+KV cache), layernorm, gating and
+aggregation; each expert satellite executes one FFN.  FLOPs = 2*MACs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEWorkload:
+    """Decode-time FLOPs per token for one MoE layer."""
+
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff_expert: int
+    n_experts: int
+    top_k: int
+    vocab_size: int = 32000
+    gated_ffn: bool = True      # SwiGLU (3 mats) vs MLP (2 mats)
+
+    # -- gateway satellite ------------------------------------------------
+    def attention_flops(self, ctx_len: int) -> float:
+        d, hd = self.d_model, self.head_dim
+        q = 2 * d * self.n_heads * hd
+        kv = 2 * 2 * d * self.n_kv_heads * hd
+        o = 2 * self.n_heads * hd * d
+        scores = 2 * self.n_heads * hd * ctx_len
+        weighted = 2 * self.n_heads * hd * ctx_len
+        return float(q + kv + o + scores + weighted)
+
+    def gating_flops(self) -> float:
+        return float(2 * self.d_model * self.n_experts)
+
+    def aggregation_flops(self) -> float:
+        return float(self.top_k * self.d_model)
+
+    def gateway_flops(self, ctx_len: int) -> float:
+        norms = 4 * self.d_model
+        return self.attention_flops(ctx_len) + self.gating_flops() \
+            + self.aggregation_flops() + norms
+
+    # -- expert satellite --------------------------------------------------
+    @property
+    def expert_flops(self) -> float:
+        mats = 3 if self.gated_ffn else 2
+        return float(2 * mats * self.d_model * self.d_ff_expert)
+
+    # -- head (runs on the last gateway, once per token) -------------------
+    @property
+    def lm_head_flops(self) -> float:
+        return float(2 * self.d_model * self.vocab_size)
+
+    @staticmethod
+    def llama_moe_3p5b() -> "MoEWorkload":
+        """LLaMA-MoE-3.5B (2/8) — paper Sec. VII-A2.
+
+        LLaMA-2-7B FFN (d_ff=11008) split into 8 experts of d_ff=1376;
+        32 layers, top-2, d_model=4096.  Active params ~3.5B of 6.7B total.
+        """
+        return MoEWorkload(
+            d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+            d_ff_expert=1376, n_experts=8, top_k=2, vocab_size=32000,
+        )

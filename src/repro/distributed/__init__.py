@@ -1,0 +1,6 @@
+from .elastic import (Migration, migration, replan_on_failure,
+                      replan_with_stragglers)
+from .sharding import ShardingRules
+
+__all__ = ["Migration", "migration", "replan_on_failure",
+           "replan_with_stragglers", "ShardingRules"]

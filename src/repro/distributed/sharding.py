@@ -1,0 +1,222 @@
+"""Sharding rules: parameter / cache / batch PartitionSpecs per mesh.
+
+Megatron-style tensor parallelism over the ``model`` axis (attention heads,
+FFN hidden, vocab), expert parallelism over the same axis when the expert
+count divides it (otherwise experts fall back to TP over d_ff), batch over
+``("pod", "data")``.  Every rule is divisibility-guarded: a dimension that
+does not divide the axis is replicated instead of erroring, and the
+decision is recorded so the dry-run can report it.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _shard(dim: int, axis: str, size: int) -> str | None:
+    return axis if (size > 1 and dim % size == 0) else None
+
+
+class ShardingRules:
+    """Builds PartitionSpec pytrees for a (cfg, mesh) pair."""
+
+    def __init__(self, cfg: ModelConfig, mesh, model_axis: str = "model",
+                 data_axes: tuple[str, ...] = ("data",),
+                 zero_opt: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.model_axis = model_axis
+        self.data_axes = data_axes
+        self.n_model = mesh.shape[model_axis] if mesh is not None else 1
+        self.zero_opt = zero_opt      # ZeRO-1: moments sharded over data too
+        self.decisions: dict[str, str] = {}
+
+    # ----------------------------------------------------------------- #
+    def _m(self, dim: int) -> str | None:
+        return _shard(dim, self.model_axis, self.n_model)
+
+    @property
+    def batch_axes(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    @property
+    def n_data(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.data_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def _b(self, dim: int):
+        """Batch axes if the dim divides them, else replicate."""
+        return self.batch_axes if (self.n_data > 1 and dim % self.n_data == 0) \
+            else None
+
+    def _record(self, path: str, spec: P) -> P:
+        self.decisions[path] = str(spec)
+        return spec
+
+    # ----------------------------------------------------------------- #
+    def _mixer_of(self, names: list) -> str:
+        """Which mixer family owns this param (from the bN pattern slot)."""
+        if "first" in names:
+            return self.cfg.pattern[0].mixer
+        for n in names:
+            if len(n) > 1 and n[0] == "b" and n[1:].isdigit():
+                return self.cfg.pattern[int(n[1:])].mixer
+        return "attn"
+
+    def param_spec(self, path: tuple, leaf) -> P:
+        names = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        name = names[-1]
+        stacked = 1 if names[0] == "units" else 0   # leading unit-scan dim
+        shape = leaf.shape[stacked:]
+        pre = (None,) * stacked
+        cfg = self.cfg
+
+        def out(*spec):
+            return self._record("/".join(names), P(*pre, *spec))
+
+        # ---- embeddings / head ----
+        if name == "embed":
+            return out(self._m(shape[0]), None)
+        if name == "head":
+            return out(None, self._m(shape[1]))
+
+        # ---- MoE expert stacks: (E, d, f) / (E, f, d) ----
+        if "ffn" in names and name in ("w_gate", "w_up", "w_down") \
+                and len(shape) == 3:
+            e = shape[0]
+            if self.n_model > 1 and e % self.n_model == 0:
+                return out(self.model_axis, None, None)      # EP
+            # TP inside experts: shard the d_ff dimension
+            ff_axis = 2 if name in ("w_gate", "w_up") else 1
+            spec = [None, None, None]
+            spec[ff_axis] = self._m(shape[ff_axis])
+            return out(*spec)
+        if name == "router":
+            return out(None, None)
+
+        # ---- dense FFN (+ shared experts) ----
+        if name in ("w_gate", "w_up") and len(shape) == 2:
+            return out(None, self._m(shape[1]))
+        if name == "w_down" and len(shape) == 2:
+            return out(self._m(shape[0]), None)
+
+        # ---- attention ----
+        if name in ("w_q", "w_k", "w_v"):
+            return out(None, self._m(shape[1]))
+        if name in ("b_q", "b_k", "b_v"):
+            return out(self._m(shape[0]))
+        if name == "w_o":
+            return out(self._m(shape[0]), None)
+
+        # ---- mamba ----
+        if name == "w_in":
+            return out(None, self._m(shape[1]))
+        if name in ("conv_w",):
+            return out(None, self._m(shape[1]))
+        if name in ("conv_b", "d_skip", "dt_bias"):
+            return out(self._m(shape[0]))
+        if name in ("w_x_proj",):
+            return out(self._m(shape[0]), None)
+        if name == "w_dt":
+            return out(None, self._m(shape[1]))
+        if name == "a_log":
+            return out(self._m(shape[0]), None)
+
+        # ---- xLSTM ----
+        # mLSTM: q/k/v/z column-sharded (head-dim).  The per-step scan then
+        # carries many SMALL collectives (k broadcast per step) — bytes are
+        # negligible (see EXPERIMENTS.md §Dry-run), but the op COUNT is a
+        # real-hardware latency concern; the measured alternatives (full
+        # replication; row-sharded matrix memory) are strictly worse on
+        # bytes (310s / 119s vs 41s memory+collective) because scan-AD
+        # transposes re-reduce per step.  A chunked custom-VJP mLSTM is the
+        # production fix (future work, logged in §Perf D).
+        # sLSTM: tiny state, block-diagonal recurrence -> data-parallel only.
+        if name in ("b_gates", "w_gates", "r_h"):
+            return out(*([None] * len(shape)))
+        if name in ("w_q_m", "w_k_m", "w_v_m"):
+            return out(None, self._m(shape[1]))
+        if name == "w_x":                        # slstm input projection
+            return out(None, None)
+        if name == "w_z":
+            return out(None, self._m(shape[1]))
+        if name == "w_out":
+            mixer = self._mixer_of(names)
+            if mixer == "slstm":
+                return out(None, None)
+            return out(self._m(shape[0]), None)
+
+        # norms, gates, biases, scalars -> replicated
+        return out(*([None] * len(shape)))
+
+    def param_specs(self, params) -> object:
+        return jax.tree_util.tree_map_with_path(self.param_spec, params)
+
+    # ----------------------------------------------------------------- #
+    def cache_spec(self, path: tuple, leaf) -> P:
+        names = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        name = names[-1]
+        stacked = 1 if names[0] == "units" else 0
+        shape = leaf.shape[stacked:]
+        pre = (None,) * stacked
+        b = self._b(shape[0])
+        if name in ("k", "v"):          # (B, S, Hkv, hd)
+            # batch=1 (long-context): context parallelism — shard the cache
+            # sequence dim over the batch axes instead.
+            s_axis = None
+            if b is None and shape[1] % max(self.n_data, 1) == 0:
+                s_axis = self.batch_axes
+            return P(*pre, b, s_axis, self._m(shape[2]), None)
+        if name == "ssm":               # (B, di, N)
+            return P(*pre, b, self._m(shape[1]), None)
+        if name == "conv":              # (B, dc-1, di)
+            return P(*pre, b, None, self._m(shape[2]))
+        if name in ("c", "n", "h", "m") and len(shape) >= 2:
+            return P(*pre, b, *([None] * (len(shape) - 1)))
+        return P(*pre, *([None] * len(shape)))
+
+    def cache_specs(self, cache) -> object:
+        return jax.tree_util.tree_map_with_path(self.cache_spec, cache)
+
+    # ----------------------------------------------------------------- #
+    def batch_spec(self, batch) -> object:
+        def spec(path, leaf):
+            if leaf is None:
+                return None
+            return P(self._b(leaf.shape[0]), *([None] * (leaf.ndim - 1)))
+
+        return jax.tree_util.tree_map_with_path(spec, batch)
+
+    def opt_state_specs(self, opt_state, params_specs) -> object:
+        """Moments mirror params; step counter replicated.
+
+        With ``zero_opt`` (ZeRO-1), each moment additionally shards its
+        largest unsharded divisible dim over the data axes — XLA then
+        reduce-scatters gradients into the moment shards and all-gathers
+        the updated params, cutting optimizer memory by |data axes|.
+        """
+        if not self.zero_opt:
+            return {"mu": params_specs, "nu": params_specs, "count": P()}
+
+        def zero(spec: P, leaf) -> P:
+            entries = list(spec) + [None] * (leaf.ndim - len(spec))
+            best, best_dim = -1, 0
+            for i, (e, dim) in enumerate(zip(entries, leaf.shape)):
+                if e is None and dim % max(self.n_data, 1) == 0 \
+                        and dim > best_dim and self.n_data > 1:
+                    best, best_dim = i, dim
+            if best >= 0:
+                entries[best] = self.batch_axes
+            return P(*entries)
+
+        mu_specs = jax.tree.map(
+            zero, params_specs, opt_state["mu"],
+            is_leaf=lambda s: isinstance(s, P),
+        )
+        return {"mu": mu_specs, "nu": mu_specs, "count": P()}

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels: moe_gmm (grouped expert matmul), decode_attn
+(GQA flash-decode).  ops.py = jit wrappers, ref.py = jnp oracles."""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

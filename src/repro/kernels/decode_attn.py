@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: GQA flash-decode attention over a KV cache.
+
+One new token per sequence attends over its cache row (paper Sec. III-B,
+the gateway satellite's per-token self-attention).  Inputs:
+
+    q:   (B, Hkv, G, hd)   query heads grouped under their KV head
+    k/v: (B, Hkv, S, hd)   cache (dense layout, padded to S)
+    pos: (B,) int32        current position; kv index > pos is masked
+
+Grid (B, Hkv, S/bs) with the KV-length dimension innermost: VMEM scratch
+carries the online-softmax state (m, l, acc) across KV blocks, so HBM
+traffic is exactly one pass over the cache — the kernel is HBM-bandwidth
+bound as decode attention should be.  ``pos`` rides scalar prefetch (SMEM)
+since the mask needs it before the block loop starts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(
+    pos_ref,                      # scalar-prefetch: (B,) int32 in SMEM
+    q_ref, k_ref, v_ref,          # VMEM blocks
+    o_ref,
+    m_ref, l_ref, acc_ref,        # VMEM scratch
+    *, block_s: int, n_s: int, scale: float,
+):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bs, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    sco = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                      # (G, bs)
+
+    kv_idx = s * block_s + jax.lax.broadcasted_iota(jnp.int32, sco.shape, 1)
+    mask = kv_idx <= pos_ref[b]
+    sco = jnp.where(mask, sco, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, sco.max(axis=1, keepdims=True))   # (G,1)
+    p = jnp.exp(sco - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _flush():
+        o_ref[...] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)[None, None]
+
+
+def _pad_axis(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(
+    q: jnp.ndarray,       # (B, Hkv, G, hd)
+    k: jnp.ndarray,       # (B, Hkv, S, hd)
+    v: jnp.ndarray,
+    pos: jnp.ndarray,     # (B,) int32
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns (B, Hkv, G, hd) attention output in q.dtype."""
+    b, hkv, g, hd = q.shape
+    s = k.shape[2]
+    scale = hd ** -0.5
+
+    gp = max(8, g)                       # sublane-align the query group
+    qp = _pad_axis(q, 2, gp)
+    bs = min(block_s, s)
+    kp = _pad_axis(k, 2, bs)
+    vp = _pad_axis(v, 2, bs)
+    sp = kp.shape[2]
+    n_s = sp // bs
+    # Padded KV rows are masked because kv_idx > pos always holds there
+    # (pos < S <= padded index).
+
+    grid = (b, hkv, n_s)
+    out = pl.pallas_call(
+        functools.partial(
+            _decode_attn_kernel, block_s=bs, n_s=n_s, scale=scale
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, gp, hd), lambda b_, h, s_, pos_ref: (b_, h, 0, 0)),
+                pl.BlockSpec((1, 1, bs, hd), lambda b_, h, s_, pos_ref: (b_, h, s_, 0)),
+                pl.BlockSpec((1, 1, bs, hd), lambda b_, h, s_, pos_ref: (b_, h, s_, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, gp, hd), lambda b_, h, s_, pos_ref: (b_, h, 0, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((gp, 1), jnp.float32),
+                pltpu.VMEM((gp, 1), jnp.float32),
+                pltpu.VMEM((gp, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, gp, hd), q.dtype),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), qp, kp, vp)
+    return out[:, :, :g, :]

@@ -1,0 +1,49 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in this
+CPU container (Pallas interpret mode executes the kernel body in Python);
+on TPU the compiled Mosaic kernels run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attn import decode_attention as _decode_attention
+from .moe_gmm import gmm as _gmm
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gmm(x: jnp.ndarray, w: jnp.ndarray, *, block_c: int = 128,
+        block_n: int = 128, block_k: int = 512,
+        interpret: bool | None = None) -> jnp.ndarray:
+    """Grouped expert matmul (E,C,K)x(E,K,N)->(E,C,N)."""
+    if interpret is None:
+        interpret = not on_tpu()
+    return _gmm(x, w, block_c=block_c, block_n=block_n, block_k=block_k,
+                interpret=interpret)
+
+
+def expert_ffn_pallas(params: dict, xs: jnp.ndarray, compute_dtype,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Drop-in replacement for ``repro.models.moe.expert_ffn`` using gmm."""
+    xs = xs.astype(compute_dtype)
+    wg = params["w_gate"].astype(compute_dtype)
+    wu = params["w_up"].astype(compute_dtype)
+    wd = params["w_down"].astype(compute_dtype)
+    gate = jax.nn.silu(gmm(xs, wg, interpret=interpret))
+    up = gmm(xs, wu, interpret=interpret)
+    return gmm(gate * up, wd, interpret=interpret)
+
+
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     pos: jnp.ndarray, *, block_s: int = 512,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """GQA flash-decode over a KV cache: (B,Hkv,G,hd) out."""
+    if interpret is None:
+        interpret = not on_tpu()
+    return _decode_attention(q, k, v, pos, block_s=block_s,
+                             interpret=interpret)

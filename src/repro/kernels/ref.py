@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gmm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (E, C, K), w: (E, K, N) -> (E, C, N), f32 accumulation."""
+    out = jnp.einsum("eck,ekn->ecn", x, w,
+                     preferred_element_type=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,     # (B, Hkv, G, hd)
+    k: jnp.ndarray,     # (B, Hkv, S, hd)
+    v: jnp.ndarray,
+    pos: jnp.ndarray,   # (B,)
+) -> jnp.ndarray:
+    hd = q.shape[-1]
+    s = k.shape[2]
+    sco = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32),
+                     k.astype(jnp.float32)) * hd**-0.5
+    mask = jnp.arange(s)[None, None, None, :] <= pos[:, None, None, None]
+    sco = jnp.where(mask, sco, -1e30)
+    p = jax.nn.softmax(sco, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS for 512 host
+devices *before* any jax import; tests and benches see the real device
+count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips when ``multi_pod``.
+
+    Axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+    Batch shards over ("pod", "data"); tensor/expert parallelism over
+    "model" (see repro.distributed.sharding).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_"
+            "count=512 before importing jax"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_host_mesh():
+    """Whatever this host offers (smoke/example runs): 1 device -> (1, 1)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

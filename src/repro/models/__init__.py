@@ -1,0 +1,13 @@
+"""JAX model zoo: composable dense / MoE / SSM / hybrid language models."""
+from .config import LayerSpec, ModelConfig
+from .frontends import batch_specs, frontend_split, random_batch
+from .model import (Parallel, decode_step, forward, init_cache, init_params,
+                    loss_fn, n_scan_units, prefill)
+from .moe import apply_placement
+
+__all__ = [
+    "LayerSpec", "ModelConfig", "Parallel",
+    "batch_specs", "frontend_split", "random_batch",
+    "decode_step", "forward", "init_cache", "init_params", "loss_fn",
+    "n_scan_units", "prefill", "apply_placement",
+]

@@ -1,0 +1,63 @@
+"""Stub modality frontends (per the assignment brief).
+
+The [vlm]/[audio] entries specify the transformer BACKBONE only; the
+modality encoder (CLIP tower / EnCodec) is a STUB — ``input_specs()``
+supplies precomputed patch/frame embeddings.  These helpers generate the
+matching ShapeDtypeStructs and random test inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+# llava-next anyres: one 24x24 base tile + CLS drop => 576 patch embeddings.
+VISION_TOKENS = 576
+
+
+def frontend_split(cfg: ModelConfig, seq_len: int) -> tuple[int, int]:
+    """(n_embed_tokens, n_text_tokens) summing to seq_len."""
+    if cfg.frontend == "vision":
+        n_emb = min(VISION_TOKENS, seq_len // 2)
+        return n_emb, seq_len - n_emb
+    if cfg.frontend == "audio":
+        return seq_len, 0        # decoder over EnCodec frames only
+    return 0, seq_len
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq_len: int,
+                embed_dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStructs for a training batch (tokens/embeds + labels)."""
+    n_emb, n_text = frontend_split(cfg, seq_len)
+    out: dict = {}
+    if n_emb:
+        out["embeds"] = jax.ShapeDtypeStruct((batch, n_emb, cfg.d_model),
+                                             embed_dtype)
+    if n_text:
+        out["tokens"] = jax.ShapeDtypeStruct((batch, n_text), jnp.int32)
+    out["labels"] = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+    return out
+
+
+def random_batch(cfg: ModelConfig, batch: int, seq_len: int, seed: int = 0,
+                 embed_dtype=jnp.bfloat16) -> dict:
+    rng = np.random.default_rng(seed)
+    n_emb, n_text = frontend_split(cfg, seq_len)
+    out: dict = {}
+    if n_emb:
+        out["embeds"] = jnp.asarray(
+            rng.normal(0, 1, (batch, n_emb, cfg.d_model)), dtype=embed_dtype
+        )
+    if n_text:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, n_text)), dtype=jnp.int32
+        )
+    labels = rng.integers(0, cfg.vocab_size, (batch, seq_len))
+    if n_emb and cfg.frontend == "vision":
+        labels[:, :n_emb] = -1   # no next-token loss on the image prefix
+    # (audio: the EnCodec frames are stubbed as input embeddings, but the
+    # codec token ids remain the prediction targets.)
+    out["labels"] = jnp.asarray(labels, dtype=jnp.int32)
+    return out

@@ -1,0 +1,320 @@
+"""Recurrent mixers: Mamba (selective SSM), mLSTM and sLSTM (xLSTM).
+
+All three expose the same triplet of entry points:
+  *_init(key, cfg, dtype)                  -> params
+  *_forward(cfg, params, x, compute_dtype) -> y          (train/prefill)
+  *_init_state / *_decode(...)             -> O(1) decode state + step
+
+Sequence processing uses ``lax.scan`` over time — correct and HLO-compact;
+the per-step state is exactly the decode state, so prefill and decode
+cannot drift apart.  These mixers carry no KV cache, which is what makes
+``long_500k`` decode feasible for jamba/xlstm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .layers import normal_init, out_proj_init
+
+
+def _pin(x, par, *dims):
+    """Sharding-constrain a scan input/carry so per-time-step ops stay
+    local (without this, propagation can put an all-gather inside every
+    step — measured 520k collectives per jamba train step).
+
+    dims entries: "b" batch axes, "m" model axis, None replicated —
+    divisibility-guarded.
+    """
+    if par is None or getattr(par, "mesh", None) is None:
+        return x
+    mesh = par.mesh
+    n_data = 1
+    for a in par.data_axes:
+        n_data *= mesh.shape[a]
+    baxes = par.data_axes if len(par.data_axes) > 1 else par.data_axes[0]
+    spec = []
+    for dim, want in zip(x.shape, dims):
+        if want == "b" and n_data > 1 and dim % n_data == 0:
+            spec.append(baxes)
+        elif want == "m" and dim % mesh.shape[par.model_axis] == 0 \
+                and mesh.shape[par.model_axis] > 1:
+            spec.append(par.model_axis)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+# ===================================================================== #
+# Mamba (selective state-space, Mamba-1)
+# ===================================================================== #
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    n, r, dc = cfg.mamba_d_state, cfg.mamba_dt_rank, cfg.mamba_d_conv
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A.
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "w_in": normal_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": normal_init(ks[1], (dc, di), dtype, scale=0.1),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_x_proj": normal_init(ks[2], (di, r + 2 * n), dtype),
+        "w_dt": normal_init(ks[3], (r, di), dtype, scale=r**-0.5),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01))).astype(jnp.float32),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": out_proj_init(ks[4], (di, d), dtype, cfg.n_layers),
+    }
+
+
+def _mamba_scan_step(a_neg, carry, xt, dt, b_t, c_t):
+    """One SSM step.  carry h: (B, di, N); xt/dt: (B, di); b/c: (B, N)."""
+    da = jnp.exp(dt[..., None] * a_neg[None])                 # (B, di, N)
+    dbx = dt[..., None] * b_t[:, None, :] * xt[..., None]     # (B, di, N)
+    h = da * carry + dbx
+    y = jnp.einsum("bdn,bn->bd", h, c_t)
+    return h, y
+
+
+def _mamba_inner(cfg, params, xz, conv_state, ssm_state, compute_dtype,
+                 par=None):
+    """Shared conv+SSM core.  xz: (B, S, 2*di).  States carried across calls.
+
+    conv_state: (B, dc-1, di) trailing inputs; ssm_state: (B, di, N).
+    Returns (y (B,S,di), new_conv_state, new_ssm_state).
+    """
+    di, n = cfg.d_inner, cfg.mamba_d_state
+    x, z = jnp.split(xz, 2, axis=-1)                          # (B, S, di)
+    b, s, _ = x.shape
+    dc = cfg.mamba_d_conv
+
+    # Causal depthwise conv along S with carried state.
+    xpad = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    conv_w = params["conv_w"].astype(x.dtype)                 # (dc, di)
+    xc = sum(xpad[:, i : i + s, :] * conv_w[i] for i in range(dc))
+    xc = jax.nn.silu(xc + params["conv_b"].astype(x.dtype))
+    new_conv_state = xpad[:, s:, :] if dc > 1 else conv_state
+    xc = _pin(xc, par, "b", None, "m")
+
+    proj = xc @ params["w_x_proj"].astype(x.dtype)            # (B,S,r+2N)
+    dt_r, b_ssm, c_ssm = jnp.split(
+        proj, [cfg.mamba_dt_rank, cfg.mamba_dt_rank + n], axis=-1
+    )
+    # B/C/dt are tiny (N=16, r<=512): replicate them so the per-step scan
+    # math is collective-free; di stays model-sharded.
+    b_ssm = _pin(b_ssm, par, "b", None, None)
+    c_ssm = _pin(c_ssm, par, "b", None, None)
+    dt = jax.nn.softplus(
+        (dt_r @ params["w_dt"].astype(x.dtype)).astype(jnp.float32)
+        + params["dt_bias"]
+    )                                                         # (B,S,di) fp32
+    dt = _pin(dt, par, "b", None, "m")
+    ssm_state = _pin(ssm_state, par, "b", "m", None)
+    a_neg = -jnp.exp(params["a_log"])                         # (di, N)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        h, y = _mamba_scan_step(a_neg, h, xt.astype(jnp.float32), dtt,
+                                bt.astype(jnp.float32), ct.astype(jnp.float32))
+        return h, y
+
+    xs = (
+        xc.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+        b_ssm.transpose(1, 0, 2), c_ssm.transpose(1, 0, 2),
+    )
+    h_last, ys = jax.lax.scan(step, ssm_state, xs)
+    y = ys.transpose(1, 0, 2).astype(compute_dtype)           # (B,S,di)
+    y = y + xc * params["d_skip"].astype(compute_dtype)
+    y = y * jax.nn.silu(z)
+    return y, new_conv_state.astype(jnp.float32), h_last
+
+
+def mamba_forward(cfg, params, x, compute_dtype, par=None):
+    b = x.shape[0]
+    st = mamba_init_state(cfg, b)
+    xz = x.astype(compute_dtype) @ params["w_in"].astype(compute_dtype)
+    y, _, _ = _mamba_inner(cfg, params, xz, st["conv"], st["ssm"],
+                           compute_dtype, par)
+    return y @ params["w_out"].astype(compute_dtype)
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.d_inner), jnp.float32),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.mamba_d_state), jnp.float32),
+    }
+
+
+def mamba_decode(cfg, params, x, state, compute_dtype, par=None):
+    """x: (B, 1, d) -> (y (B,1,d), new state)."""
+    xz = x.astype(compute_dtype) @ params["w_in"].astype(compute_dtype)
+    y, conv, ssm = _mamba_inner(cfg, params, xz, state["conv"], state["ssm"],
+                                compute_dtype, par)
+    return y @ params["w_out"].astype(compute_dtype), {"conv": conv, "ssm": ssm}
+
+
+# ===================================================================== #
+# mLSTM (xLSTM matrix-memory block)
+# ===================================================================== #
+
+
+def mlstm_init(key, cfg: ModelConfig, dtype) -> dict:
+    """Separate q/k/v projections so TP can shard the matrix memory by
+    ROWS (v-index): C = f*C + i*(v k^T) and h = C q stay local per step
+    when v/C-rows/h are model-sharded and q/k/n are replicated — zero
+    collectives inside the time scan."""
+    d, di = cfg.d_model, cfg.d_inner
+    ks = jax.random.split(key, 6)
+    return {
+        "w_q_m": normal_init(ks[0], (d, di), dtype),
+        "w_k_m": normal_init(ks[1], (d, di), dtype),
+        "w_v_m": normal_init(ks[2], (d, di), dtype),
+        "w_gates": normal_init(ks[3], (d, 2 * cfg.n_heads), jnp.float32),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((cfg.n_heads,)), jnp.full((cfg.n_heads,), 3.0)]
+        ),  # forget-gate bias init high (remember by default)
+        "w_z": normal_init(ks[4], (d, di), dtype),
+        "w_out": out_proj_init(ks[5], (di, d), dtype, cfg.n_layers),
+    }
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    nh = cfg.n_heads
+    dh = cfg.d_inner // nh
+    return {
+        "c": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_step(carry, inp):
+    """Stabilized exponential-gating matrix-memory update."""
+    c, n, m = carry
+    q, k, v, log_i, log_f = inp        # q/k/v: (B,NH,dh); gates: (B,NH)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_g = jnp.exp(log_i - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c = f_g[..., None, None] * c + i_g[..., None, None] * (
+        v[..., :, None] * k[..., None, :]
+    )                                   # (B,NH,dh,dh) += v k^T  (row = v idx)
+    n = f_g[..., None] * n + i_g[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), 1.0)
+    h = num / den[..., None]
+    return (c, n, m_new), h
+
+
+def _mlstm_core(cfg, params, x, state, compute_dtype, par=None):
+    b, s, _ = x.shape
+    nh = cfg.n_heads
+    dh = cfg.d_inner // nh
+    xq = x.astype(compute_dtype)
+    q = xq @ params["w_q_m"].astype(compute_dtype)
+    k = xq @ params["w_k_m"].astype(compute_dtype)
+    v = xq @ params["w_v_m"].astype(compute_dtype)
+    scale = dh ** -0.5
+    q = q.reshape(b, s, nh, dh).astype(jnp.float32)
+    k = (k.reshape(b, s, nh, dh) * scale).astype(jnp.float32)
+    v = v.reshape(b, s, nh, dh).astype(jnp.float32)
+    gates = xq.astype(jnp.float32) @ params["w_gates"] + params["b_gates"]
+    log_i, f_raw = jnp.split(gates, 2, axis=-1)               # (B,S,NH)
+    log_f = -jax.nn.softplus(-f_raw)                          # log sigmoid
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (q, k, v)) + tuple(
+        a.transpose(1, 0, 2) for a in (log_i, log_f)
+    )
+    carry0 = (state["c"], state["n"], state["m"])
+    (c, n, m), hs = jax.lax.scan(_mlstm_step, carry0, xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, cfg.d_inner).astype(compute_dtype)
+    z = jax.nn.silu(xq @ params["w_z"].astype(compute_dtype))
+    y = (h * z) @ params["w_out"].astype(compute_dtype)
+    return y, {"c": c, "n": n, "m": m}
+
+
+def mlstm_forward(cfg, params, x, compute_dtype, par=None):
+    y, _ = _mlstm_core(cfg, params, x, mlstm_init_state(cfg, x.shape[0]),
+                       compute_dtype, par)
+    return y
+
+
+def mlstm_decode(cfg, params, x, state, compute_dtype, par=None):
+    return _mlstm_core(cfg, params, x, state, compute_dtype, par)
+
+
+# ===================================================================== #
+# sLSTM (xLSTM scalar-memory block with per-head recurrence)
+# ===================================================================== #
+
+
+def slstm_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    nh = cfg.n_heads
+    dh = di // nh
+    ks = jax.random.split(key, 3)
+    return {
+        "w_x": normal_init(ks[0], (d, 4 * di), dtype),
+        # block-diagonal recurrent weights, one (dh, 4*dh) block per head
+        "r_h": normal_init(ks[1], (nh, dh, 4 * dh), jnp.float32, scale=dh**-0.5),
+        "b": jnp.concatenate(
+            [jnp.zeros((2 * di,)), jnp.full((di,), 3.0), jnp.zeros((di,))]
+        ),  # (z, i, f, o) biases; forget bias high
+        "w_out": out_proj_init(ks[2], (di, d), dtype, cfg.n_layers),
+    }
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> dict:
+    nh = cfg.n_heads
+    dh = cfg.d_inner // nh
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z,
+            "m": jnp.full((batch, nh, dh), -1e30, jnp.float32)}
+
+
+def _slstm_step(params_rh, carry, x_gates):
+    """x_gates: (B, 4*di) pre-activations from the input path."""
+    c, n, h, m = carry                 # each (B, NH, dh)
+    b = c.shape[0]
+    nh, dh = c.shape[1], c.shape[2]
+    rec = jnp.einsum("bhd,hdk->bhk", h, params_rh)            # (B,NH,4dh)
+    pre = x_gates.reshape(b, nh, 4 * dh) + rec
+    z_p, i_p, f_p, o_p = jnp.split(pre, 4, axis=-1)
+    log_i = i_p
+    log_f = -jax.nn.softplus(-f_p)     # log sigmoid
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_g = jnp.exp(log_i - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    z_v = jnp.tanh(z_p)
+    c_new = f_g * c + i_g * z_v
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_p) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def _slstm_core(cfg, params, x, state, compute_dtype):
+    b, s, _ = x.shape
+    pre = (x.astype(compute_dtype) @ params["w_x"].astype(compute_dtype)
+           ).astype(jnp.float32) + params["b"]
+    xs = pre.transpose(1, 0, 2)        # (S, B, 4di)
+
+    def step(carry, xg):
+        return _slstm_step(params["r_h"], carry, xg)
+
+    carry0 = (state["c"], state["n"], state["h"], state["m"])
+    (c, n, h, m), hs = jax.lax.scan(step, carry0, xs)
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, cfg.d_inner).astype(compute_dtype)
+    y = y @ params["w_out"].astype(compute_dtype)
+    return y, {"c": c, "n": n, "h": h, "m": m}
+
+
+def slstm_forward(cfg, params, x, compute_dtype):
+    y, _ = _slstm_core(cfg, params, x, slstm_init_state(cfg, x.shape[0]),
+                       compute_dtype)
+    return y
+
+
+def slstm_decode(cfg, params, x, state, compute_dtype):
+    return _slstm_core(cfg, params, x, state, compute_dtype)

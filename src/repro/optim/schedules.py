@@ -1,0 +1,40 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, MiniCPM's schedule).
+
+Each returns a function step -> multiplier in [0, 1] (jnp-traceable).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        prog = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def wsd_schedule(warmup_steps: int, total_steps: int,
+                 decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup -> long stable plateau -> short (1-decay_frac tail) decay.
+
+    MiniCPM (arXiv:2404.06395) Sec. 4: the stable phase runs at peak LR and
+    the final ``decay_frac`` of steps decays exponentially-ish; we use the
+    paper's simpler linear-in-log decay to ``final_frac``.
+    """
+    decay_start = int(total_steps * (1.0 - decay_frac))
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        in_decay = (step - decay_start) / jnp.maximum(total_steps - decay_start, 1)
+        in_decay = jnp.clip(in_decay, 0.0, 1.0)
+        decay = jnp.exp(jnp.log(jnp.maximum(final_frac, 1e-6)) * in_decay)
+        out = jnp.where(step < warmup_steps, warm, 1.0)
+        return jnp.where(step >= decay_start, decay, out)
+    return fn

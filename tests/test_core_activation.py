@@ -1,0 +1,125 @@
+"""Unit tests: ESP DP, activation probabilities, conditional-Poisson sampler."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (ActivationModel, activation_probs,
+                        activation_probs_jax, esp, esp_jax,
+                        esp_prefix_table, sample_topk, subset_pmf)
+
+
+def brute_esp(w, k):
+    return sum(
+        np.prod([w[i] for i in comb])
+        for comb in itertools.combinations(range(len(w)), k)
+    )
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("n,k", [(5, 2), (8, 3), (12, 6)])
+def test_esp_matches_enumeration(seed, n, k):
+    rng = np.random.default_rng(seed)
+    w = rng.gamma(2.0, 1.0, size=n) + 1e-3
+    e = esp(w, k)
+    for j in range(k + 1):
+        assert np.isclose(e[j], brute_esp(w, j), rtol=1e-10)
+
+
+def test_esp_prefix_table_consistency():
+    rng = np.random.default_rng(3)
+    w = rng.gamma(2.0, 1.0, size=10) + 1e-3
+    t = esp_prefix_table(w, 4)
+    for i in range(11):
+        np.testing.assert_allclose(t[i], esp(w[:i], 4), rtol=1e-10)
+
+
+def test_esp_extreme_scales():
+    # scaling invariance: e_k(c*w) = c^k e_k(w)
+    w = np.array([1e-8, 2e-8, 3e-8, 5e-8])
+    e_small = esp(w, 2)
+    e_big = esp(w * 1e12, 2)
+    np.testing.assert_allclose(e_big[2], e_small[2] * 1e24, rtol=1e-10)
+
+
+@pytest.mark.parametrize("n,k", [(4, 1), (8, 2), (64, 6), (40, 8)])
+def test_activation_probs_sum_to_k(n, k):
+    rng = np.random.default_rng(7)
+    w = rng.gamma(1.0, 1.0, size=n) + 1e-3
+    p = activation_probs(w, k)
+    assert np.all(p > 0) and np.all(p < 1 + 1e-12)
+    assert np.isclose(p.sum(), k, rtol=1e-9)
+
+
+def test_activation_probs_monotone_in_weight():
+    w = np.array([0.5, 1.0, 2.0, 4.0, 8.0])
+    p = activation_probs(w, 2)
+    assert np.all(np.diff(p) > 0)  # Eq. 14: P_i increasing in w_i
+
+
+def test_activation_probs_direct_formula():
+    # P_i = sum over subsets containing i of Eq. 12 PMF
+    rng = np.random.default_rng(11)
+    w = rng.gamma(2.0, 1.0, size=6) + 1e-2
+    pmf = subset_pmf(w, 3)
+    p = activation_probs(w, 3)
+    for i in range(6):
+        direct = sum(v for u, v in pmf.items() if i in u)
+        assert np.isclose(p[i], direct, rtol=1e-10)
+
+
+def test_jax_paths_match_numpy():
+    rng = np.random.default_rng(5)
+    w = rng.gamma(2.0, 1.0, size=16) + 1e-2
+    np.testing.assert_allclose(np.asarray(esp_jax(w, 4)), esp(w, 4), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(activation_probs_jax(w, 4)), activation_probs(w, 4), rtol=1e-5
+    )
+
+
+def test_sampler_matches_pmf():
+    """Empirical subset frequencies vs Eq. 12 (exact sequential sampler)."""
+    rng = np.random.default_rng(42)
+    w = np.array([4.0, 2.0, 1.0, 0.5, 0.25])
+    k = 2
+    n_draws = 40000
+    draws = sample_topk(w, k, rng, n_draws)
+    assert draws.shape == (n_draws, k)
+    # each row: k distinct indices
+    assert all(len(set(row)) == k for row in draws[:100])
+    pmf = subset_pmf(w, k)
+    counts: dict = {}
+    for row in draws:
+        key = tuple(sorted(row))
+        counts[key] = counts.get(key, 0) + 1
+    for u, p in pmf.items():
+        emp = counts.get(u, 0) / n_draws
+        se = np.sqrt(p * (1 - p) / n_draws)
+        assert abs(emp - p) < 6 * se + 1e-4, (u, emp, p)
+
+
+def test_sampler_marginals_match_eq14():
+    rng = np.random.default_rng(9)
+    w = np.array([8.0, 4.0, 2.0, 1.0, 1.0, 0.5, 0.25, 0.125])
+    k = 3
+    draws = sample_topk(w, k, rng, 30000)
+    emp = np.bincount(draws.ravel(), minlength=8) / 30000
+    np.testing.assert_allclose(emp, activation_probs(w, k), atol=0.01)
+
+
+def test_activation_model_constructors():
+    m = ActivationModel.zipf(4, 8, 2, seed=0)
+    assert m.all_probs().shape == (4, 8)
+    assert np.allclose(m.all_probs().sum(axis=1), 2.0)
+    u = ActivationModel.uniform(2, 4, 2)
+    assert np.allclose(u.probs(0), 0.5)
+    counts = np.random.default_rng(0).integers(1, 100, size=(3, 8))
+    f = ActivationModel.from_router_counts(counts, 2)
+    assert f.all_probs().shape == (3, 8)
+
+
+def test_sampler_rejects_bad_k():
+    with pytest.raises(ValueError):
+        sample_topk(np.ones(4), 5, np.random.default_rng(0))
+    with pytest.raises(ValueError):
+        ActivationModel(weights=np.zeros((2, 4)), top_k=2)

@@ -1,0 +1,280 @@
+"""Unit tests: objective closed form, Theorem 1 optimality, placement plans,
+constellation geometry, simulator orderings."""
+import numpy as np
+import pytest
+
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        activation_probs, brute_force_optimal,
+                        central_gateway, layer_latency_closed_form,
+                        layer_latency_monte_carlo, multi_expert_plan,
+                        rand_intra_cg_plan, rand_intra_plan, rand_place_plan,
+                        ring_subnets, sample_topology,
+                        simulate_token_generation, spacemoe_plan,
+                        theorem1_assignment)
+
+# --------------------------------------------------------------------- #
+# Objective (Lemma 1 + 2)
+# --------------------------------------------------------------------- #
+
+
+def test_closed_form_matches_monte_carlo():
+    rng = np.random.default_rng(0)
+    tau = np.sort(rng.uniform(0.01, 0.2, size=6))
+    w = rng.gamma(2.0, 1.0, size=6) + 0.1
+    perm = rng.permutation(6)
+    cf = layer_latency_closed_form(tau, w, perm, 2)
+    mc = layer_latency_monte_carlo(tau, w, perm, 2, np.random.default_rng(1), 60000)
+    assert abs(cf - mc) / cf < 0.01
+
+
+def test_closed_form_k_equals_i():
+    # K = I: the slowest rank is always I, so tau_c = tau_max.
+    tau = np.array([0.1, 0.2, 0.7])
+    w = np.array([1.0, 2.0, 3.0])
+    val = layer_latency_closed_form(tau, w, np.arange(3), 3)
+    assert np.isclose(val, 0.7)
+
+
+def test_closed_form_uniform_weights_placement_invariant():
+    tau = np.array([0.1, 0.2, 0.3, 0.4])
+    w = np.ones(4)
+    vals = {
+        layer_latency_closed_form(tau, w, np.asarray(p), 2)
+        for p in ([0, 1, 2, 3], [3, 2, 1, 0], [1, 3, 0, 2])
+    }
+    assert max(vals) - min(vals) < 1e-12
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("n,k", [(5, 2), (6, 3)])
+def test_theorem1_is_brute_force_optimal(seed, n, k):
+    """Theorem 1 sort-and-match == exhaustive search over all I! placements."""
+    rng = np.random.default_rng(seed)
+    tau = np.sort(rng.uniform(0.01, 0.3, size=n))
+    w = rng.gamma(2.0, 1.0, size=n) + 0.05
+    probs = activation_probs(w, k)
+    assign = theorem1_assignment(probs, tau)      # expert -> rank
+    rank_to_expert = np.empty(n, dtype=np.int64)
+    rank_to_expert[assign] = np.arange(n)
+    thm = layer_latency_closed_form(tau, w, rank_to_expert, k)
+    _, best = brute_force_optimal(tau, w, k)
+    assert thm <= best + 1e-12
+
+
+def test_theorem1_uses_lowest_latency_prefix():
+    probs = np.array([0.9, 0.1, 0.5])
+    tau = np.array([5.0, 1.0, 3.0, 2.0, 10.0])   # candidates, unsorted
+    assign = theorem1_assignment(probs, tau)
+    # hottest expert 0 -> candidate 1 (tau=1); expert 2 -> candidate 3 (tau=2);
+    # coldest expert 1 -> candidate 2 (tau=3)
+    np.testing.assert_array_equal(assign, [1, 2, 3])
+
+
+def test_theorem1_rejects_insufficient_candidates():
+    with pytest.raises(ValueError):
+        theorem1_assignment(np.array([0.5, 0.5]), np.array([1.0]))
+
+
+# --------------------------------------------------------------------- #
+# Constellation geometry + topology
+# --------------------------------------------------------------------- #
+
+CFG = ConstellationConfig.scaled(8, 12, n_slots=10)
+
+
+def test_positions_on_shell():
+    con = Constellation(CFG)
+    pos = con.positions(123.4)
+    np.testing.assert_allclose(
+        np.linalg.norm(pos, axis=-1), CFG.semi_major_axis_m, rtol=1e-12
+    )
+
+
+def test_edge_degree_at_most_four():
+    con = Constellation(CFG)
+    deg = np.zeros(CFG.n_sats, dtype=int)
+    for u, v in con.edges:
+        deg[u] += 1
+        deg[v] += 1
+    assert deg.max() <= 4
+    # intra-orbit ring + inter-orbit (incl. candidate seam) edge counts
+    assert con.intra_orbit_mask.sum() == CFG.n_sats
+    assert con.seam_mask.sum() == CFG.sats_per_plane
+
+
+def test_corotating_links_always_trackable_at_paper_threshold():
+    con = Constellation(CFG)
+    for t in [0.0, CFG.orbital_period_s / 3]:
+        feas = con.tracking_feasible(t)
+        assert feas[~con.seam_mask].all()
+
+
+def test_seam_links_mostly_gated():
+    con = Constellation(CFG)
+    seam_up = []
+    for t in CFG.slot_times():
+        seam_up.append(con.tracking_feasible(float(t))[con.seam_mask])
+    frac = np.concatenate(seam_up).mean()
+    assert frac < 0.7  # Earth occlusion + PAT kill most seam slots
+
+
+def test_topology_sample_shapes_and_availability():
+    con = Constellation(CFG)
+    topo = sample_topology(con, LinkConfig(), np.random.default_rng(0))
+    assert topo.edge_mask.shape == (CFG.n_slots, len(con.edges))
+    assert 0.7 < topo.availability() <= CFG.survival_prob + 0.02
+    assert (topo.edge_latency > 0).all()
+
+
+def test_shortest_path_properties():
+    con = Constellation(CFG)
+    topo = sample_topology(con, LinkConfig(), np.random.default_rng(1))
+    d = topo.distances_from(0, np.arange(6))
+    assert d.shape == (6, CFG.n_sats)
+    assert (d[np.arange(6), np.arange(6)] == 0).all()
+    finite = np.isfinite(d)
+    assert (d[finite] >= 0).all()
+    # one-hop neighbours: shortest path <= direct edge latency
+    m = topo.edge_mask[0]
+    for (u, v), lat in zip(topo.edges[m][:50], topo.edge_latency[0][m][:50]):
+        if u < 6:
+            assert d[u, v] <= lat + 1e-12
+
+
+# --------------------------------------------------------------------- #
+# Two-level placement
+# --------------------------------------------------------------------- #
+
+
+def test_ring_subnets_disjoint_cover():
+    subnets = ring_subnets(CFG, 4)
+    allnodes = np.concatenate(subnets)
+    assert len(np.unique(allnodes)) == len(allnodes)
+    assert len(allnodes) == CFG.n_planes * (CFG.sats_per_plane // 4) * 4
+    # Eq. 17: subnet l spans y in [l*y_span, (l+1)*y_span)
+    y = subnets[1] % CFG.sats_per_plane
+    span = CFG.sats_per_plane // 4
+    assert y.min() == span and y.max() == 2 * span - 1
+
+
+def test_ring_subnets_requires_enough_rings():
+    with pytest.raises(ValueError):
+        ring_subnets(CFG, CFG.sats_per_plane + 1)
+
+
+def test_central_gateway_inside_subnet():
+    subnets = ring_subnets(CFG, 4)
+    for layer in range(4):
+        g = central_gateway(CFG, layer, 4)
+        assert g in subnets[layer]
+
+
+def _small_world():
+    cfg = ConstellationConfig.scaled(8, 12, n_slots=10)
+    con = Constellation(cfg)
+    topo = sample_topology(con, LinkConfig(), np.random.default_rng(0))
+    activ = ActivationModel.zipf(n_layers=4, n_experts=4, top_k=2, seed=1)
+    return cfg, con, topo, activ
+
+
+def test_plans_are_injective_and_in_subnet():
+    cfg, con, topo, activ = _small_world()
+    plan = spacemoe_plan(con, topo, activ)
+    plan.validate(cfg.n_sats)
+    subnets = ring_subnets(cfg, 4)
+    for layer in range(4):
+        assert set(plan.expert_sats[layer]).issubset(set(subnets[layer]))
+        assert plan.gateways[layer] == central_gateway(cfg, layer, 4)
+    for maker, seed in [(rand_place_plan, 2), (rand_intra_plan, 3),
+                        (rand_intra_cg_plan, 4)]:
+        p = maker(cfg, 4, 4, np.random.default_rng(seed))
+        p.validate(cfg.n_sats)
+
+
+def test_spacemoe_hot_experts_on_low_latency_sats():
+    _, con, topo, activ = _small_world()
+    plan = spacemoe_plan(con, topo, activ)
+    for layer in range(4):
+        probs = activ.probs(layer)
+        order = np.argsort(-probs, kind="stable")
+        ranks = plan.expert_rank[layer][order]
+        assert (np.diff(ranks) > 0).all()      # hotter expert => lower rank
+        assert ranks[0] == 0                   # hottest on the best satellite
+
+
+def test_simulator_reproduces_paper_ordering():
+    """Expected ordering RandPlace > RandIntra > RandIntra-CG > SpaceMoE.
+
+    Random baselines are averaged over placement draws (the paper compares
+    expectations; a single draw at this toy scale is within noise).
+    """
+    cfg, con, topo, activ = _small_world()
+    wl = MoEWorkload.llama_moe_3p5b()
+    comp = ComputeConfig()
+
+    def mean_over_draws(maker, n_draws=5):
+        vals = []
+        for s in range(n_draws):
+            plan = maker(cfg, 4, 4, np.random.default_rng(100 + s))
+            r = simulate_token_generation(
+                plan, topo, activ, wl, comp, np.random.default_rng(5), 300
+            )
+            assert r.layer_latency_s.shape == (300, 4)
+            assert r.drop_rate < 0.05
+            vals.append(r.mean_s)
+        return float(np.mean(vals))
+
+    sm = simulate_token_generation(
+        spacemoe_plan(con, topo, activ, wl, comp), topo, activ, wl, comp,
+        np.random.default_rng(5), 300,
+    ).mean_s
+    rand_place = mean_over_draws(rand_place_plan)
+    rand_intra = mean_over_draws(rand_intra_plan)
+    rand_cg = mean_over_draws(rand_intra_cg_plan)
+    assert sm < rand_cg < rand_intra < rand_place
+
+
+def test_link_state_staleness_costs_latency():
+    """Sec. VIII extension: stale routing tables can only hurt, and the
+    zero-staleness path equals the default simulator."""
+    cfg, con, topo, activ = _small_world()
+    wl = MoEWorkload.llama_moe_3p5b()
+    comp = ComputeConfig()
+    plan = spacemoe_plan(con, topo, activ, wl, comp)
+    base = simulate_token_generation(
+        plan, topo, activ, wl, comp, np.random.default_rng(5), 200)
+    fresh = simulate_token_generation(
+        plan, topo, activ, wl, comp, np.random.default_rng(5), 200,
+        route_staleness=0, reroute_penalty_s=0.03)
+    assert np.isclose(base.mean_s, fresh.mean_s)
+    stale = simulate_token_generation(
+        plan, topo, activ, wl, comp, np.random.default_rng(5), 200,
+        route_staleness=3, reroute_penalty_s=0.03)
+    assert stale.mean_s >= base.mean_s - 1e-12
+
+
+def test_multi_expert_plans():
+    cfg, con, topo, activ = _small_world()
+    wl = MoEWorkload.llama_moe_3p5b()
+    comp = ComputeConfig()
+    for mode in ["slotted", "spread"]:
+        mp = multi_expert_plan(con, topo, activ, experts_per_sat=2, mode=mode)
+        assert mp.expert_sats.shape == (4, 4)
+        # at most N_E experts per satellite per layer
+        for layer in range(4):
+            _, counts = np.unique(mp.expert_sats[layer], return_counts=True)
+            assert counts.max() <= 2
+        r = simulate_token_generation(
+            mp, topo, activ, wl, comp, np.random.default_rng(6), n_tokens=100
+        )
+        assert np.isfinite(r.mean_s)
+    # compute-limited: spreading beats stacking when eta is small
+    slotted = multi_expert_plan(con, topo, activ, 2, "slotted")
+    spread = multi_expert_plan(con, topo, activ, 2, "spread")
+    slow = ComputeConfig(peak_gflops=0.5)
+    r_sl = simulate_token_generation(slotted, topo, activ, wl, slow,
+                                     np.random.default_rng(7), 300, eta=1.0)
+    r_sp = simulate_token_generation(spread, topo, activ, wl, slow,
+                                     np.random.default_rng(7), 300, eta=1.0)
+    assert r_sp.mean_s <= r_sl.mean_s + 1e-9

@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (TorusSpec, activation_probs, esp,
+                        expected_dispatch_cost, identity_plan,
+                        layer_latency_closed_form, plan_expert_devices,
+                        sample_topk, theorem1_assignment)
+
+pos_weights = st.lists(
+    st.floats(min_value=0.01, max_value=100.0, allow_nan=False), min_size=3,
+    max_size=16,
+)
+
+
+@given(w=pos_weights, data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_activation_probs_invariants(w, data):
+    w = np.asarray(w)
+    k = data.draw(st.integers(min_value=1, max_value=len(w)))
+    p = activation_probs(w, k)
+    assert np.all(p >= -1e-12) and np.all(p <= 1 + 1e-9)
+    assert np.isclose(p.sum(), k, rtol=1e-6)
+    # monotone: sorting by weight sorts probabilities
+    order = np.argsort(w, kind="stable")
+    assert np.all(np.diff(p[order]) >= -1e-9)
+
+
+@given(w=pos_weights, c=st.floats(min_value=0.01, max_value=100.0))
+@settings(max_examples=40, deadline=None)
+def test_esp_scaling_identity(w, c):
+    w = np.asarray(w)
+    k = min(3, len(w))
+    e1 = esp(w, k)
+    e2 = esp(c * w, k)
+    for j in range(k + 1):
+        assert np.isclose(e2[j], (c**j) * e1[j], rtol=1e-8)
+
+
+@given(w=pos_weights, data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_theorem1_beats_random_permutation(w, data):
+    """The Theorem-1 placement objective <= any sampled permutation's."""
+    w = np.asarray(w)
+    n = len(w)
+    k = data.draw(st.integers(min_value=1, max_value=n - 1))
+    tau = np.sort(
+        np.asarray(
+            data.draw(
+                st.lists(
+                    st.floats(min_value=0.0, max_value=10.0, allow_nan=False),
+                    min_size=n, max_size=n,
+                )
+            )
+        )
+    )
+    probs = activation_probs(w, k)
+    assign = theorem1_assignment(probs, tau)
+    rank_to_expert = np.empty(n, dtype=np.int64)
+    rank_to_expert[assign] = np.arange(n)
+    opt = layer_latency_closed_form(tau, w, rank_to_expert, k)
+    perm = np.asarray(data.draw(st.permutations(range(n))))
+    other = layer_latency_closed_form(tau, w, perm, k)
+    assert opt <= other + 1e-9
+
+
+@given(w=pos_weights, data=st.data())
+@settings(max_examples=30, deadline=None)
+def test_objective_bounds(w, data):
+    """tau_K <= tau_c(X) <= tau_I for any placement (slowest-rank support)."""
+    w = np.asarray(w)
+    n = len(w)
+    k = data.draw(st.integers(min_value=1, max_value=n))
+    tau = np.sort(np.linspace(0.1, 1.0, n))
+    perm = np.asarray(data.draw(st.permutations(range(n))))
+    val = layer_latency_closed_form(tau, w, perm, k)
+    assert tau[k - 1] - 1e-9 <= val <= tau[-1] + 1e-9
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_sampler_outputs_valid_subsets(data):
+    n = data.draw(st.integers(min_value=2, max_value=12))
+    k = data.draw(st.integers(min_value=1, max_value=n))
+    w = np.asarray(
+        data.draw(
+            st.lists(
+                st.floats(min_value=0.05, max_value=50.0, allow_nan=False),
+                min_size=n, max_size=n,
+            )
+        )
+    )
+    seed = data.draw(st.integers(min_value=0, max_value=2**31))
+    draws = sample_topk(w, k, np.random.default_rng(seed), 8)
+    assert draws.shape == (8, k)
+    assert draws.min() >= 0 and draws.max() < n
+    for row in draws:
+        assert len(set(row.tolist())) == k
+
+
+@given(data=st.data())
+@settings(max_examples=25, deadline=None)
+def test_device_placement_never_worse_than_identity(data):
+    """TPU transplant: Theorem-1 expert->device permutation cannot increase
+    the expected slowest-dispatch cost vs the identity layout."""
+    side = data.draw(st.sampled_from([2, 4]))
+    epd = data.draw(st.sampled_from([1, 2]))
+    torus = TorusSpec(shape=(side, side))
+    n_exp = torus.n_devices * epd
+    w = np.asarray(
+        data.draw(
+            st.lists(
+                st.floats(min_value=0.05, max_value=20.0, allow_nan=False),
+                min_size=n_exp, max_size=n_exp,
+            )
+        )
+    )
+    k = data.draw(st.integers(min_value=1, max_value=min(4, n_exp)))
+    plan = plan_expert_devices(w, k, torus)
+    base = identity_plan(n_exp, torus)
+    assert (
+        expected_dispatch_cost(plan, w, k)
+        <= expected_dispatch_cost(base, w, k) + 1e-12
+    )
+    # permutation validity
+    assert sorted(plan.expert_perm.tolist()) == list(range(n_exp))

@@ -1,0 +1,112 @@
+"""Loop-aware HLO walker: parser units + validation against XLA's own
+cost_analysis (no-multiplier mode) and depth-linearity (multiplier mode)."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import smoke_config
+from repro.launch import hlo_analysis as ha
+from repro.models import Parallel, init_params
+from repro.models.frontends import batch_specs
+from repro.launch.steps import make_train_step, opt_structs
+
+SAMPLE = """\
+HloModule test, is_scheduled=true
+
+%cond (arg: (s32[], f32[4,8])) -> pred[] {
+  %arg = (s32[], f32[4,8]) parameter(0)
+  %gte = s32[] get-tuple-element(%arg), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%gte, %c), direction=LT
+}
+
+%body (arg.1: (s32[], f32[4,8])) -> (s32[], f32[4,8]) {
+  %arg.1 = (s32[], f32[4,8]) parameter(0)
+  %gte.1 = s32[] get-tuple-element(%arg.1), index=0
+  %gte.2 = f32[4,8] get-tuple-element(%arg.1), index=1
+  %w = f32[8,8] constant({...})
+  %dot.1 = f32[4,8] dot(%gte.2, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[4,8] all-reduce(%dot.1), replica_groups=[2,4]<=[8], to_apply=%sum
+  %one = s32[] constant(1)
+  %next = s32[] add(%gte.1, %one)
+  ROOT %tup = (s32[], f32[4,8]) tuple(%next, %ar)
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[4,8]) -> f32[4,8] {
+  %x = f32[4,8] parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[4,8]) tuple(%zero, %x)
+  %loop = (s32[], f32[4,8]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[4,8] get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_parse_sample_structure():
+    comps, entry = ha.parse_hlo(SAMPLE)
+    assert entry == "main"
+    assert set(comps) == {"cond", "body", "sum", "main"}
+    body = comps["body"]
+    ops = [i.op for i in body.instructions]
+    assert "dot" in ops and "all-reduce" in ops
+    assert body.root is not None and body.root.op == "tuple"
+
+
+def test_multipliers_use_trip_count():
+    comps, entry = ha.parse_hlo(SAMPLE)
+    mult = ha.computation_multipliers(comps, entry)
+    assert mult["main"] == 1.0
+    assert mult["body"] == 7.0          # constant(7) in the condition
+
+
+def test_flops_and_collectives_multiplied():
+    cost = ha.analyze(SAMPLE, n_devices=8)
+    # dot: 2*4*8*8 = 512 flops per iteration x 7 trips
+    assert cost.flops == 7 * 512
+    # all-reduce f32[4,8]=128B, ring 2*(g-1)/g with g=4 -> 192B x 7
+    assert cost.collective_bytes == pytest.approx(7 * 2 * 128 * 3 / 4)
+    assert cost.collective_counts["all-reduce"] == 7
+    once = ha.analyze(SAMPLE, n_devices=8, apply_multipliers=False)
+    assert once.flops == 512
+
+
+def test_group_size_formats():
+    assert ha._group_size("replica_groups={{0,1,2,3}}", 16) == 4
+    assert ha._group_size("replica_groups=[8,2]<=[16]", 16) == 2
+    assert ha._group_size("no groups here", 16) == 16
+
+
+def _compile_train(n_layers: int):
+    cfg = dataclasses.replace(smoke_config("smollm-135m"), n_layers=n_layers)
+    p = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    o = opt_structs(p)
+    batch = batch_specs(cfg, 4, 32)
+    step = make_train_step(cfg, Parallel())
+    return jax.jit(step).lower(p, o, batch).compile()
+
+
+def test_walker_matches_xla_cost_analysis_without_multipliers():
+    comp = _compile_train(2)
+    xla = comp.cost_analysis()
+    mine = ha.analyze(comp.as_text(), 1, apply_multipliers=False)
+    # XLA counts elementwise flops too; dots dominate => within 15%
+    assert abs(mine.flops - xla["flops"]) / xla["flops"] < 0.15
+    assert abs(mine.bytes_accessed - xla["bytes accessed"]) \
+        / xla["bytes accessed"] < 0.30
+
+
+def test_walker_scales_with_depth_xla_does_not():
+    c2 = _compile_train(2)
+    c6 = _compile_train(6)
+    xla_ratio = c6.cost_analysis()["flops"] / c2.cost_analysis()["flops"]
+    m2 = ha.analyze(c2.as_text(), 1).flops
+    m6 = ha.analyze(c6.as_text(), 1).flops
+    assert xla_ratio < 1.3          # the undercount this module exists for
+    assert 2.0 < m6 / m2 < 3.0      # (base + 6u) / (base + 2u)
