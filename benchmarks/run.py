@@ -16,17 +16,21 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: table2 fig6 fig7 kernels placement "
-                         "multi_expert roofline")
+                    help="subset: engine table2 fig6 fig7 kernels placement "
+                         "multi_expert linkstate roofline")
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
 
-    from . import (bench_fig6, bench_fig7, bench_kernels, bench_linkstate,
-                   bench_multi_expert, bench_placement, bench_roofline,
-                   bench_table2)
+    from . import (bench_engine, bench_fig6, bench_fig7, bench_kernels,
+                   bench_linkstate, bench_multi_expert, bench_placement,
+                   bench_roofline, bench_table2)
 
     n_tok = 120 if args.fast else 400
     suite = {
+        "engine": lambda: bench_engine.run(
+            n_tokens=200 if args.fast else 1000,
+            n_plans=8 if args.fast else 16,
+            n_slots=40 if args.fast else None),
         "table2": lambda: bench_table2.run(
             n_tokens=n_tok, n_slots=60 if args.fast else None),
         "fig6": lambda: bench_fig6.run(n_tokens=150 if args.fast else 600),

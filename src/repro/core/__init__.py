@@ -7,38 +7,45 @@ and the TPU transplant (expert->device placement on an ICI torus).
 """
 from .activation import (ActivationModel, activation_probs,
                          activation_probs_jax, esp, esp_jax,
-                         esp_prefix_table, sample_topk, subset_pmf)
+                         esp_prefix_table, esp_prefix_table_jax, sample_topk,
+                         sample_topk_jax, subset_pmf)
 from .constellation import (EARTH_RADIUS_M, SPEED_OF_LIGHT, Constellation,
                             ConstellationConfig)
 from .device_placement import (DevicePlacementPlan, TorusSpec,
                                expected_dispatch_cost, identity_plan,
                                plan_expert_devices)
+from .engine import PlanBatch, evaluate_plans
 from .latency import (ComputeConfig, LinkConfig, TopologySample,
                       expected_path_latency, gateway_distance_table,
-                      sample_topology)
+                      sample_topology, source_distance_table)
 from .objective import (brute_force_optimal, layer_latency_closed_form,
                         layer_latency_monte_carlo)
-from .placement import (MultiExpertPlan, PlacementPlan, central_gateway,
-                        multi_expert_plan, rand_intra_cg_plan,
-                        rand_intra_plan, rand_place_plan, ring_subnets,
-                        spacemoe_plan, theorem1_assignment)
-from .simulator import SimResult, simulate_token_generation
+from .placement import (MultiExpertPlan, PlacementPlan, baseline_plans,
+                        central_gateway, multi_expert_plan,
+                        rand_intra_cg_plan, rand_intra_plan, rand_place_plan,
+                        rank_plans, ring_subnets, spacemoe_plan,
+                        subnet_routing_sets, theorem1_assignment)
+from .simulator import (SimResult, simulate_token_generation,
+                        simulate_token_generation_legacy)
 from .workload import MoEWorkload
 
 __all__ = [
     "ActivationModel", "activation_probs", "activation_probs_jax", "esp",
-    "esp_jax", "esp_prefix_table", "sample_topk", "subset_pmf",
+    "esp_jax", "esp_prefix_table", "esp_prefix_table_jax", "sample_topk",
+    "sample_topk_jax", "subset_pmf",
     "EARTH_RADIUS_M", "SPEED_OF_LIGHT", "Constellation", "ConstellationConfig",
     "DevicePlacementPlan", "TorusSpec", "expected_dispatch_cost",
     "identity_plan", "plan_expert_devices",
+    "PlanBatch", "evaluate_plans",
     "ComputeConfig", "LinkConfig", "TopologySample", "expected_path_latency",
-    "gateway_distance_table", "sample_topology",
+    "gateway_distance_table", "sample_topology", "source_distance_table",
     "brute_force_optimal", "layer_latency_closed_form",
     "layer_latency_monte_carlo",
-    "MultiExpertPlan", "PlacementPlan", "central_gateway",
+    "MultiExpertPlan", "PlacementPlan", "baseline_plans", "central_gateway",
     "multi_expert_plan", "rand_intra_cg_plan", "rand_intra_plan",
-    "rand_place_plan", "ring_subnets", "spacemoe_plan",
-    "theorem1_assignment",
+    "rand_place_plan", "rank_plans", "ring_subnets", "spacemoe_plan",
+    "subnet_routing_sets", "theorem1_assignment",
     "SimResult", "simulate_token_generation",
+    "simulate_token_generation_legacy",
     "MoEWorkload",
 ]

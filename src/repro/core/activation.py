@@ -163,6 +163,62 @@ def activation_probs_jax(weights: jnp.ndarray, k: int) -> jnp.ndarray:
     return 1.0 - loo_k / e_full[k]
 
 
+def esp_prefix_table_jax(weights: jnp.ndarray, k_max: int) -> jnp.ndarray:
+    """E[i, k] = e_k(w_1..w_i) of mean-scaled weights, shape (I+1, K+1).
+
+    The scale cancels in the sampling ratios, so (unlike the numpy
+    :func:`esp_prefix_table`) the scaling is *not* undone here.
+    """
+    w = jnp.asarray(weights)
+    ws = w / jnp.mean(w)
+
+    def step(row, wi):
+        row = row.at[1:].add(wi * row[:-1])
+        return row, row
+
+    row0 = jnp.zeros(k_max + 1, dtype=w.dtype).at[0].set(1.0)
+    _, rows = jax.lax.scan(step, row0, ws)
+    return jnp.concatenate([row0[None], rows], axis=0)
+
+
+def sample_topk_jax(weights: jnp.ndarray, k: int, key,
+                    n_draws: int) -> jnp.ndarray:
+    """Exact conditional-Poisson samples of Eq. 12 on-device, (n_draws, K).
+
+    Same sequential ESP-ratio method as :func:`sample_topk`, with the item
+    scan as ``lax.scan`` and the per-draw state vectorized — composes into
+    jit'd programs (the batched plan-evaluation engine's fast path).
+    """
+    w = jnp.asarray(weights)
+    n = w.shape[0]
+    if not (0 < k <= n):
+        raise ValueError(f"need 0 < K <= I, got K={k}, I={n}")
+    table = esp_prefix_table_jax(w, k)
+    ws = w / jnp.mean(w)
+    u = jax.random.uniform(key, (n, n_draws), dtype=w.dtype)
+
+    def step(carry, xs):
+        remaining, out = carry
+        i, ui = xs
+        num = ws[i - 1] * table[i - 1, jnp.maximum(remaining - 1, 0)]
+        den = table[i, remaining]
+        p = jnp.where(remaining > 0, num / den, 0.0)
+        take = ui < p
+        # out[d, remaining[d]-1] = i-1 where taken
+        write = take[:, None] & (
+            jnp.arange(k, dtype=remaining.dtype)[None] == (remaining - 1)[:, None]
+        )
+        out = jnp.where(write, i - 1, out)
+        remaining = remaining - take.astype(remaining.dtype)
+        return (remaining, out), None
+
+    carry0 = (jnp.full((n_draws,), k, dtype=jnp.int32),
+              jnp.zeros((n_draws, k), dtype=jnp.int32))
+    items = jnp.arange(n, 0, -1, dtype=jnp.int32)
+    (_, out), _ = jax.lax.scan(step, carry0, (items, u))
+    return out
+
+
 # --------------------------------------------------------------------- #
 # Per-layer activation statistics container
 # --------------------------------------------------------------------- #

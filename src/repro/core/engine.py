@@ -1,0 +1,357 @@
+"""Batched, jit-compiled plan-evaluation engine.
+
+Evaluates P placement plans x N_T topology slots x n tokens in one
+vectorized pass: ``vmap`` over plans, a fused ``lax.scan`` over layers
+(replacing the legacy per-layer Python loop), with the distance-table
+gather, conditional-Poisson top-K sampling, the Eq. 43 multi-expert
+contention term and the route-staleness penalty all expressed as array
+ops.  The per-slot Dijkstra distance table is the only host-side
+precompute; a :class:`PlanBatch` dedupes gateway nodes across the whole
+sweep so it is built once per sweep, not once per plan.
+
+This is the Monte-Carlo core behind every paper experiment (Figs. 6-7,
+Table 2) and the substrate for continuous re-placement: evaluating many
+candidate plans per topology slot is exactly the ``evaluate_plans`` sweep
+call.  ``repro.core.simulator`` keeps the legacy NumPy implementation as
+a golden reference and a thin wrapper with the historical API.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .activation import ActivationModel, sample_topk_jax
+from .latency import (ComputeConfig, TopologySample, node_masks_from_sets,
+                      source_distance_table)
+from .placement import MultiExpertPlan, PlacementPlan
+from .workload import MoEWorkload
+
+# A stale route whose latency moved by more than one hop (> ~2 ms) — or
+# that broke entirely — forces discovery + re-route (see simulator docs).
+HOP_SCALE_S = 2e-3
+
+
+@dataclasses.dataclass
+class SimResult:
+    token_latency_s: np.ndarray     # (n_tokens,) — NaN where undeliverable
+    layer_latency_s: np.ndarray     # (n_tokens, L)
+    plan_name: str
+
+    @property
+    def delivered(self) -> np.ndarray:
+        return np.isfinite(self.token_latency_s)
+
+    @property
+    def mean_s(self) -> float:
+        return float(np.nanmean(self.token_latency_s))
+
+    @property
+    def p99_s(self) -> float:
+        return float(np.nanpercentile(self.token_latency_s, 99))
+
+    @property
+    def drop_rate(self) -> float:
+        return float(1.0 - self.delivered.mean())
+
+    def layer_stats(self) -> tuple[np.ndarray, np.ndarray]:
+        """(mean, std) per layer across tokens (Fig. 6a)."""
+        return (np.nanmean(self.layer_latency_s, axis=0),
+                np.nanstd(self.layer_latency_s, axis=0))
+
+
+# --------------------------------------------------------------------- #
+# Plan batching: stack P plans onto one deduped distance table
+# --------------------------------------------------------------------- #
+
+
+def _node_key(node_sets: list | None) -> tuple | None:
+    """Canonical hashable form of a node_sets argument (for batch reuse
+    checks)."""
+    if node_sets is None:
+        return None
+    return tuple(tuple(sorted(int(n) for n in np.asarray(nodes).ravel()))
+                 for nodes in node_sets)
+
+
+def _topo_key(topo: TopologySample) -> tuple:
+    """Cheap content fingerprint of a topology realization.  A reused
+    PlanBatch carries stale Dijkstra rows if the topology was resampled;
+    worse, out-of-range slot indices would be silently clamped by the
+    jit'd gather instead of raising like NumPy would."""
+    return (topo.n_slots, topo.n_sats,
+            hash(topo.edge_mask.tobytes()),
+            hash(topo.edge_latency.tobytes()))
+
+
+@dataclasses.dataclass
+class PlanBatch:
+    """P plans stacked for one engine pass over a shared distance table.
+
+    ``dist`` holds rows for the *unique* (gateway, routing-mask) pairs of
+    the sweep; ``g_idx[p, l]`` maps plan p / layer l to its row.  Build
+    once with :meth:`from_plans` and reuse across ``evaluate_plans`` calls
+    on the same topology.
+    """
+
+    dist: np.ndarray          # (N_T, G, V) shared shortest-path table
+    g_idx: np.ndarray         # (P, L) row of dist for plan p, layer l
+    gateways: np.ndarray      # (P, L) raw gateway node indices
+    expert_sats: np.ndarray   # (P, L, I) satellite hosting expert i
+    eta: np.ndarray           # (P,) contention efficiency (1.0 = single-expert)
+    names: tuple[str, ...]
+    node_key: tuple | None    # canonicalized node_sets the table was built with
+    topo_key: tuple           # fingerprint of the topology realization
+    _device: tuple | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def n_plans(self) -> int:
+        return self.g_idx.shape[0]
+
+    @property
+    def n_layers(self) -> int:
+        return self.g_idx.shape[1]
+
+    def device_arrays(self) -> tuple:
+        """(dist, g_idx, expert_sats, eta) as device arrays, cached so the
+        O(N_T*G*V) host-to-device transfer happens once per batch — the
+        hot re-placement loop then ships only slots/draws per call."""
+        if self._device is None:
+            self._device = (
+                jnp.asarray(self.dist, dtype=jnp.float32),
+                jnp.asarray(self.g_idx, dtype=jnp.int32),
+                jnp.asarray(self.expert_sats, dtype=jnp.int32),
+                jnp.asarray(self.eta, dtype=jnp.float32),
+            )
+        return self._device
+
+    def matches(self, plans: list, topo: TopologySample,
+                node_sets: list | None, eta: float) -> bool:
+        """True iff this batch was built from exactly these plans, this
+        topology realization and these settings (names are not unique, so
+        compare the actual placements)."""
+        gws = np.stack([np.asarray(p.gateways) for p in plans])
+        sats = np.stack([np.asarray(p.expert_sats) for p in plans])
+        etas = np.array(
+            [eta if isinstance(p, MultiExpertPlan) else 1.0 for p in plans])
+        return (gws.shape == self.gateways.shape
+                and np.array_equal(gws, self.gateways)
+                and sats.shape == self.expert_sats.shape
+                and np.array_equal(sats, self.expert_sats)
+                and np.array_equal(etas, self.eta)
+                and _node_key(node_sets) == self.node_key
+                and _topo_key(topo) == self.topo_key)
+
+    @classmethod
+    def from_plans(
+        cls,
+        plans: list[PlacementPlan | MultiExpertPlan],
+        topo: TopologySample,
+        node_sets: list | None = None,
+        eta: float = 1.0,
+    ) -> "PlanBatch":
+        """Stack plans and build the deduped Dijkstra table.
+
+        ``eta`` is the Eq. 43 compute-sharing efficiency, applied to
+        :class:`MultiExpertPlan` entries only (single-expert plans always
+        run at q = 1, matching the legacy simulator).
+        """
+        plans = list(plans)
+        if not plans:
+            raise ValueError("empty plan sweep")
+        n_layers = len(plans[0].gateways)
+        masks: list | None = None
+        if node_sets is not None:
+            masks = node_masks_from_sets(node_sets, topo.n_sats)
+
+        # Dedupe (gateway node, per-layer mask) -> distance-table row.
+        row_of: dict[tuple, int] = {}
+        sources: list[int] = []
+        row_masks: list = []
+        g_idx = np.empty((len(plans), n_layers), dtype=np.int64)
+        for pi, plan in enumerate(plans):
+            if len(plan.gateways) != n_layers:
+                raise ValueError("all plans in a sweep must share n_layers")
+            for layer, g in enumerate(np.asarray(plan.gateways)):
+                key = (int(g), layer if masks is not None else -1)
+                if key not in row_of:
+                    row_of[key] = len(sources)
+                    sources.append(int(g))
+                    row_masks.append(masks[layer] if masks is not None else None)
+                g_idx[pi, layer] = row_of[key]
+        dist = source_distance_table(
+            topo, np.asarray(sources, dtype=np.int64),
+            row_masks if masks is not None else None,
+        )
+        gateways = np.stack([np.asarray(p.gateways) for p in plans])
+        expert_sats = np.stack([np.asarray(p.expert_sats) for p in plans])
+        etas = np.array(
+            [eta if isinstance(p, MultiExpertPlan) else 1.0 for p in plans],
+            dtype=np.float64,
+        )
+        names = tuple(getattr(p, "name", "plan") for p in plans)
+        return cls(dist=dist, g_idx=g_idx, gateways=gateways,
+                   expert_sats=expert_sats, eta=etas, names=names,
+                   node_key=_node_key(node_sets), topo_key=_topo_key(topo))
+
+
+# --------------------------------------------------------------------- #
+# The jit kernel
+# --------------------------------------------------------------------- #
+
+
+def _hop(dist, slots, stale_slots, g, sats, penalty, stale: bool):
+    """Gateway<->expert hop latencies, (T, K), with the staleness penalty.
+
+    With ``stale`` the path was chosen on the topology ``stale_slots`` ago:
+    smooth drift is free, but a topology change (detour > ~one hop, or a
+    broken route) pays the current shortest path plus ``penalty``.
+    """
+    cur = dist[slots[:, None], g, sats]
+    if not stale:
+        return cur
+    old = dist[stale_slots[:, None], g, sats]
+    broken = (jnp.abs(old - cur) > HOP_SCALE_S) | ~jnp.isfinite(old)
+    return cur + penalty * broken
+
+
+@functools.partial(jax.jit, static_argnames=("stale",))
+def _evaluate_batch(dist, g_idx, expert_sats, slots, stale_slots, draws,
+                    t_gateway, t_expert, t_head, eta, penalty,
+                    stale: bool):
+    """(token_latency (P, T), layer_latency (P, T, L)) for a PlanBatch.
+
+    dist: (N_T, G, V); g_idx: (P, L); expert_sats: (P, L, I);
+    slots/stale_slots: (T,); draws: (L, T, K); eta: (P,).
+    """
+
+    def one_plan(g_row, sats_li, eta_p):
+        g_next = jnp.roll(g_row, -1)      # ring wrap for the last layer
+
+        def layer_step(_, xs):
+            draws_l, g_l, g_n, sats_i = xs
+            sats = sats_i[draws_l]                                # (T, K)
+            d_out = _hop(dist, slots, stale_slots, g_l, sats, penalty, stale)
+            d_in = _hop(dist, slots, stale_slots, g_n, sats, penalty, stale)
+            # Eq. 43 contention: q = activated experts sharing the satellite.
+            q = (sats[:, :, None] == sats[:, None, :]).sum(axis=2)
+            t_exp = (q.astype(dist.dtype) / eta_p) * t_expert
+            lay = t_gateway + (d_out + t_exp + d_in).max(axis=1)
+            return None, lay
+
+        _, lat = jax.lax.scan(layer_step, None,
+                              (draws, g_row, g_next, sats_li))
+        return lat.T                                              # (T, L)
+
+    layer_lat = jax.vmap(one_plan)(g_idx, expert_sats, eta)       # (P, T, L)
+    # Unreachable satellite in that slot => undeliverable token: count as a
+    # drop (NaN), never as infinite latency.
+    layer_lat = jnp.where(jnp.isfinite(layer_lat), layer_lat, jnp.nan)
+    token_lat = layer_lat.sum(axis=2) + t_head
+    return token_lat, layer_lat
+
+
+@functools.partial(jax.jit, static_argnames=("n_tokens", "top_k"))
+def _sample_draws_jax(weights, key, n_tokens: int, top_k: int):
+    """(L, T, K) conditional-Poisson draws, one key-split per layer."""
+    keys = jax.random.split(key, weights.shape[0])
+    return jax.vmap(
+        lambda w, k: sample_topk_jax(w, top_k, k, n_tokens)
+    )(weights, keys)
+
+
+# --------------------------------------------------------------------- #
+# Public sweep API
+# --------------------------------------------------------------------- #
+
+
+def evaluate_plans(
+    plans: list[PlacementPlan | MultiExpertPlan],
+    topo: TopologySample,
+    activation: ActivationModel,
+    workload: MoEWorkload,
+    compute: ComputeConfig,
+    rng: np.random.Generator,
+    n_tokens: int = 1000,
+    ctx_len: int = 1024,
+    include_lm_head: bool = True,
+    eta: float = 1.0,
+    node_sets: list | None = None,
+    route_staleness: int = 0,
+    reroute_penalty_s: float = 0.0,
+    batch: PlanBatch | None = None,
+    sample_backend: str = "host",
+) -> list[SimResult]:
+    """Monte-Carlo E2E latency for a sweep of P plans, one engine pass.
+
+    All plans share the same token draws (common random numbers — the
+    right estimator for comparing plans) and slot samples.  With a single
+    plan and ``sample_backend="host"`` the random stream matches the
+    legacy ``simulate_token_generation`` exactly, so results agree to
+    float tolerance (the parity the tier-1 tests pin down).
+
+    ``sample_backend="jax"`` moves conditional-Poisson sampling on-device
+    (``sample_topk_jax``); draws then come from a jax PRNG key derived
+    from ``rng`` instead of the legacy stream.
+
+    Pass a prebuilt ``batch`` (see :meth:`PlanBatch.from_plans`) to reuse
+    the Dijkstra table and its device copies across calls; the call raises
+    if ``plans``/``node_sets``/``eta`` differ from what the batch was
+    built with.
+    """
+    plans = list(plans)
+    if batch is None:
+        batch = PlanBatch.from_plans(plans, topo, node_sets=node_sets, eta=eta)
+    if batch.n_plans != len(plans):
+        raise ValueError("batch/plans length mismatch")
+    if not batch.matches(plans, topo, node_sets, eta):
+        raise ValueError(
+            "prebuilt batch was built from a different sweep (plan "
+            "placements, topology realization, node_sets or eta disagree) "
+            "— rebuild it with PlanBatch.from_plans")
+    n_layers = activation.n_layers
+    if batch.n_layers != n_layers:
+        raise ValueError("plan sweep and activation model disagree on n_layers")
+
+    slots = rng.integers(0, topo.n_slots, size=n_tokens)
+    if sample_backend == "host":
+        # Same call order as the legacy simulator: slots, then layer draws.
+        draws = np.stack(
+            [activation.sample(layer, rng, n_tokens)
+             for layer in range(n_layers)]
+        )
+    elif sample_backend == "jax":
+        key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
+        draws = _sample_draws_jax(
+            jnp.asarray(activation.weights, dtype=jnp.float32), key,
+            n_tokens, activation.top_k,
+        )
+    else:
+        raise ValueError(f"unknown sample_backend {sample_backend!r}")
+    stale_slots = (slots - route_staleness) % topo.n_slots
+
+    t_gateway = compute.latency_s(workload.gateway_flops(ctx_len))
+    t_expert = compute.latency_s(workload.expert_flops)
+    t_head = compute.latency_s(workload.lm_head_flops) if include_lm_head else 0.0
+
+    dist_d, g_idx_d, sats_d, eta_d = batch.device_arrays()
+    token_lat, layer_lat = _evaluate_batch(
+        dist_d, g_idx_d, sats_d,
+        jnp.asarray(slots, dtype=jnp.int32),
+        jnp.asarray(stale_slots, dtype=jnp.int32),
+        jnp.asarray(draws, dtype=jnp.int32),
+        t_gateway, t_expert, t_head, eta_d,
+        reroute_penalty_s,
+        stale=route_staleness != 0,
+    )
+    token_lat = np.asarray(token_lat, dtype=np.float64)
+    layer_lat = np.asarray(layer_lat, dtype=np.float64)
+    return [
+        SimResult(token_latency_s=token_lat[p], layer_latency_s=layer_lat[p],
+                  plan_name=batch.names[p])
+        for p in range(batch.n_plans)
+    ]

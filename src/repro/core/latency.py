@@ -124,6 +124,52 @@ def sample_topology(
     return TopologySample(edges=edges, edge_mask=masks, edge_latency=lats, n_sats=cfg.n_sats)
 
 
+def node_masks_from_sets(node_sets: list, n_sats: int) -> list[np.ndarray]:
+    """Per-layer node-index lists -> (V,) bool routing masks."""
+    masks = []
+    for nodes in node_sets:
+        m = np.zeros(n_sats, dtype=bool)
+        m[np.asarray(nodes)] = True
+        masks.append(m)
+    return masks
+
+
+def source_distance_table(
+    topo: TopologySample,
+    sources: np.ndarray,
+    node_masks: list | None = None,
+) -> np.ndarray:
+    """D[n, s, v]: shortest-path latency from arbitrary source nodes.
+
+    Shape (N_T, S, V).  This is the host-side precompute feeding the
+    batched plan-evaluation engine (:mod:`repro.core.engine`): the engine
+    dedupes gateway nodes across a whole plan sweep into one ``sources``
+    vector, so Dijkstra runs once per (slot, unique gateway) instead of
+    once per (slot, plan, layer).
+
+    ``node_masks`` (optional, one (V,) bool mask or None per source)
+    restricts routing per source row; sources sharing a mask are batched
+    into a single Dijkstra call per slot.
+    """
+    sources = np.asarray(sources)
+    out = np.empty((topo.n_slots, len(sources), topo.n_sats), dtype=np.float64)
+    if node_masks is None:
+        for n in range(topo.n_slots):
+            out[n] = topo.distances_from(n, sources)
+        return out
+    # Group source rows by identical mask so each (slot, mask) pair costs
+    # one batched Dijkstra.
+    groups: dict[bytes, list[int]] = {}
+    for si, mask in enumerate(node_masks):
+        key = b"" if mask is None else np.asarray(mask, dtype=bool).tobytes()
+        groups.setdefault(key, []).append(si)
+    for rows in groups.values():
+        mask = node_masks[rows[0]]
+        for n in range(topo.n_slots):
+            out[n, rows] = topo.distances_from(n, sources[rows], mask)
+    return out
+
+
 def gateway_distance_table(
     topo: TopologySample, gateways: np.ndarray,
     node_sets: list | None = None,
@@ -139,20 +185,10 @@ def gateway_distance_table(
     routing to those nodes — the paper-style intra-subnet-only mode.
     """
     gateways = np.asarray(gateways)
-    out = np.empty((topo.n_slots, len(gateways), topo.n_sats), dtype=np.float64)
     if node_sets is None:
-        for n in range(topo.n_slots):
-            out[n] = topo.distances_from(n, gateways)
-        return out
-    masks = []
-    for nodes in node_sets:
-        m = np.zeros(topo.n_sats, dtype=bool)
-        m[np.asarray(nodes)] = True
-        masks.append(m)
-    for n in range(topo.n_slots):
-        for li, g in enumerate(gateways):
-            out[n, li] = topo.distances_from(n, np.array([g]), masks[li])[0]
-    return out
+        return source_distance_table(topo, gateways)
+    masks = node_masks_from_sets(node_sets, topo.n_sats)
+    return source_distance_table(topo, gateways, masks)
 
 
 def expected_path_latency(

@@ -287,3 +287,63 @@ def multi_expert_plan(
         gateways=gateways, expert_sats=expert_sats,
         experts_per_sat=experts_per_sat, name=f"multi-expert/{mode}",
     )
+
+
+# --------------------------------------------------------------------- #
+# Plan sweeps over the batched engine
+# --------------------------------------------------------------------- #
+
+
+def baseline_plans(
+    constellation: Constellation,
+    topo: TopologySample,
+    activation: ActivationModel,
+    rng: np.random.Generator,
+    n_random_draws: int = 3,
+    workload: MoEWorkload | None = None,
+    compute: ComputeConfig | None = None,
+    ctx_len: int = 1024,
+) -> list[PlacementPlan]:
+    """The Sec. VII-A3 candidate set as one sweep list: SpaceMoE plus
+    ``n_random_draws`` draws of each random baseline, numbered so every
+    plan in the sweep has a distinct name."""
+    cfg = constellation.cfg
+    n_layers, n_experts = activation.n_layers, activation.n_experts
+    plans: list[PlacementPlan] = [
+        spacemoe_plan(constellation, topo, activation, workload, compute,
+                      ctx_len=ctx_len)
+    ]
+    for maker in (rand_place_plan, rand_intra_plan, rand_intra_cg_plan):
+        for draw in range(n_random_draws):
+            p = maker(cfg, n_layers, n_experts, rng)
+            p.name = f"{p.name}#{draw}"
+            plans.append(p)
+    return plans
+
+
+def rank_plans(
+    plans: list,
+    topo: TopologySample,
+    activation: ActivationModel,
+    workload: MoEWorkload,
+    compute: ComputeConfig,
+    rng: np.random.Generator,
+    n_tokens: int = 500,
+    **kwargs,
+) -> list[tuple]:
+    """Evaluate a candidate-plan sweep in one batched engine pass and
+    return (plan, SimResult) pairs ordered best-first by (drop_rate,
+    mean latency): ``mean_s`` excludes undeliverable tokens, so ranking
+    on it alone would reward plans that drop their worst tokens —
+    delivery comes first, speed second.
+
+    Common random numbers across plans (see ``engine.evaluate_plans``)
+    make this the low-variance comparison the continuous-re-placement
+    loop needs at every topology slot.
+    """
+    from .engine import evaluate_plans  # deferred: engine imports this module
+    results = evaluate_plans(plans, topo, activation, workload, compute, rng,
+                             n_tokens=n_tokens, **kwargs)
+    order = sorted(range(len(results)),
+                   key=lambda i: (results[i].drop_rate, results[i].mean_s))
+    return [(plans[i], results[i]) for i in order]

@@ -8,46 +8,27 @@ then for each layer l
 
 with S_hat_l ~ conditional-Poisson top-K (Eq. 12), and the ring wrap for
 the last layer (Eq. 22).  Token latency = sum_l tau_l (+ lm head on the
-last gateway).  Fully vectorized over tokens.
+last gateway).
+
+``simulate_token_generation`` is a thin wrapper over the batched
+jit-compiled engine (:mod:`repro.core.engine`), preserving the historical
+single-plan API and random stream.  The original NumPy per-layer loop is
+kept as ``simulate_token_generation_legacy`` — the golden reference the
+engine parity tests (and the ``bench_engine`` speedup numbers) compare
+against.
 """
 from __future__ import annotations
-
-import dataclasses
 
 import numpy as np
 
 from .activation import ActivationModel
+from .engine import HOP_SCALE_S, SimResult, evaluate_plans
 from .latency import ComputeConfig, TopologySample, gateway_distance_table
 from .placement import MultiExpertPlan, PlacementPlan
 from .workload import MoEWorkload
 
-
-@dataclasses.dataclass
-class SimResult:
-    token_latency_s: np.ndarray     # (n_tokens,) — NaN where undeliverable
-    layer_latency_s: np.ndarray     # (n_tokens, L)
-    plan_name: str
-
-    @property
-    def delivered(self) -> np.ndarray:
-        return np.isfinite(self.token_latency_s)
-
-    @property
-    def mean_s(self) -> float:
-        return float(np.nanmean(self.token_latency_s))
-
-    @property
-    def p99_s(self) -> float:
-        return float(np.nanpercentile(self.token_latency_s, 99))
-
-    @property
-    def drop_rate(self) -> float:
-        return float(1.0 - self.delivered.mean())
-
-    def layer_stats(self) -> tuple[np.ndarray, np.ndarray]:
-        """(mean, std) per layer across tokens (Fig. 6a)."""
-        return (np.nanmean(self.layer_latency_s, axis=0),
-                np.nanstd(self.layer_latency_s, axis=0))
+__all__ = ["SimResult", "simulate_token_generation",
+           "simulate_token_generation_legacy"]
 
 
 def simulate_token_generation(
@@ -64,6 +45,7 @@ def simulate_token_generation(
     node_sets: list | None = None,
     route_staleness: int = 0,
     reroute_penalty_s: float = 0.0,
+    backend: str = "engine",
 ) -> SimResult:
     """Monte-Carlo E2E latency under a placement plan.
 
@@ -78,9 +60,46 @@ def simulate_token_generation(
     is broken or slower, the token pays the current shortest path plus
     ``reroute_penalty_s`` (discovery/handshake).  s = 0 is the
     link-state-aware ideal the rest of the paper assumes.
+
+    ``backend="engine"`` (default) runs the jit-compiled batched engine
+    with P=1; ``backend="numpy"`` runs the legacy float64 reference.
+    Both consume the same random stream from ``rng``.
     """
-    n_layers, n_experts = activation.n_layers, activation.n_experts
-    k = activation.top_k
+    if backend == "numpy":
+        return simulate_token_generation_legacy(
+            plan, topo, activation, workload, compute, rng,
+            n_tokens=n_tokens, ctx_len=ctx_len,
+            include_lm_head=include_lm_head, eta=eta, node_sets=node_sets,
+            route_staleness=route_staleness,
+            reroute_penalty_s=reroute_penalty_s,
+        )
+    if backend != "engine":
+        raise ValueError(f"unknown backend {backend!r}")
+    return evaluate_plans(
+        [plan], topo, activation, workload, compute, rng,
+        n_tokens=n_tokens, ctx_len=ctx_len,
+        include_lm_head=include_lm_head, eta=eta, node_sets=node_sets,
+        route_staleness=route_staleness, reroute_penalty_s=reroute_penalty_s,
+    )[0]
+
+
+def simulate_token_generation_legacy(
+    plan: PlacementPlan | MultiExpertPlan,
+    topo: TopologySample,
+    activation: ActivationModel,
+    workload: MoEWorkload,
+    compute: ComputeConfig,
+    rng: np.random.Generator,
+    n_tokens: int = 1000,
+    ctx_len: int = 1024,
+    include_lm_head: bool = True,
+    eta: float = 1.0,
+    node_sets: list | None = None,
+    route_staleness: int = 0,
+    reroute_penalty_s: float = 0.0,
+) -> SimResult:
+    """Reference NumPy implementation (one plan, Python loop over layers)."""
+    n_layers = activation.n_layers
     dist = gateway_distance_table(topo, plan.gateways, node_sets)  # (N_T,L,V)
 
     t_gateway = compute.latency_s(workload.gateway_flops(ctx_len))
@@ -102,8 +121,7 @@ def simulate_token_generation(
         # broke entirely — forces discovery + re-route on the current
         # graph: latency = current shortest path + penalty.
         stale = np.take_along_axis(dist[stale_slots, layer_idx], sats, axis=1)
-        hop_scale = 2e-3
-        broken = (np.abs(stale - cur) > hop_scale) | ~np.isfinite(stale)
+        broken = (np.abs(stale - cur) > HOP_SCALE_S) | ~np.isfinite(stale)
         return cur + reroute_penalty_s * broken
 
     layer_lat = np.empty((n_tokens, n_layers), dtype=np.float64)

@@ -31,6 +31,7 @@ import traceback
 import jax
 from jax.sharding import NamedSharding
 
+from repro.compat import cost_analysis
 from repro.configs import ASSIGNED, REGISTRY, SHAPES, get_config, shape_applies
 from repro.distributed.sharding import ShardingRules
 from repro.launch import hlo_analysis
@@ -57,9 +58,8 @@ def _mem_dict(mem) -> dict:
     return {f: int(getattr(mem, f, -1)) for f in fields}
 
 
-def _cost_dict(cost) -> dict:
-    if isinstance(cost, (list, tuple)):
-        cost = cost[0]
+def _cost_dict(compiled) -> dict:
+    cost = cost_analysis(compiled)
     return {k: float(v) for k, v in cost.items()
             if isinstance(v, (int, float)) and not k.startswith("utilization")}
 
@@ -175,7 +175,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
-        cost = _cost_dict(compiled.cost_analysis())
+        cost = _cost_dict(compiled)
         mem = _mem_dict(compiled.memory_analysis())
         hlo = compiled.as_text()
         # loop-aware walk: multiplies scan-body costs by trip counts, which

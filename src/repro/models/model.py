@@ -19,7 +19,6 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 
 from . import attention as attn
 from . import moe as moe_mod
@@ -177,12 +176,11 @@ def _apply_moe(cfg, bp_ffn, x, par: Parallel, cdt):
                                axis_name=par.model_axis, compute_dtype=cdt)
     else:
         raise ValueError(mode)
-    sharded = shard_map(
+    sharded = moe_mod.sharded_moe(
         lambda p, xx: fn(p, x_local=xx),
         mesh=mesh,
         in_specs=(in_params_spec, x_spec),
         out_specs=(x_spec, aux_spec),
-        check_vma=False,
     )
     return sharded(bp_ffn, x)
 

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import axis_size, shard_map
 from .config import ModelConfig
 from .layers import normal_init, out_proj_init
 
@@ -259,6 +260,17 @@ def moe_apply_local(cfg: ModelConfig, params: dict, x: jnp.ndarray,
 # --------------------------------------------------------------------- #
 
 
+def sharded_moe(fn, mesh, in_specs, out_specs):
+    """Wrap an EP body (``moe_apply_ep`` / ``moe_apply_ep_replicated``
+    partial) in ``shard_map`` via the version-compat shim.
+
+    Replication checking is disabled: the aux outputs are per-shard sums
+    the caller combines, which the checker would reject as unreplicated.
+    """
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_vma=False)
+
+
 def moe_apply_ep(cfg: ModelConfig, params: dict, x_local: jnp.ndarray,
                  axis_name: str, compute_dtype) -> tuple[jnp.ndarray, dict]:
     """EP MoE body. ``x_local``: this shard's (B_loc, S_loc, d) slice; the
@@ -267,7 +279,7 @@ def moe_apply_ep(cfg: ModelConfig, params: dict, x_local: jnp.ndarray,
     Pipeline: route -> bucket by *global* expert slot -> all_to_all (split
     by owner device) -> local expert FFN -> reverse all_to_all -> combine.
     """
-    n_dev = jax.lax.axis_size(axis_name)
+    n_dev = axis_size(axis_name)
     b, s, d = x_local.shape
     t = b * s
     loc = params["w_gate"].shape[0]          # local buckets (experts/slots)
@@ -313,7 +325,7 @@ def moe_apply_ep_replicated(cfg: ModelConfig, params: dict,
     single psum combines.  Communication = one all-reduce of (T, d) —
     no all-to-all, which is the right trade at S=1.
     """
-    n_dev = jax.lax.axis_size(axis_name)
+    n_dev = axis_size(axis_name)
     my = jax.lax.axis_index(axis_name)
     b, s, d = x_local.shape
     t = b * s

@@ -1,7 +1,10 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import (TorusSpec, activation_probs, esp,
                         expected_dispatch_cost, identity_plan,

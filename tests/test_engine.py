@@ -1,0 +1,283 @@
+"""Engine tests: legacy-vs-jit parity on fixed seeds, batched sweeps,
+multi-expert contention, route-staleness penalties, drop accounting for
+unreachable satellites, and the on-device conditional-Poisson sampler."""
+import numpy as np
+import pytest
+
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        PlanBatch, activation_probs, baseline_plans,
+                        evaluate_plans, multi_expert_plan, rand_intra_cg_plan,
+                        rand_intra_plan, rand_place_plan, rank_plans,
+                        sample_topk_jax, sample_topology,
+                        simulate_token_generation,
+                        simulate_token_generation_legacy, spacemoe_plan,
+                        subnet_routing_sets)
+
+CFG = ConstellationConfig.scaled(8, 12, n_slots=10)
+WL = MoEWorkload.llama_moe_3p5b()
+COMP = ComputeConfig()
+
+
+def _world(seed=0, n_layers=4, n_experts=4, top_k=2):
+    con = Constellation(CFG)
+    topo = sample_topology(con, LinkConfig(), np.random.default_rng(seed))
+    activ = ActivationModel.zipf(n_layers, n_experts, top_k, seed=1)
+    return con, topo, activ
+
+
+def _parity(r_ref, r_eng, rtol=1e-5):
+    """Same drops, same latencies to float32 tolerance, same stats."""
+    np.testing.assert_array_equal(r_ref.delivered, r_eng.delivered)
+    np.testing.assert_allclose(r_eng.token_latency_s, r_ref.token_latency_s,
+                               rtol=rtol)
+    np.testing.assert_allclose(r_eng.layer_latency_s, r_ref.layer_latency_s,
+                               rtol=rtol)
+    assert abs(r_eng.mean_s - r_ref.mean_s) / r_ref.mean_s < rtol
+    assert abs(r_eng.p99_s - r_ref.p99_s) / r_ref.p99_s < rtol
+    assert r_eng.drop_rate == r_ref.drop_rate
+
+
+# --------------------------------------------------------------------- #
+# Golden-value parity (fixed seeds, identical random streams)
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("maker_seed", [2, 3])
+def test_engine_matches_legacy_all_plan_kinds(maker_seed):
+    con, topo, activ = _world()
+    plans = [
+        spacemoe_plan(con, topo, activ),
+        rand_place_plan(CFG, 4, 4, np.random.default_rng(maker_seed)),
+        rand_intra_plan(CFG, 4, 4, np.random.default_rng(maker_seed)),
+        rand_intra_cg_plan(CFG, 4, 4, np.random.default_rng(maker_seed)),
+    ]
+    for plan in plans:
+        ref = simulate_token_generation_legacy(
+            plan, topo, activ, WL, COMP, np.random.default_rng(5), 300)
+        eng = simulate_token_generation(
+            plan, topo, activ, WL, COMP, np.random.default_rng(5), 300)
+        assert eng.plan_name == ref.plan_name
+        _parity(ref, eng)
+
+
+def test_wrapper_backend_dispatch():
+    con, topo, activ = _world()
+    plan = spacemoe_plan(con, topo, activ)
+    ref = simulate_token_generation(plan, topo, activ, WL, COMP,
+                                    np.random.default_rng(0), 50,
+                                    backend="numpy")
+    assert ref.layer_latency_s.shape == (50, 4)
+    with pytest.raises(ValueError):
+        simulate_token_generation(plan, topo, activ, WL, COMP,
+                                  np.random.default_rng(0), 50,
+                                  backend="pallas")
+
+
+def test_engine_matches_legacy_no_lm_head_and_node_sets():
+    con, topo, activ = _world()
+    plan = spacemoe_plan(con, topo, activ)
+    sets = subnet_routing_sets(CFG, 4)
+    ref = simulate_token_generation_legacy(
+        plan, topo, activ, WL, COMP, np.random.default_rng(11), 200,
+        include_lm_head=False, node_sets=sets)
+    eng = simulate_token_generation(
+        plan, topo, activ, WL, COMP, np.random.default_rng(11), 200,
+        include_lm_head=False, node_sets=sets)
+    _parity(ref, eng)
+
+
+# --------------------------------------------------------------------- #
+# Batched sweeps
+# --------------------------------------------------------------------- #
+
+
+def test_batched_sweep_matches_per_plan_calls():
+    con, topo, activ = _world()
+    plans = [
+        spacemoe_plan(con, topo, activ),
+        rand_intra_cg_plan(CFG, 4, 4, np.random.default_rng(7)),
+        multi_expert_plan(con, topo, activ, 2, "slotted"),
+    ]
+    batched = evaluate_plans(plans, topo, activ, WL, COMP,
+                             np.random.default_rng(5), n_tokens=200)
+    for plan, res in zip(plans, batched):
+        solo = evaluate_plans([plan], topo, activ, WL, COMP,
+                              np.random.default_rng(5), n_tokens=200)[0]
+        np.testing.assert_allclose(res.token_latency_s, solo.token_latency_s,
+                                   rtol=1e-6)
+
+
+def test_plan_batch_dedupes_shared_gateways():
+    con, topo, activ = _world()
+    plans = [spacemoe_plan(con, topo, activ)] + [
+        rand_intra_cg_plan(CFG, 4, 4, np.random.default_rng(s))
+        for s in range(3)
+    ]
+    batch = PlanBatch.from_plans(plans, topo)
+    # All four plans share the 4 central gateways -> 4 unique table rows.
+    assert batch.dist.shape == (topo.n_slots, 4, CFG.n_sats)
+    assert (batch.g_idx == np.arange(4)[None, :]).all()
+    assert batch.eta.tolist() == [1.0] * 4
+
+
+def test_prebuilt_batch_rejects_different_sweep():
+    """Stale-batch reuse must fail loudly: same-length (even same-name)
+    sweeps with different placements, node_sets, or eta are rejected."""
+    con, topo, activ = _world()
+    p_a = rand_intra_cg_plan(CFG, 4, 4, np.random.default_rng(0))
+    p_b = rand_intra_cg_plan(CFG, 4, 4, np.random.default_rng(1))
+    assert p_a.name == p_b.name     # names alone cannot distinguish them
+    batch = PlanBatch.from_plans([p_a], topo)
+    rng = np.random.default_rng(5)
+    with pytest.raises(ValueError):
+        evaluate_plans([p_b], topo, activ, WL, COMP, rng, 50, batch=batch)
+    with pytest.raises(ValueError):
+        evaluate_plans([p_a], topo, activ, WL, COMP, rng, 50, batch=batch,
+                       node_sets=subnet_routing_sets(CFG, 4))
+    mp = multi_expert_plan(con, topo, activ, 2, "slotted")
+    mbatch = PlanBatch.from_plans([mp], topo, eta=1.0)
+    with pytest.raises(ValueError):
+        evaluate_plans([mp], topo, activ, WL, COMP, rng, 50, batch=mbatch,
+                       eta=2.0)
+    # resampled topology: stale Dijkstra rows must not be served silently
+    topo_b = sample_topology(con, LinkConfig(), np.random.default_rng(99))
+    with pytest.raises(ValueError):
+        evaluate_plans([p_a], topo_b, activ, WL, COMP, rng, 50, batch=batch)
+    # the matching sweep still runs
+    out = evaluate_plans([p_a], topo, activ, WL, COMP, rng, 50, batch=batch)
+    assert len(out) == 1
+
+
+def test_plan_batch_rejects_mixed_depth_and_empty():
+    con, topo, activ = _world()
+    p4 = spacemoe_plan(con, topo, activ)
+    activ2 = ActivationModel.zipf(2, 4, 2, seed=1)
+    p2 = spacemoe_plan(con, topo, activ2)
+    with pytest.raises(ValueError):
+        PlanBatch.from_plans([p4, p2], topo)
+    with pytest.raises(ValueError):
+        PlanBatch.from_plans([], topo)
+
+
+def test_rank_plans_orders_spacemoe_first():
+    con, topo, activ = _world()
+    rng = np.random.default_rng(3)
+    plans = baseline_plans(con, topo, activ, rng, n_random_draws=2)
+    assert len(plans) == 7
+    assert len({p.name for p in plans}) == 7
+    ranked = rank_plans(plans, topo, activ, WL, COMP,
+                        np.random.default_rng(5), n_tokens=300)
+    keys = [(r.drop_rate, r.mean_s) for _, r in ranked]
+    assert keys == sorted(keys)     # delivery first, then speed
+    # Theorem-1 placement beats every random baseline in the sweep.
+    assert ranked[0][0].name == "SpaceMoE"
+
+
+# --------------------------------------------------------------------- #
+# Multi-expert contention (Eq. 43)
+# --------------------------------------------------------------------- #
+
+
+def test_multi_expert_contention_parity_and_effect():
+    con, topo, activ = _world()
+    slow = ComputeConfig(peak_gflops=0.5)
+    for mode in ["slotted", "spread"]:
+        mp = multi_expert_plan(con, topo, activ, 2, mode)
+        ref = simulate_token_generation_legacy(
+            mp, topo, activ, WL, slow, np.random.default_rng(7), 300, eta=1.0)
+        eng = simulate_token_generation(
+            mp, topo, activ, WL, slow, np.random.default_rng(7), 300, eta=1.0)
+        _parity(ref, eng)
+    # Contention bites: halving eta on a stacked plan raises latency.
+    mp = multi_expert_plan(con, topo, activ, 2, "slotted")
+    fast_eta = evaluate_plans([mp], topo, activ, WL, slow,
+                              np.random.default_rng(7), 300, eta=2.0)[0]
+    slow_eta = evaluate_plans([mp], topo, activ, WL, slow,
+                              np.random.default_rng(7), 300, eta=1.0)[0]
+    assert slow_eta.mean_s > fast_eta.mean_s
+
+
+# --------------------------------------------------------------------- #
+# Route staleness (Sec. VIII extension)
+# --------------------------------------------------------------------- #
+
+
+def test_staleness_parity_and_monotonicity():
+    con, topo, activ = _world()
+    plan = spacemoe_plan(con, topo, activ)
+    ref = simulate_token_generation_legacy(
+        plan, topo, activ, WL, COMP, np.random.default_rng(5), 300,
+        route_staleness=3, reroute_penalty_s=0.03)
+    eng = simulate_token_generation(
+        plan, topo, activ, WL, COMP, np.random.default_rng(5), 300,
+        route_staleness=3, reroute_penalty_s=0.03)
+    _parity(ref, eng)
+    fresh = simulate_token_generation(
+        plan, topo, activ, WL, COMP, np.random.default_rng(5), 300,
+        route_staleness=0, reroute_penalty_s=0.03)
+    base = simulate_token_generation(
+        plan, topo, activ, WL, COMP, np.random.default_rng(5), 300)
+    # staleness=0 never pays the penalty; staleness>0 can only hurt.
+    assert fresh.mean_s == base.mean_s
+    assert eng.mean_s >= base.mean_s - 1e-12
+
+
+# --------------------------------------------------------------------- #
+# Drop accounting for unreachable satellites
+# --------------------------------------------------------------------- #
+
+
+def test_unreachable_satellite_counts_as_drop_not_inf():
+    con, topo, activ = _world()
+    plan = spacemoe_plan(con, topo, activ)
+    # Sever every ISL of the satellite hosting the hottest expert of layer
+    # 0 in half the slots: tokens routed there in those slots drop.
+    victim = int(plan.expert_sats[0][np.argmax(activ.probs(0))])
+    touches = (topo.edges == victim).any(axis=1)
+    topo.edge_mask[: topo.n_slots // 2, touches] = False
+    ref = simulate_token_generation_legacy(
+        plan, topo, activ, WL, COMP, np.random.default_rng(5), 400)
+    eng = simulate_token_generation(
+        plan, topo, activ, WL, COMP, np.random.default_rng(5), 400)
+    assert eng.drop_rate > 0
+    assert eng.drop_rate == ref.drop_rate
+    np.testing.assert_array_equal(ref.delivered, eng.delivered)
+    # Delivered tokens have finite latency; dropped ones are NaN, not inf.
+    assert np.isfinite(eng.token_latency_s[eng.delivered]).all()
+    assert np.isnan(eng.token_latency_s[~eng.delivered]).all()
+    assert np.isfinite(eng.mean_s) and np.isfinite(eng.p99_s)
+
+
+# --------------------------------------------------------------------- #
+# On-device conditional-Poisson sampler
+# --------------------------------------------------------------------- #
+
+
+def test_sample_topk_jax_marginals_match_eq14():
+    import jax
+
+    w = np.array([4.0, 2.0, 1.0, 0.5, 0.25])
+    k = 2
+    draws = np.asarray(sample_topk_jax(w.astype(np.float32), k,
+                                       jax.random.PRNGKey(0), 20000))
+    assert draws.shape == (20000, k)
+    # valid subsets: K distinct experts per draw
+    assert (np.diff(np.sort(draws, axis=1), axis=1) != 0).all()
+    freq = np.bincount(draws.ravel(), minlength=len(w)) / draws.shape[0]
+    np.testing.assert_allclose(freq, activation_probs(w, k), atol=0.02)
+    assert abs(freq.sum() - k) < 1e-9
+
+
+def test_jax_sample_backend_agrees_statistically():
+    con, topo, activ = _world()
+    plan = spacemoe_plan(con, topo, activ)
+    host = evaluate_plans([plan], topo, activ, WL, COMP,
+                          np.random.default_rng(5), n_tokens=2000)[0]
+    dev = evaluate_plans([plan], topo, activ, WL, COMP,
+                         np.random.default_rng(5), n_tokens=2000,
+                         sample_backend="jax")[0]
+    assert abs(dev.mean_s - host.mean_s) / host.mean_s < 0.05
+    with pytest.raises(ValueError):
+        evaluate_plans([plan], topo, activ, WL, COMP,
+                       np.random.default_rng(5), sample_backend="torch")

@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import pytest
 
+from repro.compat import cost_analysis
 from repro.configs import smoke_config
 from repro.launch import hlo_analysis as ha
 from repro.models import Parallel, init_params
@@ -94,7 +95,7 @@ def _compile_train(n_layers: int):
 
 def test_walker_matches_xla_cost_analysis_without_multipliers():
     comp = _compile_train(2)
-    xla = comp.cost_analysis()
+    xla = cost_analysis(comp)
     mine = ha.analyze(comp.as_text(), 1, apply_multipliers=False)
     # XLA counts elementwise flops too; dots dominate => within 15%
     assert abs(mine.flops - xla["flops"]) / xla["flops"] < 0.15
@@ -105,7 +106,7 @@ def test_walker_matches_xla_cost_analysis_without_multipliers():
 def test_walker_scales_with_depth_xla_does_not():
     c2 = _compile_train(2)
     c6 = _compile_train(6)
-    xla_ratio = c6.cost_analysis()["flops"] / c2.cost_analysis()["flops"]
+    xla_ratio = cost_analysis(c6)["flops"] / cost_analysis(c2)["flops"]
     m2 = ha.analyze(c2.as_text(), 1).flops
     m6 = ha.analyze(c6.as_text(), 1).flops
     assert xla_ratio < 1.3          # the undercount this module exists for
