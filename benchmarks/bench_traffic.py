@@ -1,0 +1,142 @@
+"""Traffic & capacity benchmark: plans x scenarios SLO table plus the
+SpaceMoE-vs-RandIntra-CG sustained-capacity ratio.
+
+Every registry scenario runs the request-level fleet simulator
+(``repro.traffic``) over a plan sweep on one shared world; the
+saturation sweep then thins a high-rate envelope trace through the
+single precomputed :class:`FleetSim` (one engine pass, one jit'd fleet
+scan shape) to find each plan's max arrival rate under a
+relative-headroom SLO (p90 TTFT within 3x and p90 TPOT within 2.5x of
+the best plan's zero-load latency, <=5% drops) and a KV-slot budget.
+
+    PYTHONPATH=src python -m benchmarks.run --fast --only traffic
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        rand_intra_cg_plan, rand_place_plan, sample_topology,
+                        spacemoe_plan)
+from repro.traffic import (SCENARIOS, SLO, build_ground_segment, format_table,
+                           get_scenario, make_sim, run_scenario,
+                           saturation_sweep)
+
+from .common import PAPER_COMPUTE, Timer, emit
+
+
+def _world(fast: bool, seed: int = 0):
+    if fast:
+        ccfg = ConstellationConfig.scaled(12, 16, n_slots=12)
+        n_layers = 8
+    else:
+        ccfg = ConstellationConfig.scaled(17, 16, n_slots=20)
+        n_layers = 16
+    con = Constellation(ccfg)
+    link = LinkConfig()
+    topo = sample_topology(con, link, np.random.default_rng(seed))
+    activ = ActivationModel.zipf(n_layers, 8, 2, seed=seed)
+    wl = MoEWorkload.llama_moe_3p5b()
+    ground = build_ground_segment(con, link, min_elevation_deg=10.0)
+    return con, topo, activ, wl, PAPER_COMPUTE, ground
+
+
+def _plans(con, topo, activ, seed: int = 3):
+    cfg = con.cfg
+    return [
+        spacemoe_plan(con, topo, activ),
+        rand_intra_cg_plan(cfg, activ.n_layers, activ.n_experts,
+                           np.random.default_rng(seed)),
+        rand_place_plan(cfg, activ.n_layers, activ.n_experts,
+                        np.random.default_rng(seed)),
+    ]
+
+
+def run(fast: bool = True, json_path: str | None = None) -> dict:
+    """Emits CSV rows + a human table; returns the JSON-able summary."""
+    con, topo, activ, wl, comp, ground = _world(fast)
+    plans = _plans(con, topo, activ)
+    rows: list[dict] = []
+    out: dict = {"fast": fast, "plans": [p.name for p in plans]}
+
+    # ---- plans x scenarios SLO table ----------------------------------
+    for name in sorted(SCENARIOS):
+        sc = get_scenario(name)
+        if fast:
+            sc = dataclasses.replace(
+                sc, horizon_s=min(sc.horizon_s, 60.0), tail_s=60.0,
+                failure_at_s=(30.0 if sc.failure_at_s is not None else None))
+        with Timer() as t:
+            res = run_scenario(sc, plans, topo, activ, wl, comp,
+                               np.random.default_rng(11), ground=ground,
+                               constellation=con)
+        scen_rows = res.result.table(sc.slo, scenario=sc.name)
+        if res.post_failure is not None:
+            scen_rows += res.post_failure.table(sc.slo,
+                                                scenario=f"{sc.name}(post)")
+            out.setdefault("migration_bytes", {}).update(
+                res.storm.migration_bytes)
+        rows += scen_rows
+        derived = ";".join(
+            f"{r['plan']}:goodput={r['goodput_tok_s']};"
+            f"ttft_p99={r['ttft_p99_s']};drop={r['drop_rate']}"
+            for r in scen_rows if r["scenario"] == sc.name)
+        emit(f"traffic/{sc.name}", t.seconds * 1e6, derived)
+
+    # ---- saturation sweep: max sustained rate under SLO + KV budget ----
+    # The binding resource is KV-cache memory: each in-flight request
+    # pins a KV slot for its whole (placement-dependent) lifetime, so by
+    # Little's law a plan's admissible rate is kv_slots / E2E — longer
+    # network paths burn capacity.  Latency budgets (relative to the
+    # best plan's zero-load quantiles) guard the queueing side.
+    sweep_sc = dataclasses.replace(
+        get_scenario("smoke"), horizon_s=60.0 if fast else 120.0,
+        tail_s=60.0, kv_slots=8)
+    envelope = 8.0           # x base rate; spans under- to over-saturated
+    sweep_plans = plans[:2]  # SpaceMoE vs RandIntra-CG
+    with Timer() as t_sweep:
+        sim = make_sim(sweep_sc, sweep_plans, topo, activ, wl, comp,
+                       np.random.default_rng(13), ground=ground,
+                       constellation=con, rate_scale=envelope)
+        base = sim.run(zero_load=True)
+        ttft0 = min(p.quantile("ttft", 0.9) for p in base.plans)
+        tpot0 = min(p.quantile("tpot", 0.9) for p in base.plans)
+        slo = SLO(ttft_s=3.0 * ttft0, tpot_s=2.5 * tpot0, quantile=0.9,
+                  max_drop=0.05)
+        fractions = np.array([0.1, 0.15, 0.2, 0.25, 0.3, 0.35, 0.4, 0.5,
+                              0.6, 0.8, 1.0])
+        sat = saturation_sweep(sim, slo, np.random.default_rng(17),
+                               fractions=fractions)
+    ratio = sat.capacity_ratio("SpaceMoE", "RandIntra-CG")
+    out["slo"] = slo.describe()
+    out["tested_rps"] = [round(float(r), 4) for r in sat.tested_rps]
+    out["slo_met_by_rate"] = {k: [bool(b) for b in v]
+                              for k, v in sat.met.items()}
+    out["sustained_rps"] = {k: round(v, 4)
+                            for k, v in sat.sustained_rps.items()}
+    out["capacity_ratio_spacemoe_over_randintra_cg"] = (
+        round(ratio, 3) if np.isfinite(ratio) else None)
+    out["table"] = rows
+
+    print(format_table(rows, prefix="# "))
+    print(f"# saturation SLO: {slo.describe()}")
+    print("# sustained capacity (rps): " + ", ".join(
+        f"{k}={v:.3f}" for k, v in sat.sustained_rps.items()))
+    print(f"# SpaceMoE vs RandIntra-CG sustained-capacity ratio: "
+          f"{ratio:.2f}x")
+    emit("traffic/saturation_sweep", t_sweep.seconds * 1e6,
+         ";".join(f"{k}_rps={v:.3f}" for k, v in sat.sustained_rps.items())
+         + f";capacity_ratio={ratio:.2f}")
+
+    if json_path:
+        import json
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    run()

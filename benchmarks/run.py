@@ -1,14 +1,19 @@
 """Benchmark entrypoint — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows (human-readable tables are
+prefixed with ``#``).
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only table2 fig7
-    PYTHONPATH=src python -m benchmarks.run --fast     # CI-sized
+    PYTHONPATH=src python -m benchmarks.run --only engine,traffic --fast
+    PYTHONPATH=src python -m benchmarks.run --list
+    PYTHONPATH=src python -m benchmarks.run --fast --only traffic \
+        --json-out BENCH_traffic.json
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -16,14 +21,19 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: engine table2 fig6 fig7 kernels placement "
-                         "multi_expert linkstate roofline")
+                    help="subset of benchmark names (space- or "
+                         "comma-separated); see --list")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--list", action="store_true",
+                    help="print available benchmark names and exit")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="write structured results (benches that return "
+                         "dicts) to this JSON file")
     args = ap.parse_args()
 
     from . import (bench_engine, bench_fig6, bench_fig7, bench_kernels,
                    bench_linkstate, bench_multi_expert, bench_placement,
-                   bench_roofline, bench_table2)
+                   bench_roofline, bench_table2, bench_traffic)
 
     n_tok = 120 if args.fast else 400
     suite = {
@@ -31,6 +41,7 @@ def main() -> None:
             n_tokens=200 if args.fast else 1000,
             n_plans=8 if args.fast else 16,
             n_slots=40 if args.fast else None),
+        "traffic": lambda: bench_traffic.run(fast=args.fast),
         "table2": lambda: bench_table2.run(
             n_tokens=n_tok, n_slots=60 if args.fast else None),
         "fig6": lambda: bench_fig6.run(n_tokens=150 if args.fast else 600),
@@ -43,15 +54,29 @@ def main() -> None:
             n_tokens=80 if args.fast else 250),
         "roofline": bench_roofline.run,
     }
-    selected = args.only or list(suite)
+    if args.list:
+        for name in suite:
+            print(name)
+        return
+
+    selected = []
+    for item in (args.only or list(suite)):
+        selected += [s for s in item.split(",") if s]
     print("name,us_per_call,derived")
     t0 = time.time()
+    structured: dict = {}
     for name in selected:
         if name not in suite:
-            print(f"unknown bench {name!r}", file=sys.stderr)
+            print(f"unknown bench {name!r} (see --list)", file=sys.stderr)
             raise SystemExit(2)
-        suite[name]()
+        result = suite[name]()
+        if isinstance(result, dict):
+            structured[name] = result
     print(f"# total {time.time()-t0:.1f}s")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(structured, f, indent=2)
+        print(f"# wrote {args.json_out}")
 
 
 if __name__ == "__main__":

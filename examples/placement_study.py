@@ -1,50 +1,83 @@
 """Placement study: how network parameters shape SpaceMoE's advantage
 (a quick interactive version of paper Fig. 7).
 
-    PYTHONPATH=src python examples/placement_study.py
+Each configuration evaluates SpaceMoE vs RandIntra-CG in a single
+batched ``evaluate_plans`` sweep (one deduped Dijkstra table, common
+random numbers across plans).  ``--smoke`` shrinks the sweep and
+parity-checks the printed numbers against the legacy per-plan NumPy
+simulator.
+
+    PYTHONPATH=src python examples/placement_study.py [--smoke]
 """
+import argparse
 import dataclasses
 
 import numpy as np
 
 from repro.core import (ActivationModel, ComputeConfig, Constellation,
                         ConstellationConfig, LinkConfig, MoEWorkload,
-                        rand_intra_cg_plan, sample_topology,
-                        simulate_token_generation, spacemoe_plan)
+                        evaluate_plans, rand_intra_cg_plan, sample_topology,
+                        simulate_token_generation_legacy, spacemoe_plan)
 
 N_LAYERS, N_EXPERTS, TOP_K = 8, 8, 2   # N_y >= L must hold at every size
 
 
-def latency(ccfg, seed=0, n_tokens=200):
+def latency(ccfg, seed=0, n_tokens=200, check_legacy=False):
     con = Constellation(ccfg)
     topo = sample_topology(con, LinkConfig(), np.random.default_rng(seed))
     activ = ActivationModel.zipf(N_LAYERS, N_EXPERTS, TOP_K, seed=1)
     wl = MoEWorkload.llama_moe_3p5b()
     comp = ComputeConfig()
-    sm = simulate_token_generation(
-        spacemoe_plan(con, topo, activ, wl, comp), topo, activ, wl, comp,
-        np.random.default_rng(5), n_tokens)
-    cg = simulate_token_generation(
+    plans = [
+        spacemoe_plan(con, topo, activ, wl, comp),
         rand_intra_cg_plan(ccfg, N_LAYERS, N_EXPERTS, np.random.default_rng(7)),
-        topo, activ, wl, comp, np.random.default_rng(5), n_tokens)
+    ]
+    # One batched sweep; both plans share the rng(5) token stream — the
+    # same draws the legacy path consumed per plan.
+    sm, cg = evaluate_plans(plans, topo, activ, wl, comp,
+                            np.random.default_rng(5), n_tokens=n_tokens)
+    if check_legacy:
+        for plan, res in zip(plans, (sm, cg)):
+            ref = simulate_token_generation_legacy(
+                plan, topo, activ, wl, comp, np.random.default_rng(5),
+                n_tokens)
+            np.testing.assert_allclose(res.mean_s, ref.mean_s, rtol=1e-5)
     return sm.mean_s, cg.mean_s
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep + engine/legacy parity check")
+    args = ap.parse_args()
+    n_tok = 60 if args.smoke else 200
+    check = args.smoke
+
     base = ConstellationConfig.scaled(17, 16, n_slots=30)
+    if args.smoke:
+        base = ConstellationConfig.scaled(13, 12, n_slots=10)
+
     print("altitude sweep (s/token):")
     for alt in (350, 550, 800, 1100):
-        sm, cg = latency(dataclasses.replace(base, altitude_km=float(alt)))
+        sm, cg = latency(dataclasses.replace(base, altitude_km=float(alt)),
+                         n_tokens=n_tok, check_legacy=check)
         print(f"  {alt:5d} km: SpaceMoE {sm:.3f}  RandIntra-CG {cg:.3f}")
     print("survival-probability sweep:")
     for p in (0.8, 0.9, 0.95, 1.0):
-        sm, cg = latency(dataclasses.replace(base, survival_prob=p))
+        sm, cg = latency(dataclasses.replace(base, survival_prob=p),
+                         n_tokens=n_tok, check_legacy=check)
         print(f"  P_sw={p:.2f}: SpaceMoE {sm:.3f}  RandIntra-CG {cg:.3f}")
     print("constellation-size sweep:")
-    for nx, ny in ((13, 12), (17, 16), (25, 24)):
-        sm, cg = latency(ConstellationConfig.scaled(nx, ny, n_slots=30))
+    sizes = ((13, 12), (17, 16)) if args.smoke else \
+        ((13, 12), (17, 16), (25, 24))
+    for nx, ny in sizes:
+        sm, cg = latency(ConstellationConfig.scaled(
+            nx, ny, n_slots=10 if args.smoke else 30),
+            n_tokens=n_tok, check_legacy=check)
         print(f"  {nx}x{ny} ({nx*ny} sats): SpaceMoE {sm:.3f}  "
               f"RandIntra-CG {cg:.3f}")
+    if args.smoke:
+        print("smoke parity: engine numbers match the legacy simulator")
 
 
 if __name__ == "__main__":

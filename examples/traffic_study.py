@@ -1,0 +1,111 @@
+"""Traffic study: how many users can a SpaceMoE constellation serve?
+
+Walks the repro.traffic subsystem end to end on a mid-size world:
+
+  1. build the world (constellation, topology, activation stats, ground
+     gateways) and a plan sweep (SpaceMoE vs the random baselines);
+  2. run the named scenarios (steady-state, diurnal-peak,
+     regional-hotspot) and print the plans x scenarios SLO table;
+  3. failure-storm: knock out 25% of the expert satellites mid-run,
+     re-place experts on the survivors with the distributed.elastic
+     machinery, and compare pre/post SLOs + migration bytes;
+  4. saturation sweep: the max request rate each plan sustains under a
+     KV-slot budget and latency SLO (the capacity headline).
+
+    PYTHONPATH=src python examples/traffic_study.py [--fast]
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        rand_intra_cg_plan, rand_place_plan, sample_topology,
+                        spacemoe_plan)
+from repro.traffic import (SLO, build_ground_segment, format_table,
+                           get_scenario, make_sim, run_scenario,
+                           saturation_sweep)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    # ---- world ---------------------------------------------------------
+    if args.fast:
+        ccfg = ConstellationConfig.scaled(12, 16, n_slots=10)
+        n_layers = 8
+    else:
+        ccfg = ConstellationConfig.scaled(17, 16, n_slots=20)
+        n_layers = 16
+    con = Constellation(ccfg)
+    link = LinkConfig()
+    topo = sample_topology(con, link, np.random.default_rng(0))
+    activ = ActivationModel.zipf(n_layers, 8, 2, seed=0)
+    wl = MoEWorkload.llama_moe_3p5b()
+    comp = ComputeConfig()
+    ground = build_ground_segment(con, link, min_elevation_deg=10.0)
+    print(f"world: {ccfg.n_sats} sats, L={n_layers}, "
+          f"ground coverage {ground.coverage():.0%}")
+
+    plans = [
+        spacemoe_plan(con, topo, activ),
+        rand_intra_cg_plan(ccfg, n_layers, 8, np.random.default_rng(3)),
+        rand_place_plan(ccfg, n_layers, 8, np.random.default_rng(3)),
+    ]
+
+    # ---- scenarios -----------------------------------------------------
+    rows = []
+    for name in ("steady-state", "diurnal-peak", "regional-hotspot"):
+        sc = get_scenario(name)
+        if args.fast:
+            sc = dataclasses.replace(sc, horizon_s=60.0, tail_s=60.0)
+        out = run_scenario(sc, plans, topo, activ, wl, comp,
+                           np.random.default_rng(11), ground=ground,
+                           constellation=con)
+        rows += out.result.table(sc.slo, scenario=sc.name)
+    print(format_table(rows))
+
+    # ---- failure storm -------------------------------------------------
+    sc = get_scenario("failure-storm")
+    if args.fast:
+        sc = dataclasses.replace(sc, horizon_s=60.0, failure_at_s=30.0,
+                                 tail_s=60.0)
+    out = run_scenario(sc, plans[:2], topo, activ, wl, comp,
+                       np.random.default_rng(12), ground=ground,
+                       constellation=con)
+    print("\nfailure-storm: "
+          f"{sc.failure_frac:.0%} of expert satellites lost at "
+          f"t={sc.failure_at_s:.0f}s")
+    for name, b in out.storm.migration_bytes.items():
+        print(f"  {name}: {out.storm.moved_experts[name]} experts move, "
+              f"{b / 1e6:.1f} MB migrated")
+    srows = out.result.table(sc.slo, scenario="pre-storm")
+    if out.post_failure is not None:
+        srows += out.post_failure.table(sc.slo, scenario="post-storm")
+    print(format_table(srows))
+
+    # ---- saturation sweep ----------------------------------------------
+    sweep_sc = dataclasses.replace(
+        get_scenario("smoke"), horizon_s=60.0 if args.fast else 120.0,
+        tail_s=60.0, kv_slots=8)
+    sim = make_sim(sweep_sc, plans[:2], topo, activ, wl, comp,
+                   np.random.default_rng(13), ground=ground,
+                   constellation=con, rate_scale=8.0)
+    base = sim.run(zero_load=True)
+    slo = SLO(ttft_s=3.0 * min(p.quantile("ttft", 0.9) for p in base.plans),
+              tpot_s=2.5 * min(p.quantile("tpot", 0.9) for p in base.plans),
+              quantile=0.9, max_drop=0.05)
+    sat = saturation_sweep(sim, slo, np.random.default_rng(17),
+                           fractions=np.linspace(0.1, 1.0, 10))
+    print(f"\nsaturation sweep ({slo.describe()}, kv_slots=8):")
+    for name, rate in sat.sustained_rps.items():
+        print(f"  {name}: sustains {rate:.3f} req/s")
+    print(f"  capacity ratio SpaceMoE / RandIntra-CG: "
+          f"{sat.capacity_ratio('SpaceMoE', 'RandIntra-CG'):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,8 @@ from .constellation import (EARTH_RADIUS_M, SPEED_OF_LIGHT, Constellation,
 from .device_placement import (DevicePlacementPlan, TorusSpec,
                                expected_dispatch_cost, identity_plan,
                                plan_expert_devices)
-from .engine import PlanBatch, evaluate_plans
+from .engine import (PlanBatch, contention_counts, evaluate_plans,
+                     hop_latency, ingress_offsets)
 from .latency import (ComputeConfig, LinkConfig, TopologySample,
                       expected_path_latency, gateway_distance_table,
                       sample_topology, source_distance_table)
@@ -36,7 +37,8 @@ __all__ = [
     "EARTH_RADIUS_M", "SPEED_OF_LIGHT", "Constellation", "ConstellationConfig",
     "DevicePlacementPlan", "TorusSpec", "expected_dispatch_cost",
     "identity_plan", "plan_expert_devices",
-    "PlanBatch", "evaluate_plans",
+    "PlanBatch", "contention_counts", "evaluate_plans", "hop_latency",
+    "ingress_offsets",
     "ComputeConfig", "LinkConfig", "TopologySample", "expected_path_latency",
     "gateway_distance_table", "sample_topology", "source_distance_table",
     "brute_force_optimal", "layer_latency_closed_form",

@@ -204,12 +204,15 @@ class PlanBatch:
 # --------------------------------------------------------------------- #
 
 
-def _hop(dist, slots, stale_slots, g, sats, penalty, stale: bool):
+def hop_latency(dist, slots, stale_slots, g, sats, penalty, stale: bool):
     """Gateway<->expert hop latencies, (T, K), with the staleness penalty.
 
     With ``stale`` the path was chosen on the topology ``stale_slots`` ago:
     smooth drift is free, but a topology change (detour > ~one hop, or a
     broken route) pays the current shortest path plus ``penalty``.
+
+    Public so downstream subsystems (``repro.traffic``) can reuse the
+    exact same hop kernel the engine evaluates plans with.
     """
     cur = dist[slots[:, None], g, sats]
     if not stale:
@@ -217,6 +220,27 @@ def _hop(dist, slots, stale_slots, g, sats, penalty, stale: bool):
     old = dist[stale_slots[:, None], g, sats]
     broken = (jnp.abs(old - cur) > HOP_SCALE_S) | ~jnp.isfinite(old)
     return cur + penalty * broken
+
+
+def contention_counts(sats):
+    """q[..., k] = number of activated experts sharing satellite ``sats[..., k]``
+    (the Eq. 43 colocation count; last axis is the top-K draw axis)."""
+    return (sats[..., :, None] == sats[..., None, :]).sum(axis=-1)
+
+
+def ingress_offsets(batch: "PlanBatch", slots: np.ndarray,
+                    ingress_sats: np.ndarray) -> np.ndarray:
+    """Per-token uphill offset D(ingress sat, gateway_0; slot), shape (P, T).
+
+    The graph is undirected, so the layer-0 gateway row of the deduped
+    Dijkstra table already holds every ingress->gateway distance: no extra
+    Dijkstra runs.  Tokens entering via an unreachable ingress satellite
+    get +inf (the traffic layer accounts them as drops).
+    """
+    slots = np.asarray(slots)
+    ingress_sats = np.asarray(ingress_sats)
+    g0 = batch.g_idx[:, 0]                                   # (P,)
+    return batch.dist[slots[None, :], g0[:, None], ingress_sats[None, :]]
 
 
 @functools.partial(jax.jit, static_argnames=("stale",))
@@ -235,10 +259,12 @@ def _evaluate_batch(dist, g_idx, expert_sats, slots, stale_slots, draws,
         def layer_step(_, xs):
             draws_l, g_l, g_n, sats_i = xs
             sats = sats_i[draws_l]                                # (T, K)
-            d_out = _hop(dist, slots, stale_slots, g_l, sats, penalty, stale)
-            d_in = _hop(dist, slots, stale_slots, g_n, sats, penalty, stale)
+            d_out = hop_latency(dist, slots, stale_slots, g_l, sats,
+                                penalty, stale)
+            d_in = hop_latency(dist, slots, stale_slots, g_n, sats,
+                               penalty, stale)
             # Eq. 43 contention: q = activated experts sharing the satellite.
-            q = (sats[:, :, None] == sats[:, None, :]).sum(axis=2)
+            q = contention_counts(sats)
             t_exp = (q.astype(dist.dtype) / eta_p) * t_expert
             lay = t_gateway + (d_out + t_exp + d_in).max(axis=1)
             return None, lay
@@ -285,6 +311,8 @@ def evaluate_plans(
     reroute_penalty_s: float = 0.0,
     batch: PlanBatch | None = None,
     sample_backend: str = "host",
+    slots: np.ndarray | None = None,
+    draws: np.ndarray | None = None,
 ) -> list[SimResult]:
     """Monte-Carlo E2E latency for a sweep of P plans, one engine pass.
 
@@ -302,6 +330,14 @@ def evaluate_plans(
     the Dijkstra table and its device copies across calls; the call raises
     if ``plans``/``node_sets``/``eta`` differ from what the batch was
     built with.
+
+    ``slots`` (optional, (n_tokens,) int) pins each token to a topology
+    slot instead of sampling slots uniformly from ``rng`` — the traffic
+    subsystem uses this to tie tokens to wall-clock time.  ``draws``
+    (optional, (L, n_tokens, K) int) likewise pins the per-token expert
+    draws, so a caller that also needs them (queue-load binning) can
+    sample once and share.  The legacy random stream is only reproduced
+    when both are None.
     """
     plans = list(plans)
     if batch is None:
@@ -317,8 +353,19 @@ def evaluate_plans(
     if batch.n_layers != n_layers:
         raise ValueError("plan sweep and activation model disagree on n_layers")
 
-    slots = rng.integers(0, topo.n_slots, size=n_tokens)
-    if sample_backend == "host":
+    if slots is None:
+        slots = rng.integers(0, topo.n_slots, size=n_tokens)
+    else:
+        slots = np.asarray(slots)
+        if slots.shape != (n_tokens,):
+            raise ValueError("slots must have shape (n_tokens,)")
+        if slots.min() < 0 or slots.max() >= topo.n_slots:
+            raise ValueError("slot index out of range for this topology")
+    if draws is not None:
+        draws = np.asarray(draws)
+        if draws.shape != (n_layers, n_tokens, activation.top_k):
+            raise ValueError("draws must have shape (n_layers, n_tokens, K)")
+    elif sample_backend == "host":
         # Same call order as the legacy simulator: slots, then layer draws.
         draws = np.stack(
             [activation.sample(layer, rng, n_tokens)

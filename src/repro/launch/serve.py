@@ -11,11 +11,16 @@ The paper's kind is inference, so this is the headline end-to-end driver:
      the jitted serve step; report tokens/s;
   4. account: expected dispatch-cost reduction vs identity placement, and
      the full space-network latency of the same token stream under the
-     paper's constellation (core.simulator) — SpaceMoE vs RandIntra-CG;
+     paper's constellation — SpaceMoE vs RandIntra-CG in one batched
+     ``evaluate_plans`` sweep (``--traffic <scenario>`` upgrades this to
+     the request-level fleet simulation of ``repro.traffic`` and prints
+     the SLO table);
   5. (optional) elastic: fail a device, re-plan, report migration bytes.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama-moe-3.5b \
         --smoke --batch 4 --prompt-len 32 --decode-tokens 16
+    PYTHONPATH=src python -m repro.launch.serve --arch llama-moe-3.5b \
+        --smoke --traffic smoke
 """
 from __future__ import annotations
 
@@ -29,10 +34,10 @@ import numpy as np
 from repro.configs import get_config, smoke_config
 from repro.core import (ActivationModel, ComputeConfig, Constellation,
                         ConstellationConfig, LinkConfig, MoEWorkload,
-                        TorusSpec, expected_dispatch_cost, identity_plan,
-                        plan_expert_devices, rand_intra_cg_plan,
-                        sample_topology, simulate_token_generation,
-                        spacemoe_plan)
+                        TorusSpec, evaluate_plans, expected_dispatch_cost,
+                        identity_plan, plan_expert_devices,
+                        rand_intra_cg_plan, sample_topology,
+                        simulate_token_generation_legacy, spacemoe_plan)
 from repro.distributed import migration, replan_on_failure
 from repro.launch.steps import make_serve_step
 from repro.models import (Parallel, forward, init_params, prefill,
@@ -100,6 +105,9 @@ def main(argv=None) -> dict:
                     help="A/B: skip the Theorem-1 placement")
     ap.add_argument("--space-sim", action="store_true",
                     help="also simulate the constellation latency")
+    ap.add_argument("--traffic", default=None, metavar="SCENARIO",
+                    help="request-level fleet simulation under a named "
+                         "repro.traffic scenario (implies --space-sim)")
     ap.add_argument("--fail-device", type=int, default=-1,
                     help="elastic demo: fail this EP device and re-plan")
     args = ap.parse_args(argv)
@@ -161,7 +169,7 @@ def main(argv=None) -> dict:
           f"(host mesh; see dry-run for production-mesh compilation)")
 
     # ---- 4: space-network latency accounting ---------------------------
-    if args.space_sim and cfg.has_moe:
+    if (args.space_sim or args.traffic) and cfg.has_moe:
         ccfg = ConstellationConfig.scaled(12, 16, n_slots=20)
         con = Constellation(ccfg)
         rng = np.random.default_rng(1)
@@ -175,18 +183,52 @@ def main(argv=None) -> dict:
             top_k=cfg.top_k, vocab_size=cfg.vocab_size,
         )
         comp = ComputeConfig()
-        sm = simulate_token_generation(
-            spacemoe_plan(con, topo, activ, wl, comp), topo, activ, wl, comp,
-            np.random.default_rng(2), n_tokens=200)
-        cg = simulate_token_generation(
+        sweep = [
+            spacemoe_plan(con, topo, activ, wl, comp),
             rand_intra_cg_plan(ccfg, n_layers, cfg.n_experts,
                                np.random.default_rng(3)),
-            topo, activ, wl, comp, np.random.default_rng(2), n_tokens=200)
+        ]
+        # One batched sweep; both plans share the rng(2) token stream,
+        # exactly what the legacy per-plan path consumed.
+        sm, cg = evaluate_plans(sweep, topo, activ, wl, comp,
+                                np.random.default_rng(2), n_tokens=200)
+        if args.smoke:
+            for plan, res in zip(sweep, (sm, cg)):
+                ref = simulate_token_generation_legacy(
+                    plan, topo, activ, wl, comp, np.random.default_rng(2),
+                    n_tokens=200)
+                assert abs(res.mean_s - ref.mean_s) / ref.mean_s < 1e-5, \
+                    f"engine/legacy divergence for {plan.name}"
         out["space_latency_s"] = {"SpaceMoE": sm.mean_s,
                                   "RandIntra-CG": cg.mean_s}
         print(f"[space-sim] s/token: SpaceMoE={sm.mean_s:.3f} "
               f"RandIntra-CG={cg.mean_s:.3f} "
               f"({cg.mean_s/sm.mean_s:.2f}x reduction)")
+
+        if args.traffic:
+            import dataclasses
+
+            from repro.traffic import (build_ground_segment, format_table,
+                                       get_scenario, run_scenario)
+            sc = get_scenario(args.traffic)
+            if args.smoke:
+                horizon = min(sc.horizon_s, 60.0)
+                sc = dataclasses.replace(
+                    sc, horizon_s=horizon, tail_s=60.0,
+                    failure_at_s=(horizon / 2.0
+                                  if sc.failure_at_s is not None else None))
+            ground = build_ground_segment(
+                con, LinkConfig(token_dim=cfg.d_model),
+                min_elevation_deg=10.0)
+            res = run_scenario(sc, sweep, topo, activ, wl, comp,
+                               np.random.default_rng(4), ground=ground,
+                               constellation=con)
+            rows = res.result.table(sc.slo, scenario=sc.name)
+            if res.post_failure is not None:
+                rows += res.post_failure.table(
+                    sc.slo, scenario=f"{sc.name}(post)")
+            print(format_table(rows, prefix="[traffic] "))
+            out["traffic"] = rows
     return out
 
 

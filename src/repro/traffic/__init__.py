@@ -1,0 +1,34 @@
+"""repro.traffic — request-level traffic, queueing & SLO subsystem.
+
+Layers a constellation-scale serving simulator on top of the batched
+plan-evaluation engine: arrival processes (:mod:`.requests`), ground
+gateway -> ingress satellite mapping (:mod:`.ground`), the discrete-time
+per-satellite fleet queue kernel (:mod:`.queueing`), serving metrics +
+saturation sweeps (:mod:`.metrics`) and the named scenario registry
+(:mod:`.scenarios`).
+"""
+from .ground import (DEFAULT_STATIONS, GroundSegment, GroundStation,
+                     build_ground_segment)
+from .metrics import (SLO, PlanTraffic, SaturationResult, TrafficResult,
+                      format_table, saturation_sweep)
+from .queueing import (FleetSim, QueueConfig, simulate_traffic,
+                       station_waiting_times)
+from .requests import (RequestBatch, diurnal_rate, hotspot_rate,
+                       poisson_arrivals, sample_decode_lens,
+                       sample_prompt_lens, sample_requests, thinned_arrivals)
+from .scenarios import (SCENARIOS, ScenarioOutcome, StormReport,
+                        TrafficScenario, apply_failure_storm, get_scenario,
+                        make_sim, run_scenario)
+
+__all__ = [
+    "DEFAULT_STATIONS", "GroundSegment", "GroundStation",
+    "build_ground_segment",
+    "SLO", "PlanTraffic", "SaturationResult", "TrafficResult",
+    "format_table", "saturation_sweep",
+    "FleetSim", "QueueConfig", "simulate_traffic", "station_waiting_times",
+    "RequestBatch", "diurnal_rate", "hotspot_rate", "poisson_arrivals",
+    "sample_decode_lens", "sample_prompt_lens", "sample_requests",
+    "thinned_arrivals",
+    "SCENARIOS", "ScenarioOutcome", "StormReport", "TrafficScenario",
+    "apply_failure_storm", "get_scenario", "make_sim", "run_scenario",
+]

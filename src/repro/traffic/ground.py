@@ -1,0 +1,140 @@
+"""User -> ground gateway -> ingress-satellite mapping.
+
+Ground gateways sit on the rotating Earth; satellites are propagated in
+ECI by :class:`repro.core.Constellation`.  Per topology slot we rotate
+each gateway into ECI (Earth spin about +z — consistent with the polar
+Walker geometry, whose z axis is the rotation axis), compute elevation
+angles to every satellite, and pick the highest-elevation visible
+satellite as the ingress node.  Uplink latency = slant range / c + the
+token transmission time at the (slower) ground-to-space rate.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import Constellation, LinkConfig
+from repro.core.constellation import EARTH_RADIUS_M, SPEED_OF_LIGHT
+
+EARTH_ROTATION_RAD_S = 7.2921159e-5   # sidereal rotation rate
+
+
+@dataclasses.dataclass(frozen=True)
+class GroundStation:
+    """A ground gateway site (user traffic aggregation point)."""
+
+    name: str
+    lat_deg: float
+    lon_deg: float
+
+    def ecef(self) -> np.ndarray:
+        """(3,) position on the (spherical) Earth surface, meters."""
+        lat = np.deg2rad(self.lat_deg)
+        lon = np.deg2rad(self.lon_deg)
+        return EARTH_RADIUS_M * np.array([
+            np.cos(lat) * np.cos(lon),
+            np.cos(lat) * np.sin(lon),
+            np.sin(lat),
+        ])
+
+
+# A default global gateway set: one aggregation site per macro-region,
+# spread in longitude so diurnal scenarios sweep around the planet.
+DEFAULT_STATIONS: tuple[GroundStation, ...] = (
+    GroundStation("north-america", 40.0, -100.0),
+    GroundStation("south-america", -15.0, -55.0),
+    GroundStation("europe", 50.0, 10.0),
+    GroundStation("africa", 0.0, 25.0),
+    GroundStation("south-asia", 20.0, 78.0),
+    GroundStation("east-asia", 35.0, 115.0),
+    GroundStation("oceania", -30.0, 140.0),
+    GroundStation("polar-research", 78.0, 15.0),
+)
+
+
+@dataclasses.dataclass
+class GroundSegment:
+    """Per-slot ingress mapping for a set of ground stations.
+
+    ingress_sat[n, s]  — best visible satellite for station s in slot n
+                         (argmax elevation; -1 when none is visible).
+    uplink_s[n, s]     — uplink latency to that satellite (+inf if none).
+    elevation_rad[n, s] — elevation of the chosen satellite.
+    """
+
+    stations: tuple[GroundStation, ...]
+    ingress_sat: np.ndarray
+    uplink_s: np.ndarray
+    elevation_rad: np.ndarray
+    min_elevation_deg: float
+
+    @property
+    def n_stations(self) -> int:
+        return len(self.stations)
+
+    @property
+    def n_slots(self) -> int:
+        return self.ingress_sat.shape[0]
+
+    def coverage(self) -> float:
+        """Fraction of (slot, station) pairs with a visible satellite."""
+        return float((self.ingress_sat >= 0).mean())
+
+    def for_requests(self, slots: np.ndarray, station: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """(ingress_sat, uplink_s) per request given its slot + station."""
+        slots = np.asarray(slots)
+        station = np.asarray(station)
+        return (self.ingress_sat[slots, station],
+                self.uplink_s[slots, station])
+
+
+def build_ground_segment(
+    constellation: Constellation,
+    link: LinkConfig,
+    stations: tuple[GroundStation, ...] = DEFAULT_STATIONS,
+    min_elevation_deg: float = 25.0,
+    uplink_rate_gbps: float = 10.0,
+    slot_times: np.ndarray | None = None,
+) -> GroundSegment:
+    """Compute the per-slot station -> ingress-satellite table.
+
+    ``uplink_rate_gbps`` is the ground-to-space feeder rate (an order of
+    magnitude below the optical ISL rate by default); the per-token
+    transmission time reuses the :class:`LinkConfig` token size.
+    """
+    cfg = constellation.cfg
+    times = cfg.slot_times() if slot_times is None else np.asarray(slot_times)
+    n_slots = len(times)
+    n_st = len(stations)
+    gs_ecef = np.stack([s.ecef() for s in stations])            # (S, 3)
+
+    tx_s = (link.token_dim * link.bits_per_value) / (uplink_rate_gbps * 1e9)
+    min_el = np.deg2rad(min_elevation_deg)
+
+    ingress = np.full((n_slots, n_st), -1, dtype=np.int64)
+    uplink = np.full((n_slots, n_st), np.inf, dtype=np.float64)
+    elev = np.full((n_slots, n_st), -np.pi / 2, dtype=np.float64)
+    for n, t in enumerate(times):
+        sat_pos = constellation.positions(float(t))             # (V, 3)
+        theta = EARTH_ROTATION_RAD_S * float(t)
+        c, s = np.cos(theta), np.sin(theta)
+        rot = np.array([[c, -s, 0.0], [s, c, 0.0], [0.0, 0.0, 1.0]])
+        gs = gs_ecef @ rot.T                                    # (S, 3) in ECI
+        los = sat_pos[None, :, :] - gs[:, None, :]              # (S, V, 3)
+        rng_m = np.linalg.norm(los, axis=-1)
+        up = gs / np.linalg.norm(gs, axis=-1, keepdims=True)
+        sin_el = np.einsum("svi,si->sv", los, up) / rng_m
+        el = np.arcsin(np.clip(sin_el, -1.0, 1.0))              # (S, V)
+        el_masked = np.where(el >= min_el, el, -np.inf)
+        best = el_masked.argmax(axis=1)                         # (S,)
+        seen = np.isfinite(el_masked[np.arange(n_st), best])
+        ingress[n, seen] = best[seen]
+        uplink[n, seen] = rng_m[np.arange(n_st), best][seen] / SPEED_OF_LIGHT \
+            + tx_s
+        elev[n, seen] = el[np.arange(n_st), best][seen]
+    return GroundSegment(
+        stations=tuple(stations), ingress_sat=ingress, uplink_s=uplink,
+        elevation_rad=elev, min_elevation_deg=min_elevation_deg,
+    )

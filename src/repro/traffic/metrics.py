@@ -1,0 +1,207 @@
+"""Serving metrics, SLOs and saturation sweeps.
+
+TTFT  — time-to-first-token: uplink + ingress hop + prefill (+ queueing).
+TPOT  — time-per-output-token: mean decode-step latency after the first
+        token.
+E2E   — request completion time.
+Goodput — decode tokens/s delivered by served (non-dropped, admitted)
+        requests over the arrival span.
+
+``saturation_sweep`` finds the highest arrival rate at which a plan
+still meets an :class:`SLO`, by Poisson-thinning one request trace with
+*nested* masks (the same uniform draw decides a request's membership at
+every rate, so sweeps are monotone by construction and share the single
+:class:`~repro.traffic.queueing.FleetSim` precompute).
+"""
+from __future__ import annotations
+
+import dataclasses
+import typing
+
+import numpy as np
+
+if typing.TYPE_CHECKING:                              # pragma: no cover
+    from .queueing import FleetSim
+from .requests import RequestBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """A serving service-level objective, checked at a latency quantile."""
+
+    ttft_s: float = 60.0
+    tpot_s: float = 3.0
+    quantile: float = 0.99
+    max_drop: float = 0.01
+
+    def describe(self) -> str:
+        q = int(round(self.quantile * 100))
+        return (f"p{q} TTFT<={self.ttft_s:g}s, p{q} TPOT<={self.tpot_s:g}s, "
+                f"drop<={self.max_drop:.0%}")
+
+
+@dataclasses.dataclass
+class PlanTraffic:
+    """Per-plan request-level outcome of one traffic simulation."""
+
+    plan_name: str
+    active: np.ndarray        # (R,) request participated in this run
+    served: np.ndarray        # (R,) active, admitted, and fully delivered
+    ttft_s: np.ndarray        # (R,) NaN unless served
+    tpot_s: np.ndarray        # (R,) NaN unless served
+    e2e_s: np.ndarray         # (R,) NaN unless served
+    decode_len: np.ndarray    # (R,)
+    station_util: np.ndarray  # (S,) offered utilization per station
+    span_s: float             # arrival span of the active requests
+    token_total_s: np.ndarray  # (M,) per-token latency incl. queueing
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+    @property
+    def drop_rate(self) -> float:
+        n = self.n_active
+        return float(1.0 - self.served.sum() / n) if n else 0.0
+
+    @property
+    def goodput_tok_s(self) -> float:
+        return float(self.decode_len[self.served].sum() / self.span_s)
+
+    @property
+    def offered_rps(self) -> float:
+        return self.n_active / self.span_s
+
+    def quantile(self, which: str, q: float) -> float:
+        arr = {"ttft": self.ttft_s, "tpot": self.tpot_s,
+               "e2e": self.e2e_s}[which][self.served]
+        return float(np.quantile(arr, q)) if len(arr) else float("nan")
+
+    def meets(self, slo: SLO) -> bool:
+        if self.drop_rate > slo.max_drop:
+            return False
+        if not self.served.any():
+            return False
+        return (self.quantile("ttft", slo.quantile) <= slo.ttft_s
+                and self.quantile("tpot", slo.quantile) <= slo.tpot_s)
+
+    def row(self, slo: SLO | None = None) -> dict:
+        """Flat summary dict (one table/JSON row)."""
+        out = {
+            "plan": self.plan_name,
+            "offered_rps": round(self.offered_rps, 4),
+            "goodput_tok_s": round(self.goodput_tok_s, 3),
+            "drop_rate": round(self.drop_rate, 4),
+            "ttft_p50_s": round(self.quantile("ttft", 0.5), 3),
+            "ttft_p99_s": round(self.quantile("ttft", 0.99), 3),
+            "tpot_p50_s": round(self.quantile("tpot", 0.5), 3),
+            "tpot_p99_s": round(self.quantile("tpot", 0.99), 3),
+            "e2e_p99_s": round(self.quantile("e2e", 0.99), 3),
+            "max_util": round(float(self.station_util.max()), 3),
+        }
+        if slo is not None:
+            out["slo_met"] = bool(self.meets(slo))
+        return out
+
+
+@dataclasses.dataclass
+class TrafficResult:
+    """Outcome of one fleet simulation: one :class:`PlanTraffic` per plan
+    of the sweep, plus the shared token bookkeeping the tests pin down."""
+
+    plans: list[PlanTraffic]
+    requests: RequestBatch
+    slots: np.ndarray          # (M,) topology slot per engine token
+    n_bins: int
+    dt_s: float
+
+    def __getitem__(self, i: int) -> PlanTraffic:
+        return self.plans[i]
+
+    def by_name(self, name: str) -> PlanTraffic:
+        for p in self.plans:
+            if p.plan_name == name:
+                return p
+        raise KeyError(name)
+
+    def table(self, slo: SLO | None = None, scenario: str = "") -> list[dict]:
+        rows = []
+        for p in self.plans:
+            row = p.row(slo)
+            if scenario:
+                row = {"scenario": scenario, **row}
+            rows.append(row)
+        return rows
+
+
+def format_table(rows: list[dict], prefix: str = "") -> str:
+    """Fixed-width text table from a list of flat dicts."""
+    if not rows:
+        return prefix + "(no rows)"
+    cols = list(rows[0].keys())
+    widths = {c: max(len(str(c)), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    lines = [" ".join(str(c).ljust(widths[c]) for c in cols)]
+    for r in rows:
+        lines.append(" ".join(str(r.get(c, "")).ljust(widths[c])
+                              for c in cols))
+    return "\n".join(prefix + ln for ln in lines)
+
+
+# --------------------------------------------------------------------- #
+# Saturation sweep
+# --------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class SaturationResult:
+    """Max sustained arrival rate per plan under an SLO."""
+
+    slo: SLO
+    tested_rps: np.ndarray                 # (n_rates,) offered rates
+    met: dict[str, np.ndarray]             # plan -> (n_rates,) bool
+    sustained_rps: dict[str, float]        # plan -> max offered rate met
+    results: list                          # per-rate TrafficResult
+
+    def capacity_ratio(self, a: str, b: str) -> float:
+        """Sustained-capacity ratio a/b (inf if b sustains nothing)."""
+        num, den = self.sustained_rps[a], self.sustained_rps[b]
+        return float(num / den) if den > 0 else float("inf")
+
+
+def saturation_sweep(
+    sim: "FleetSim",
+    slo: SLO,
+    rng: np.random.Generator,
+    fractions: np.ndarray | None = None,
+) -> SaturationResult:
+    """Thin the simulator's request trace to each fraction and find the
+    highest offered rate per plan that still meets the SLO.
+
+    The trace held by ``sim`` is treated as the 100% (envelope) rate; a
+    single uniform draw per request makes the thinned sets nested, so a
+    plan's pass/fail curve is evaluated on monotone workloads and
+    "sustained" is the largest tested rate whose run met the SLO.
+    """
+    if fractions is None:
+        fractions = np.array([0.125, 0.25, 0.5, 0.75, 1.0])
+    fractions = np.sort(np.asarray(fractions, dtype=np.float64))
+    u = rng.random(sim.requests.n_requests)
+
+    results, rates = [], []
+    met: dict[str, list[bool]] = {}
+    for f in fractions:
+        res = sim.run(active=u < f)
+        results.append(res)
+        rates.append(res.plans[0].offered_rps if res.plans[0].n_active
+                     else 0.0)
+        for p in res.plans:
+            met.setdefault(p.plan_name, []).append(p.meets(slo))
+
+    rates_arr = np.asarray(rates)
+    met_arr = {k: np.asarray(v) for k, v in met.items()}
+    sustained = {}
+    for name, ok in met_arr.items():
+        sustained[name] = float(rates_arr[ok].max()) if ok.any() else 0.0
+    return SaturationResult(slo=slo, tested_rps=rates_arr, met=met_arr,
+                            sustained_rps=sustained, results=results)

@@ -1,0 +1,596 @@
+"""Discrete-time per-satellite service model for request-level serving.
+
+Every satellite a plan touches is a FIFO work queue: the L gateway
+satellites (attention + gating + lm-head service) and the per-layer
+expert satellites (FFN service; colocated experts share one queue — the
+queue-theoretic face of the Eq. 43 contention term).  The simulator is
+deliberately split into
+
+1. a **base schedule** — per-token zero-load trajectories straight from
+   the batched plan-evaluation engine (``core.engine.evaluate_plans``
+   with wall-clock-derived slots and shared expert draws), so at zero
+   load the traffic subsystem reproduces the engine exactly;
+2. a **fleet queue kernel** — one ``lax.scan`` over time bins with the
+   (plans, stations) backlog matrix as carry, vectorized over every
+   plan of the sweep.  Backlogs are capped (finite buffers: overflow =
+   backpressure drop) and each arrival's waiting time is the backlog it
+   finds (exact for Poisson arrivals by PASTA, up to the O(dt) binning
+   error the M/D/1 test bounds against Pollaczek-Khinchine);
+3. a **closed-loop fixed point** — waits delay a token's delivery, and
+   delivery times gate the autoregressive chain, so the schedule and
+   the queue state are mutually dependent.  ``run`` iterates
+   schedule -> bin -> scan -> gather a configurable number of times
+   (``QueueConfig.iterations``): iteration 1 is the open-loop
+   approximation, further iterations let congested tokens arrive
+   *after* the backlog they caused has drained, which removes the
+   open-loop bias of billing one backlog episode to every token of a
+   request.  Deposits larger than one bin of service are spread over
+   consecutive bins (chunked-prefill semantics, like production
+   continuous-batching schedulers).
+
+KV-cache memory is an admission cap: a request arriving when more than
+``kv_slots`` requests are in flight is rejected (its offered load still
+occupies the queues — rejection happens at the ingress gateway after
+the uplink, the conservative accounting).
+
+``FleetSim`` precomputes everything rate-independent once (engine pass,
+station indices, chunk layout) so a saturation sweep replays only the
+binning + scan + gather per tested rate — no Python loop over requests
+or tokens anywhere on the hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PlanBatch, evaluate_plans, ingress_offsets
+from repro.core.activation import ActivationModel
+from repro.core.latency import ComputeConfig, TopologySample
+from repro.core.placement import MultiExpertPlan
+from repro.core.workload import MoEWorkload
+
+from .ground import GroundSegment
+from .metrics import PlanTraffic, TrafficResult
+from .requests import RequestBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueConfig:
+    """Discrete-time queueing parameters.
+
+    dt_s:          time-bin width.  Per-visit service times below dt
+                   never self-queue; the binning error is O(dt).
+    buffer_s:      per-station backlog cap in seconds of work; arrivals
+                   overflowing it are dropped (backpressure).
+    kv_slots:      max requests concurrently holding KV cache (0 = no
+                   admission cap).
+    slot_period_s: wall-clock seconds per topology slot (ties tokens to
+                   the constellation's time-varying graph; default is a
+                   550 km LEO period split over 20 slots).
+    tail_s:        extra horizon past the last zero-load completion so
+                   in-flight requests can drain.  Congestion-stretched
+                   schedules beyond it clip into the final bin (such
+                   runs are deep in SLO failure anyway).
+    iterations:    schedule<->queue fixed-point iterations (1 = open
+                   loop).
+    """
+
+    dt_s: float = 0.05
+    buffer_s: float = 10.0
+    kv_slots: int = 0
+    slot_period_s: float = 300.0
+    tail_s: float = 120.0
+    iterations: int = 3
+
+
+# --------------------------------------------------------------------- #
+# The fleet queue kernel
+# --------------------------------------------------------------------- #
+
+
+@jax.jit
+def _fleet_queue_scan(work, cap, dt):
+    """Scan the (P, S) backlog matrix over T time bins.
+
+    work: (P, S, T) seconds of work arriving per bin.
+    cap:  scalar or (S,) backlog cap in seconds.
+    Returns (wait, dropped), both (P, S, T): ``wait[..., t]`` is the
+    backlog an arrival in bin t finds (work deposited in bin t is seen
+    by later bins only); ``dropped`` is the overflow discarded per bin.
+    """
+
+    def step(backlog, w_t):
+        wait = backlog
+        total = backlog + w_t
+        dropped = jnp.maximum(total - cap, 0.0)
+        backlog = jnp.maximum(jnp.minimum(total, cap) - dt, 0.0)
+        return backlog, (wait, dropped)
+
+    p, s, _ = work.shape
+    backlog0 = jnp.zeros((p, s), dtype=work.dtype)
+    _, (wait, dropped) = jax.lax.scan(step, backlog0,
+                                      jnp.moveaxis(work, 2, 0))
+    return jnp.moveaxis(wait, 0, 2), jnp.moveaxis(dropped, 0, 2)
+
+
+def station_waiting_times(
+    arrival_s: np.ndarray,
+    service_s: np.ndarray | float,
+    dt_s: float,
+    buffer_s: float = np.inf,
+    horizon_s: float | None = None,
+) -> np.ndarray:
+    """Per-arrival waiting times at one FIFO station via the fleet kernel.
+
+    Runs the same discrete-time scan the fleet simulator uses (P=1, S=1)
+    and refines the bin-resolution backlog with the exact within-bin
+    Lindley correction: an arrival at offset ``delta`` into bin b waits
+
+        max(0, backlog_at_bin_start + work_of_earlier_same_bin_arrivals
+               - delta),
+
+    since the server drains continuously through the bin.  This is the
+    single-station reference the M/D/1 Pollaczek-Khinchine test checks.
+    """
+    t = np.asarray(arrival_s, dtype=np.float64)
+    if len(t) and not (np.diff(t) >= 0).all():
+        raise ValueError("arrivals must be sorted")
+    s = np.broadcast_to(np.asarray(service_s, dtype=np.float64), t.shape)
+    horizon = (float(t[-1]) if len(t) else 0.0) \
+        if horizon_s is None else horizon_s
+    n_bins = int(np.floor(horizon / dt_s)) + 2
+    bins = np.minimum((t / dt_s).astype(np.int64), n_bins - 1)
+
+    work = np.bincount(bins, weights=s, minlength=n_bins)[None, None, :]
+    wait_bins = np.asarray(
+        _fleet_queue_scan(jnp.asarray(work), jnp.asarray(buffer_s), dt_s)[0]
+    )[0, 0]
+
+    # Within-bin FIFO: prior work of same-bin arrivals, minus the time
+    # already elapsed inside the bin.
+    cs = np.cumsum(s)
+    first = np.searchsorted(bins, bins, side="left")
+    prior = (cs - s) - (cs[first] - s[first])
+    delta = t - bins * dt_s
+    return np.maximum(wait_bins[bins] + prior - delta, 0.0)
+
+
+# --------------------------------------------------------------------- #
+# Helpers
+# --------------------------------------------------------------------- #
+
+
+def _exclusive_cumsum(a: np.ndarray, axis: int) -> np.ndarray:
+    out = np.cumsum(a, axis=axis)
+    return out - a
+
+
+def _colocation_slots(expert_sats: np.ndarray) -> np.ndarray:
+    """(P, L, I) canonical expert index per (plan, layer, expert):
+    colocated experts map to the first expert on the same satellite, so
+    they share one service queue."""
+    eq = expert_sats[..., :, None] == expert_sats[..., None, :]  # (P,L,I,I)
+    return eq.argmax(axis=-1)
+
+
+def _segment_any(flags: np.ndarray, seg_ids: np.ndarray,
+                 n_seg: int) -> np.ndarray:
+    """OR-reduce boolean ``flags`` (P, E) over segments of the last axis."""
+    p, _ = flags.shape
+    idx = np.arange(p)[:, None] * n_seg + seg_ids[None, :]
+    hits = np.bincount(idx.ravel(), weights=flags.ravel().astype(np.float64),
+                       minlength=p * n_seg)
+    return hits.reshape(p, n_seg) > 0.0
+
+
+# --------------------------------------------------------------------- #
+# The fleet simulator
+# --------------------------------------------------------------------- #
+
+
+class FleetSim:
+    """Request-level serving simulator for a sweep of placement plans.
+
+    Construction does all the rate-independent precompute: one batched
+    engine pass over R prefill macro-tokens + N decode tokens (shared
+    slots/draws across plans — common random numbers), the zero-load
+    per-layer costs, every queue event's (plan, station, request, work)
+    and the chunk layout.  ``run`` then iterates the schedule/queue
+    fixed point for any request-activity mask — the cheap inner call of
+    a saturation sweep.
+    """
+
+    def __init__(
+        self,
+        plans: list,
+        topo: TopologySample,
+        activation: ActivationModel,
+        workload: MoEWorkload,
+        compute: ComputeConfig,
+        requests: RequestBatch,
+        rng: np.random.Generator,
+        qcfg: QueueConfig = QueueConfig(),
+        ground: GroundSegment | None = None,
+        ctx_len: int = 1024,
+        eta: float = 1.0,
+        include_lm_head: bool = True,
+        batch: PlanBatch | None = None,
+    ):
+        self.plans = list(plans)
+        self.requests = requests
+        self.qcfg = qcfg
+        self.activation = activation
+
+        P = len(self.plans)
+        R = requests.n_requests
+        if R == 0:
+            raise ValueError("empty request trace")
+        L = activation.n_layers
+        n_exp = activation.n_experts
+        K = activation.top_k
+        N = requests.total_decode_tokens
+        M = R + N
+        self.n_plans, self.n_requests = P, R
+        self.n_decode_tokens, self.n_tokens = N, M
+        self.n_layers, self.n_stations = L, L + L * n_exp
+
+        tok_req = requests.request_of_token()                    # (N,)
+        self.tok_req = tok_req
+
+        # --- slots from wall-clock time (one slot per request: request
+        # lifetimes are seconds, a topology slot is minutes) ---------------
+        slot_r = ((requests.arrival_s // qcfg.slot_period_s)
+                  % topo.n_slots).astype(np.int64)
+        self.slots = np.concatenate([slot_r, slot_r[tok_req]])   # (M,)
+
+        # --- ingress mapping ----------------------------------------------
+        if batch is None:
+            batch = PlanBatch.from_plans(self.plans, topo, eta=eta)
+        self.batch = batch
+        if ground is not None:
+            ing_sat, uplink = ground.for_requests(slot_r, requests.station)
+            reachable = ing_sat >= 0
+            ing_off = ingress_offsets(batch, slot_r,
+                                      np.where(reachable, ing_sat, 0))
+            ing_off = np.where(reachable[None, :], ing_off, np.inf)
+        else:
+            uplink = np.zeros(R)
+            ing_off = np.zeros((P, R))
+        self.fail_ingress = ~np.isfinite(ing_off)                 # (P, R)
+        self.ingress_extra = uplink[None, :] + np.where(
+            self.fail_ingress, 0.0, ing_off)                      # (P, R)
+
+        # --- engine pass: base (zero-load) per-token latencies -------------
+        draws = np.stack([activation.sample(layer, rng, M)
+                          for layer in range(L)])                 # (L, M, K)
+        self.draws = draws
+        self.engine_results = evaluate_plans(
+            self.plans, topo, activation, workload, compute, rng,
+            n_tokens=M, ctx_len=ctx_len, include_lm_head=include_lm_head,
+            eta=eta, batch=batch, slots=self.slots, draws=draws)
+        token_lat = np.stack(
+            [r.token_latency_s for r in self.engine_results])     # (P, M)
+        layer_lat = np.stack(
+            [r.layer_latency_s for r in self.engine_results])     # (P, M, L)
+
+        # Undeliverable tokens (unreachable satellite in that slot) fail
+        # the whole request; zero them so the segmented cumsums of the
+        # *other* requests sharing the token axis stay finite.
+        self.nan_tok = ~np.isfinite(token_lat)
+        token_lat = np.where(self.nan_tok, 0.0, token_lat)
+        layer_lat = np.where(np.isfinite(layer_lat), layer_lat, 0.0)
+
+        t_gateway = compute.latency_s(workload.gateway_flops(ctx_len))
+        t_expert = compute.latency_s(workload.expert_flops)
+        t_head = (compute.latency_s(workload.lm_head_flops)
+                  if include_lm_head else 0.0)
+        self.t_gateway, self.t_expert = t_gateway, t_expert
+
+        # --- zero-load per-layer costs -------------------------------------
+        # Prefill macro-token: the engine token plus, per layer, the
+        # incremental pipelined compute of the remaining prompt tokens
+        # (the batch shares the network hops; experts each absorb a K/I
+        # share of the FFN work in parallel).
+        incr_layer = t_gateway + t_expert * K / n_exp
+        extra_layer = (requests.prompt_len - 1).astype(np.float64) \
+            * incr_layer                                          # (R,)
+
+        self.gw_service = np.concatenate([
+            requests.prompt_len.astype(np.float64) * t_gateway,
+            np.full(N, t_gateway),
+        ])                                                        # (M,)
+        self.eff_layer = layer_lat.copy()                         # (P, M, L)
+        self.eff_layer[:, :R, :] += extra_layer[None, :, None]
+        self.tok_base = token_lat.copy()                          # (P, M)
+        self.tok_base[:, :R] += L * extra_layer[None, :]
+        self.start_pref = requests.arrival_s[None, :] \
+            + self.ingress_extra                                  # (P, R)
+        self.first_tok = np.cumsum(requests.decode_len) \
+            - requests.decode_len                                 # (R,)
+
+        # --- queue events: (plan, station, request, work) ------------------
+        # Station layout per plan: [0, L) gateways, then L blocks of I
+        # expert queues keyed by (layer, canonical colocated expert).
+        expert_sats = np.stack([np.asarray(p.expert_sats)
+                                for p in self.plans])             # (P, L, I)
+        slot_of = _colocation_slots(expert_sats)                  # (P, L, I)
+        self.slot_of = slot_of
+        eta_p = np.array([eta if isinstance(p, MultiExpertPlan) else 1.0
+                          for p in self.plans])                   # (P,)
+        lidx = np.arange(L)[:, None, None]                        # (L, 1, 1)
+
+        # Gateway work: every token visits every gateway; lm-head work on
+        # the last gateway.
+        gw_station = np.broadcast_to(np.arange(L)[None, None, :], (P, M, L))
+        gw_work = np.broadcast_to(self.gw_service[None, :, None],
+                                  (P, M, L)).copy()
+        gw_work[:, :, L - 1] += t_head
+        gw_req = np.concatenate([np.arange(R), tok_req])          # (M,)
+
+        # Decode expert work: the engine's own draws, scattered onto the
+        # colocated queue; colocation multiplies the deposited work (the
+        # Eq. 43 q factor) and eta scales the shared-compute efficiency.
+        d_dec = draws[:, R:, :]                                   # (L, N, K)
+        dec_exp_station = L + lidx * n_exp \
+            + slot_of[:, lidx, d_dec]                             # (P,L,N,K)
+        dec_exp_work = np.broadcast_to(
+            (t_expert / eta_p)[:, None, None, None],
+            dec_exp_station.shape)
+
+        # Prefill expert work: the whole prompt hits every expert of the
+        # layer in proportion to its activation probability (fluid split
+        # of the batch), deposited at the prefill token's expert visit.
+        probs = activation.all_probs()                            # (L, I)
+        pre_exp_station = np.broadcast_to(
+            (L + np.arange(L)[None, :, None] * n_exp
+             + slot_of)[:, None, :, :], (P, R, L, n_exp))
+        pre_exp_work = np.broadcast_to(
+            requests.prompt_len[None, :, None, None]
+            * probs[None, None, :, :] * t_expert
+            / eta_p[:, None, None, None], (P, R, L, n_exp))
+
+        ev_station = np.concatenate([
+            gw_station.reshape(P, -1),
+            dec_exp_station.reshape(P, -1),
+            pre_exp_station.reshape(P, -1),
+        ], axis=1)                                                # (P, E)
+        ev_work = np.concatenate([
+            gw_work.reshape(P, -1),
+            dec_exp_work.reshape(P, -1),
+            pre_exp_work.reshape(P, -1),
+        ], axis=1)                                                # (P, E)
+        ev_req = np.concatenate([
+            np.broadcast_to(gw_req[:, None], (M, L)).ravel(),
+            np.broadcast_to(tok_req[None, :, None], (L, N, K)).ravel(),
+            np.broadcast_to(np.arange(R)[:, None, None],
+                            (R, L, n_exp)).ravel(),
+        ])                                                        # (E,)
+
+        # Wait-gather stations: per (plan, token, layer) the gateway and
+        # the K expert branches (max over branches joins the layer
+        # critical path, mirroring the engine's max over experts).
+        self.gather_gw_station = gw_station                       # (P, M, L)
+        self.gather_exp_station = np.moveaxis(
+            L + lidx * n_exp + slot_of[:, lidx, draws], 1, 2)     # (P,M,L,K)
+
+        # Chunked service (continuous-batching semantics): a deposit
+        # larger than one bin of capacity is spread over consecutive
+        # bins at the service rate, so a long prefill does not
+        # head-of-line-block every token behind one bin.  The chunk
+        # layout depends only on work, so it is precomputed; per run
+        # only the chunk *bins* are recomputed from the schedule.
+        dt = qcfg.dt_s
+        w_flat = ev_work.ravel()
+        n_ch = np.maximum(np.ceil(w_flat / dt).astype(np.int64), 1)
+        self._rep = np.repeat(np.arange(w_flat.size), n_ch)
+        self._offs = np.arange(self._rep.size) \
+            - np.repeat(np.cumsum(n_ch) - n_ch, n_ch)
+        self.ev_chunk_work = np.minimum(w_flat[self._rep]
+                                        - self._offs * dt, dt)
+        self.ev_chunk_station = ev_station.ravel()[self._rep]
+        self.ev_chunk_plan = np.broadcast_to(
+            np.arange(P)[:, None], ev_work.shape).ravel()[self._rep]
+        self.ev_chunk_req = np.broadcast_to(
+            ev_req[None, :], ev_work.shape).ravel()[self._rep]
+        self._n_events = ev_work.size
+
+        # --- time bins (fixed across runs so the scan compiles once) ------
+        start_dec0, _, c00 = self._chain(self.tok_base)
+        end0 = start_dec0 + self.tok_base[:, R:]
+        horizon = max(float(requests.arrival_s.max()),
+                      float(np.where(np.isfinite(end0), end0, 0.0).max()),
+                      float(np.where(np.isfinite(c00), c00, 0.0).max()))
+        self.n_bins = int(np.ceil((horizon + qcfg.tail_s) / qcfg.dt_s)) + 1
+        if self.n_bins > 2_000_000:
+            raise ValueError(
+                f"{self.n_bins} time bins — raise dt_s or shrink the horizon")
+
+    # ----------------------------------------------------------------- #
+
+    def _chain(self, tok_total: np.ndarray):
+        """Autoregressive chaining: (decode token starts (P, N), their
+        per-request inclusive cumsums (P, N), prefill completion (P, R))."""
+        R = self.n_requests
+        dec = tok_total[:, R:]
+        cs = np.cumsum(dec, axis=1)
+        base = (cs - dec)[:, self.first_tok][:, self.tok_req]
+        seg_excl = (cs - dec) - base
+        c0 = self.start_pref + tok_total[:, :R]
+        start_dec = c0[:, self.tok_req] + seg_excl
+        return start_dec, cs - base, c0
+
+    def _schedule(self, gw_wait: np.ndarray, ex_max: np.ndarray):
+        """Wait-augmented schedule: per-(plan, token, layer) gateway and
+        expert arrival times, plus per-token total latencies."""
+        lay_cost = self.eff_layer + gw_wait + ex_max              # (P, M, L)
+        tok_total = self.tok_base + gw_wait.sum(2) + ex_max.sum(2)
+        start_dec, seg_incl, c0 = self._chain(tok_total)
+        start_all = np.concatenate([self.start_pref, start_dec], axis=1)
+        layer_arr = start_all[:, :, None] + _exclusive_cumsum(lay_cost, 2)
+        exp_arr = layer_arr + gw_wait + self.gw_service[None, :, None]
+        return layer_arr, exp_arr, tok_total, seg_incl, c0
+
+    def _to_bins(self, times: np.ndarray):
+        finite = np.isfinite(times)
+        b = np.where(
+            finite,
+            np.clip((np.where(finite, times, 0.0) / self.qcfg.dt_s)
+                    .astype(np.int64), 0, self.n_bins - 1), 0)
+        return b, finite
+
+    def _bin_work(self, layer_arr, exp_arr, active):
+        """Offered work (P, S, T) for the current schedule + mask."""
+        P, R = self.n_plans, self.n_requests
+        S, T = self.n_stations, self.n_bins
+        ev_time = np.concatenate([
+            layer_arr.reshape(P, -1),
+            np.broadcast_to(
+                np.moveaxis(exp_arr[:, R:, :], 2, 1)[..., None],
+                (P, self.n_layers, self.n_decode_tokens,
+                 self.activation.top_k)).reshape(P, -1),
+            np.broadcast_to(
+                exp_arr[:, :R, :, None],
+                (P, R, self.n_layers, self.activation.n_experts))
+            .reshape(P, -1),
+        ], axis=1).ravel()                                        # (P*E,)
+        base_bin, finite = self._to_bins(ev_time)
+        bins = np.minimum(base_bin[self._rep] + self._offs, T - 1)
+        w = self.ev_chunk_work * finite[self._rep] \
+            * active[self.ev_chunk_req]
+        flat = (self.ev_chunk_plan * S + self.ev_chunk_station) * T + bins
+        return np.bincount(flat, weights=w,
+                           minlength=P * S * T).reshape(P, S, T)
+
+    def _gather(self, wait, overload, layer_arr, exp_arr):
+        """Per-(plan, token, layer) gateway wait, expert branch-max wait,
+        and overload flags, read at the schedule's arrival bins."""
+        p_idx = np.arange(self.n_plans)[:, None, None]
+        gw_b, gw_fin = self._to_bins(layer_arr)
+        gw_wait = np.where(gw_fin,
+                           wait[p_idx, self.gather_gw_station, gw_b], 0.0)
+        gw_over = gw_fin & overload[p_idx, self.gather_gw_station, gw_b]
+        ex_b, ex_fin = self._to_bins(exp_arr)
+        ex_b4, ex_f4 = ex_b[..., None], ex_fin[..., None]
+        ex_wait = np.where(
+            ex_f4, wait[p_idx[..., None], self.gather_exp_station, ex_b4],
+            0.0)
+        ex_over = ex_f4 & \
+            overload[p_idx[..., None], self.gather_exp_station, ex_b4]
+        return gw_wait, ex_wait.max(axis=3), gw_over, ex_over.any(axis=3)
+
+    # ----------------------------------------------------------------- #
+
+    def run(self, active: np.ndarray | None = None,
+            zero_load: bool = False) -> TrafficResult:
+        """Simulate with an optional per-request activity mask (Poisson
+        thinning for rate sweeps) and return per-plan traffic metrics.
+
+        ``zero_load`` skips the queue scan entirely (all waits zero):
+        the infinite-capacity reference whose latencies are exactly the
+        engine's — the natural anchor for relative-headroom SLOs.
+        """
+        qcfg = self.qcfg
+        req = self.requests
+        P, R = self.n_plans, self.n_requests
+        M, L = self.n_tokens, self.n_layers
+
+        if active is None:
+            active = np.ones(R, dtype=bool)
+        active = np.asarray(active, dtype=bool)
+
+        gw_wait = np.zeros((P, M, L))
+        ex_max = np.zeros((P, M, L))
+        gw_over = np.zeros((P, M, L), dtype=bool)
+        ex_over = np.zeros((P, M, L), dtype=bool)
+        n_iter = 1 if zero_load else max(1, qcfg.iterations)
+        for _ in range(n_iter):
+            layer_arr, exp_arr, tok_total, seg_incl, c0 = \
+                self._schedule(gw_wait, ex_max)
+            work = self._bin_work(layer_arr, exp_arr, active)
+            if zero_load:
+                break
+            wait, dropped = _fleet_queue_scan(
+                jnp.asarray(work), jnp.asarray(qcfg.buffer_s), qcfg.dt_s)
+            wait = np.asarray(wait)
+            overload = np.asarray(dropped) > 0.0
+            gw_wait, ex_max, gw_over, ex_over = self._gather(
+                wait, overload, layer_arr, exp_arr)
+        # Fold the final gather into the schedule once more so reported
+        # latencies reflect the waits actually found on the last pass.
+        layer_arr, exp_arr, tok_total, seg_incl, c0 = \
+            self._schedule(gw_wait, ex_max)
+
+        # --- request metrics -----------------------------------------------
+        last_tok = self.first_tok + req.decode_len - 1
+        ttft = self.ingress_extra + tok_total[:, :R]              # (P, R)
+        e2e = ttft + seg_incl[:, last_tok]                        # (P, R)
+
+        tok_over = gw_over.any(axis=2) | ex_over.any(axis=2)      # (P, M)
+        fail_tok = self.nan_tok | tok_over
+        failed = self.fail_ingress | fail_tok[:, :R] \
+            | _segment_any(fail_tok[:, R:], self.tok_req, R)      # (P, R)
+
+        # KV admission cap: reject arrivals that would exceed the
+        # in-flight budget (first-order: in-flight counted over all
+        # offered requests).
+        admitted = np.ones((P, R), dtype=bool)
+        if qcfg.kv_slots > 0:
+            comp = req.arrival_s[None, :] + np.nan_to_num(
+                e2e, nan=np.inf, posinf=np.inf)
+            comp = np.where(active[None, :], comp, -np.inf)
+            n_inactive = int((~active).sum())
+            arrived = np.cumsum(active)                           # (R,)
+            for p in range(P):                                    # P is small
+                done = np.searchsorted(np.sort(comp[p]), req.arrival_s,
+                                       side="right") - n_inactive
+                admitted[p] = (arrived - done) <= qcfg.kv_slots
+        failed |= ~admitted
+
+        served = active[None, :] & ~failed                        # (P, R)
+        span = max(float(req.arrival_s[active].max()
+                         - req.arrival_s[active].min()), qcfg.dt_s) \
+            if active.any() else qcfg.dt_s
+        # Offered utilization over the arrival window (> 1 = overload).
+        util = work.sum(axis=2) / span                            # (P, S)
+
+        plans_out = []
+        for p in range(P):
+            with np.errstate(invalid="ignore"):
+                tpot = (e2e[p] - ttft[p]) / req.decode_len
+            plans_out.append(PlanTraffic(
+                plan_name=self.batch.names[p],
+                active=active.copy(),
+                served=served[p],
+                ttft_s=np.where(served[p], ttft[p], np.nan),
+                tpot_s=np.where(served[p], tpot, np.nan),
+                e2e_s=np.where(served[p], e2e[p], np.nan),
+                decode_len=req.decode_len,
+                station_util=util[p],
+                span_s=span,
+                token_total_s=tok_total[p],
+            ))
+        return TrafficResult(plans=plans_out, requests=req,
+                             slots=self.slots, n_bins=self.n_bins,
+                             dt_s=qcfg.dt_s)
+
+
+def simulate_traffic(
+    plans: list,
+    topo: TopologySample,
+    activation: ActivationModel,
+    workload: MoEWorkload,
+    compute: ComputeConfig,
+    requests: RequestBatch,
+    rng: np.random.Generator,
+    qcfg: QueueConfig = QueueConfig(),
+    ground: GroundSegment | None = None,
+    **kwargs,
+) -> TrafficResult:
+    """One-shot convenience wrapper: build a :class:`FleetSim` and run it
+    with every request active."""
+    sim = FleetSim(plans, topo, activation, workload, compute, requests,
+                   rng, qcfg=qcfg, ground=ground, **kwargs)
+    return sim.run()

@@ -1,0 +1,226 @@
+"""Request arrival processes for constellation-scale serving.
+
+A :class:`RequestBatch` is the tensor form of a request trace: arrival
+times, prompt/decode lengths and the originating ground station, all as
+flat arrays so the queueing layer never loops over requests.
+
+Arrival models
+--------------
+* homogeneous Poisson (exponential inter-arrival gaps),
+* non-homogeneous Poisson via thinning — diurnal sinusoidal modulation
+  (regional phase offsets: each ground station peaks at its local
+  daytime) and transient regional hotspots (Gaussian bump on one
+  station's rate),
+* heavy-tail lengths: lognormal prompt lengths, geometric decode
+  lengths, both clipped — the standard shape of LLM serving traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestBatch:
+    """A trace of R requests, sorted by arrival time."""
+
+    arrival_s: np.ndarray     # (R,) float, sorted ascending
+    prompt_len: np.ndarray    # (R,) int >= 1
+    decode_len: np.ndarray    # (R,) int >= 1
+    station: np.ndarray       # (R,) int ground-station index
+
+    def __post_init__(self):
+        self.arrival_s = np.asarray(self.arrival_s, dtype=np.float64)
+        self.prompt_len = np.asarray(self.prompt_len, dtype=np.int64)
+        self.decode_len = np.asarray(self.decode_len, dtype=np.int64)
+        self.station = np.asarray(self.station, dtype=np.int64)
+        if not (np.diff(self.arrival_s) >= 0).all():
+            raise ValueError("arrivals must be sorted by time")
+        if (self.prompt_len < 1).any() or (self.decode_len < 1).any():
+            raise ValueError("prompt/decode lengths must be >= 1")
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.arrival_s)
+
+    @property
+    def total_decode_tokens(self) -> int:
+        return int(self.decode_len.sum())
+
+    @property
+    def horizon_s(self) -> float:
+        return float(self.arrival_s[-1]) if self.n_requests else 0.0
+
+    def subset(self, mask: np.ndarray) -> "RequestBatch":
+        """Thinned copy (Poisson thinning: a Bernoulli-kept subset of a
+        Poisson trace is Poisson at the scaled rate)."""
+        mask = np.asarray(mask, dtype=bool)
+        return RequestBatch(
+            arrival_s=self.arrival_s[mask], prompt_len=self.prompt_len[mask],
+            decode_len=self.decode_len[mask], station=self.station[mask],
+        )
+
+    def request_of_token(self) -> np.ndarray:
+        """(total_decode_tokens,) request index of every decode token."""
+        return np.repeat(np.arange(self.n_requests), self.decode_len)
+
+
+# --------------------------------------------------------------------- #
+# Arrival-time processes
+# --------------------------------------------------------------------- #
+
+
+def poisson_arrivals(rate_rps: float, horizon_s: float,
+                     rng: np.random.Generator) -> np.ndarray:
+    """Homogeneous Poisson arrival times on [0, horizon)."""
+    if rate_rps <= 0 or horizon_s <= 0:
+        return np.empty(0, dtype=np.float64)
+    # Draw ~N + 5 sigma gaps so a second draw is almost never needed.
+    n_hint = int(rate_rps * horizon_s + 5.0 * np.sqrt(rate_rps * horizon_s) + 10)
+    gaps = rng.exponential(1.0 / rate_rps, size=n_hint)
+    t = np.cumsum(gaps)
+    while t[-1] < horizon_s:                       # pragma: no cover - rare
+        extra = rng.exponential(1.0 / rate_rps, size=n_hint)
+        t = np.concatenate([t, t[-1] + np.cumsum(extra)])
+    return t[t < horizon_s]
+
+
+def diurnal_rate(t: np.ndarray, base_rps: float, amplitude: float,
+                 period_s: float, phase: float = 0.0) -> np.ndarray:
+    """rate(t) = base * (1 + amplitude * sin(2 pi t / period + phase)),
+    clipped at zero.  ``amplitude`` in [0, 1] keeps the rate nonnegative."""
+    t = np.asarray(t, dtype=np.float64)
+    r = base_rps * (1.0 + amplitude * np.sin(2.0 * np.pi * t / period_s + phase))
+    return np.maximum(r, 0.0)
+
+
+def hotspot_rate(t: np.ndarray, base_rps: float, boost: float,
+                 center_s: float, width_s: float) -> np.ndarray:
+    """rate(t) = base * (1 + boost * exp(-(t-center)^2 / 2 width^2)) — a
+    transient regional surge (breaking-news / flash-crowd shape)."""
+    t = np.asarray(t, dtype=np.float64)
+    return base_rps * (1.0 + boost * np.exp(-0.5 * ((t - center_s) / width_s) ** 2))
+
+
+def thinned_arrivals(rate_fn, rate_max_rps: float, horizon_s: float,
+                     rng: np.random.Generator) -> np.ndarray:
+    """Non-homogeneous Poisson via Lewis-Shedler thinning: draw at the
+    envelope rate, keep each arrival with prob rate(t)/rate_max."""
+    t = poisson_arrivals(rate_max_rps, horizon_s, rng)
+    if len(t) == 0:
+        return t
+    keep = rng.random(len(t)) < np.asarray(rate_fn(t)) / rate_max_rps
+    return t[keep]
+
+
+# --------------------------------------------------------------------- #
+# Length distributions
+# --------------------------------------------------------------------- #
+
+
+def sample_prompt_lens(n: int, rng: np.random.Generator,
+                       median: int = 256, sigma: float = 1.0,
+                       max_len: int = 4096) -> np.ndarray:
+    """Lognormal prompt lengths (heavy right tail), clipped to [1, max]."""
+    raw = rng.lognormal(mean=np.log(max(median, 1)), sigma=sigma, size=n)
+    return np.clip(raw.astype(np.int64), 1, max_len)
+
+
+def sample_decode_lens(n: int, rng: np.random.Generator,
+                       mean: int = 64, max_len: int = 1024) -> np.ndarray:
+    """Geometric decode lengths (memoryless stop decision per token),
+    clipped to [1, max]."""
+    raw = rng.geometric(1.0 / max(mean, 1), size=n)
+    return np.clip(raw.astype(np.int64), 1, max_len)
+
+
+# --------------------------------------------------------------------- #
+# Full trace sampling
+# --------------------------------------------------------------------- #
+
+
+def sample_requests(
+    rng: np.random.Generator,
+    rate_rps: float,
+    horizon_s: float,
+    n_stations: int,
+    station_weights: np.ndarray | None = None,
+    arrival: str = "poisson",
+    diurnal_amplitude: float = 0.6,
+    diurnal_period_s: float = 86400.0,
+    station_phases: np.ndarray | None = None,
+    hotspot_station: int = 0,
+    hotspot_boost: float = 4.0,
+    hotspot_center_s: float | None = None,
+    hotspot_width_s: float | None = None,
+    prompt_median: int = 256,
+    prompt_sigma: float = 1.0,
+    prompt_max: int = 4096,
+    decode_mean: int = 64,
+    decode_max: int = 1024,
+) -> RequestBatch:
+    """Sample a full request trace.
+
+    ``arrival`` is one of:
+
+    * ``"poisson"`` — homogeneous, stations weighted by ``station_weights``;
+    * ``"diurnal"`` — per-station sinusoidal modulation, each station
+      phase-shifted (``station_phases``, default evenly spread over 2 pi
+      like time zones around the globe);
+    * ``"hotspot"`` — homogeneous everywhere plus a Gaussian surge on
+      ``hotspot_station`` (``boost`` x base at the peak).
+    """
+    weights = (np.full(n_stations, 1.0 / n_stations)
+               if station_weights is None
+               else np.asarray(station_weights, dtype=np.float64))
+    weights = weights / weights.sum()
+    per_station_rate = rate_rps * weights
+
+    times, stations = [], []
+    if arrival == "poisson":
+        for s in range(n_stations):
+            t = poisson_arrivals(per_station_rate[s], horizon_s, rng)
+            times.append(t)
+            stations.append(np.full(len(t), s, dtype=np.int64))
+    elif arrival == "diurnal":
+        phases = (np.linspace(0.0, 2.0 * np.pi, n_stations, endpoint=False)
+                  if station_phases is None else np.asarray(station_phases))
+        for s in range(n_stations):
+            env = per_station_rate[s] * (1.0 + diurnal_amplitude)
+            t = thinned_arrivals(
+                lambda tt, s=s: diurnal_rate(tt, per_station_rate[s],
+                                             diurnal_amplitude,
+                                             diurnal_period_s, phases[s]),
+                env, horizon_s, rng)
+            times.append(t)
+            stations.append(np.full(len(t), s, dtype=np.int64))
+    elif arrival == "hotspot":
+        center = horizon_s / 2.0 if hotspot_center_s is None else hotspot_center_s
+        width = horizon_s / 8.0 if hotspot_width_s is None else hotspot_width_s
+        for s in range(n_stations):
+            if s == hotspot_station:
+                env = per_station_rate[s] * (1.0 + hotspot_boost)
+                t = thinned_arrivals(
+                    lambda tt: hotspot_rate(tt, per_station_rate[s],
+                                            hotspot_boost, center, width),
+                    env, horizon_s, rng)
+            else:
+                t = poisson_arrivals(per_station_rate[s], horizon_s, rng)
+            times.append(t)
+            stations.append(np.full(len(t), s, dtype=np.int64))
+    else:
+        raise ValueError(f"unknown arrival model {arrival!r}")
+
+    t = np.concatenate(times) if times else np.empty(0)
+    st = np.concatenate(stations) if stations else np.empty(0, dtype=np.int64)
+    order = np.argsort(t, kind="stable")
+    t, st = t[order], st[order]
+    n = len(t)
+    return RequestBatch(
+        arrival_s=t,
+        prompt_len=sample_prompt_lens(n, rng, prompt_median, prompt_sigma,
+                                      prompt_max),
+        decode_len=sample_decode_lens(n, rng, decode_mean, decode_max),
+        station=st,
+    )

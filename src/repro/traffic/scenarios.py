@@ -1,0 +1,319 @@
+"""Named traffic scenarios for constellation-scale serving studies.
+
+Each :class:`TrafficScenario` bundles an arrival process, request-length
+distributions, queueing/KV parameters and a target SLO into a named,
+reproducible configuration; :data:`SCENARIOS` is the registry that
+benchmarks, the serve driver and the examples all dispatch on.
+
+``failure-storm`` reuses :mod:`repro.distributed.elastic`: at the storm
+time a fraction of each layer's expert satellites is knocked out and
+the Theorem-1 machinery re-places their experts onto the survivors
+(``replan_on_failure`` on the layer's expert ring), with the weight
+:func:`~repro.distributed.elastic.migration` bytes accounted.  The
+post-storm fleet runs with colocated experts — the Sec. VI-B
+multi-expert regime under degraded capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import Constellation, MultiExpertPlan, PlacementPlan
+from repro.core.activation import ActivationModel
+from repro.core.device_placement import DevicePlacementPlan, TorusSpec
+from repro.core.latency import ComputeConfig, TopologySample
+from repro.core.workload import MoEWorkload
+from repro.distributed import migration, replan_on_failure
+
+from .ground import GroundSegment
+from .metrics import SLO, TrafficResult
+from .queueing import FleetSim, QueueConfig
+from .requests import RequestBatch, sample_requests
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficScenario:
+    """A named, fully-specified serving workload."""
+
+    name: str
+    description: str
+    horizon_s: float = 120.0
+    base_rate_rps: float = 0.3
+    arrival: str = "poisson"            # poisson | diurnal | hotspot
+    # request-length distributions (satellite serving is short-prompt:
+    # the 7-GFLOPS class onboard compute makes long prefills minutes-long)
+    prompt_median: int = 16
+    prompt_sigma: float = 0.8
+    prompt_max: int = 256
+    decode_mean: int = 16
+    decode_max: int = 128
+    # arrival-shape knobs
+    diurnal_amplitude: float = 0.6
+    diurnal_period_s: float | None = None    # None: one cycle per horizon
+    hotspot_station: int = 0
+    hotspot_boost: float = 4.0
+    station_weights: tuple[float, ...] | None = None
+    # queueing / memory
+    dt_s: float = 0.05
+    buffer_s: float = 10.0
+    kv_slots: int = 0
+    tail_s: float = 120.0
+    # objective
+    slo: SLO = SLO()
+    # failure storm (None = no storm)
+    failure_at_s: float | None = None
+    failure_frac: float = 0.25
+
+    def requests(self, rng: np.random.Generator, n_stations: int = 1,
+                 rate_scale: float = 1.0) -> RequestBatch:
+        period = self.diurnal_period_s or self.horizon_s
+        return sample_requests(
+            rng,
+            rate_rps=self.base_rate_rps * rate_scale,
+            horizon_s=self.horizon_s,
+            n_stations=n_stations,
+            station_weights=(None if self.station_weights is None
+                             else np.asarray(self.station_weights)),
+            arrival=self.arrival,
+            diurnal_amplitude=self.diurnal_amplitude,
+            diurnal_period_s=period,
+            hotspot_station=self.hotspot_station,
+            hotspot_boost=self.hotspot_boost,
+            prompt_median=self.prompt_median,
+            prompt_sigma=self.prompt_sigma,
+            prompt_max=self.prompt_max,
+            decode_mean=self.decode_mean,
+            decode_max=self.decode_max,
+        )
+
+    def queue_config(self, slot_period_s: float | None = None) -> QueueConfig:
+        kw = dict(dt_s=self.dt_s, buffer_s=self.buffer_s,
+                  kv_slots=self.kv_slots, tail_s=self.tail_s)
+        if slot_period_s is not None:
+            kw["slot_period_s"] = slot_period_s
+        return QueueConfig(**kw)
+
+
+SCENARIOS: dict[str, TrafficScenario] = {
+    s.name: s for s in (
+        TrafficScenario(
+            name="smoke",
+            description="CI-sized steady Poisson trickle (fast, low load)",
+            horizon_s=60.0, base_rate_rps=0.25, decode_mean=8,
+            decode_max=32, prompt_median=8, prompt_max=64, tail_s=60.0,
+        ),
+        TrafficScenario(
+            name="steady-state",
+            description="homogeneous Poisson at moderate utilization",
+            horizon_s=300.0, base_rate_rps=0.4, decode_mean=16,
+        ),
+        TrafficScenario(
+            name="diurnal-peak",
+            description="sinusoidal daily cycle, stations phased like "
+                        "time zones (one cycle per horizon)",
+            horizon_s=600.0, base_rate_rps=0.35, arrival="diurnal",
+            diurnal_amplitude=0.8, decode_mean=16,
+        ),
+        TrafficScenario(
+            name="regional-hotspot",
+            description="flash crowd: 5x Gaussian surge on one region's "
+                        "gateway mid-horizon",
+            horizon_s=300.0, base_rate_rps=0.3, arrival="hotspot",
+            hotspot_boost=5.0, decode_mean=16,
+        ),
+        TrafficScenario(
+            name="failure-storm",
+            description="25% of expert satellites lost mid-horizon; "
+                        "experts re-placed on survivors via "
+                        "distributed.elastic (multi-expert regime)",
+            horizon_s=300.0, base_rate_rps=0.3, decode_mean=16,
+            failure_at_s=150.0, failure_frac=0.25,
+        ),
+    )
+}
+
+
+def get_scenario(name: str) -> TrafficScenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; available: {sorted(SCENARIOS)}"
+        ) from None
+
+
+# --------------------------------------------------------------------- #
+# Failure storm: knock out expert satellites, re-place via elastic
+# --------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class StormReport:
+    """Degraded plans + per-plan weight-migration accounting."""
+
+    degraded_plans: list
+    failed_positions: list[np.ndarray]   # per layer, failed expert ranks
+    migration_bytes: dict[str, float]
+    moved_experts: dict[str, int]
+
+
+def apply_failure_storm(
+    plans: list,
+    activation: ActivationModel,
+    rng: np.random.Generator,
+    failure_frac: float = 0.25,
+    bytes_per_expert: float = 1e6,
+) -> StormReport:
+    """Fail ``failure_frac`` of each layer's expert positions and re-run
+    the Theorem-1 machinery on the survivors.
+
+    Each layer's I expert satellites form a ring of I device slots
+    (:class:`TorusSpec`); the failed *positions* are drawn once and
+    shared by every plan of the sweep (a storm hits positions in the
+    constellation, and the comparison should see the same storm).  The
+    surviving satellites then host ceil(I / survivors) experts each —
+    plans come back as :class:`MultiExpertPlan` with the elastic
+    machinery's migration bytes accounted per plan.
+    """
+    n_layers, n_experts = activation.n_layers, activation.n_experts
+    n_fail = max(1, int(round(failure_frac * n_experts)))
+    if n_fail >= n_experts:
+        raise ValueError("failure_frac would leave no surviving experts")
+    ring = TorusSpec(shape=(n_experts,), wrap=True)
+    failed_positions = [
+        np.sort(rng.choice(n_experts, size=n_fail, replace=False))
+        for _ in range(n_layers)
+    ]
+
+    # Pre-storm reference on the same ring: expert e sits on position e.
+    identity = DevicePlacementPlan(
+        expert_perm=np.arange(n_experts), device_cost_s=np.zeros(n_experts),
+        experts_per_device=1, origin=0)
+
+    degraded, mig_bytes, moved = [], {}, {}
+    for plan in plans:
+        old_sats = np.asarray(plan.expert_sats)
+        new_sats = np.empty_like(old_sats)
+        total_bytes, total_moved = 0.0, 0
+        epd = 1
+        for layer in range(n_layers):
+            failed = set(int(x) for x in failed_positions[layer])
+            new_plan, survivors = replan_on_failure(
+                activation.weights[layer], activation.top_k, ring, failed)
+            epd = new_plan.experts_per_device
+            # device slot of each expert on the survivor ring -> satellite
+            dev_of_expert = survivors[new_plan.inverse_perm // epd]
+            new_sats[layer] = old_sats[layer][dev_of_expert]
+            mig = migration(identity, new_plan, bytes_per_expert, survivors)
+            total_moved += len(mig.moved_experts)
+            total_bytes += mig.bytes_moved
+        name = f"{getattr(plan, 'name', 'plan')}+storm"
+        degraded.append(MultiExpertPlan(
+            gateways=np.asarray(plan.gateways), expert_sats=new_sats,
+            experts_per_sat=epd, name=name))
+        mig_bytes[name] = total_bytes
+        moved[name] = total_moved
+    return StormReport(degraded_plans=degraded,
+                       failed_positions=failed_positions,
+                       migration_bytes=mig_bytes, moved_experts=moved)
+
+
+# --------------------------------------------------------------------- #
+# Scenario runner
+# --------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class ScenarioOutcome:
+    """Everything one scenario run produces."""
+
+    scenario: TrafficScenario
+    result: TrafficResult                 # main phase (pre-storm plans)
+    sim: FleetSim
+    post_failure: TrafficResult | None = None
+    storm: StormReport | None = None
+
+
+def make_sim(
+    scenario: TrafficScenario,
+    plans: list[PlacementPlan | MultiExpertPlan],
+    topo: TopologySample,
+    activation: ActivationModel,
+    workload: MoEWorkload,
+    compute: ComputeConfig,
+    rng: np.random.Generator,
+    ground: GroundSegment | None = None,
+    constellation: Constellation | None = None,
+    rate_scale: float = 1.0,
+    requests: RequestBatch | None = None,
+    **sim_kwargs,
+) -> FleetSim:
+    """Build the :class:`FleetSim` for a scenario (slot wall-clock period
+    taken from the constellation's orbit when available)."""
+    n_stations = ground.n_stations if ground is not None else 1
+    if requests is None:
+        requests = scenario.requests(rng, n_stations, rate_scale=rate_scale)
+    slot_period = (constellation.cfg.orbital_period_s / topo.n_slots
+                   if constellation is not None else None)
+    qcfg = scenario.queue_config(slot_period)
+    return FleetSim(plans, topo, activation, workload, compute, requests,
+                    rng, qcfg=qcfg, ground=ground, **sim_kwargs)
+
+
+def run_scenario(
+    scenario: TrafficScenario | str,
+    plans: list[PlacementPlan | MultiExpertPlan],
+    topo: TopologySample,
+    activation: ActivationModel,
+    workload: MoEWorkload,
+    compute: ComputeConfig,
+    rng: np.random.Generator,
+    ground: GroundSegment | None = None,
+    constellation: Constellation | None = None,
+    rate_scale: float = 1.0,
+    bytes_per_expert: float = 1e6,
+    **sim_kwargs,
+) -> ScenarioOutcome:
+    """Run one named scenario end-to-end.
+
+    For ``failure-storm`` scenarios the trace is split at the storm
+    time: the pre-storm phase runs the given plans, the post-storm phase
+    runs the elastic-replanned (degraded, multi-expert) plans on the
+    requests arriving after the storm.  Queue state does not carry over
+    the boundary (the storm re-plan itself drains the fleet while
+    weights migrate), and the migration bytes are reported.
+    """
+    if isinstance(scenario, str):
+        scenario = get_scenario(scenario)
+    n_stations = ground.n_stations if ground is not None else 1
+    requests = scenario.requests(rng, n_stations, rate_scale=rate_scale)
+
+    if scenario.failure_at_s is None:
+        sim = make_sim(scenario, plans, topo, activation, workload, compute,
+                       rng, ground=ground, constellation=constellation,
+                       requests=requests, **sim_kwargs)
+        return ScenarioOutcome(scenario=scenario, result=sim.run(), sim=sim)
+
+    pre = requests.subset(requests.arrival_s < scenario.failure_at_s)
+    post = requests.subset(requests.arrival_s >= scenario.failure_at_s)
+    if pre.n_requests == 0:
+        raise ValueError(
+            f"failure_at_s={scenario.failure_at_s} precedes every arrival — "
+            "nothing to simulate pre-storm")
+    storm = apply_failure_storm(plans, activation, rng,
+                                failure_frac=scenario.failure_frac,
+                                bytes_per_expert=bytes_per_expert)
+    sim = make_sim(scenario, plans, topo, activation, workload, compute,
+                   rng, ground=ground, constellation=constellation,
+                   requests=pre, **sim_kwargs)
+    result = sim.run()
+    post_result = None
+    if post.n_requests:
+        post_sim = make_sim(scenario, storm.degraded_plans, topo, activation,
+                            workload, compute, rng, ground=ground,
+                            constellation=constellation, requests=post,
+                            **sim_kwargs)
+        post_result = post_sim.run()
+    return ScenarioOutcome(scenario=scenario, result=result, sim=sim,
+                           post_failure=post_result, storm=storm)

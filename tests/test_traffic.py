@@ -1,0 +1,291 @@
+"""Traffic subsystem tests: M/D/1 queueing against the Pollaczek-Khinchine
+closed form, exact zero-load parity with the batched engine, arrival
+processes, ground-segment geometry, backpressure/KV admission drops,
+scenario registry, failure-storm elastic replanning and saturation
+sweeps."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        PlanBatch, evaluate_plans, ingress_offsets,
+                        rand_intra_cg_plan, sample_topology, spacemoe_plan)
+from repro.traffic import (SCENARIOS, FleetSim, QueueConfig, RequestBatch,
+                           apply_failure_storm, build_ground_segment,
+                           get_scenario, poisson_arrivals, run_scenario,
+                           sample_requests, saturation_sweep,
+                           station_waiting_times)
+
+CFG = ConstellationConfig.scaled(8, 12, n_slots=10, survival_prob=1.0)
+WL = MoEWorkload.llama_moe_3p5b()
+COMP = ComputeConfig()
+
+
+def _world(seed=0, n_layers=4, n_experts=4, top_k=2, cfg=CFG):
+    con = Constellation(cfg)
+    topo = sample_topology(con, LinkConfig(), np.random.default_rng(seed))
+    activ = ActivationModel.zipf(n_layers, n_experts, top_k, seed=1)
+    return con, topo, activ
+
+
+def _plans(con, topo, activ, seed=7):
+    return [spacemoe_plan(con, topo, activ),
+            rand_intra_cg_plan(con.cfg, activ.n_layers, activ.n_experts,
+                               np.random.default_rng(seed))]
+
+
+def _uniform_requests(n, gap_s=50.0, prompt=1, decode=6):
+    return RequestBatch(
+        arrival_s=np.arange(n) * gap_s,
+        prompt_len=np.full(n, prompt, dtype=np.int64),
+        decode_len=np.full(n, decode, dtype=np.int64),
+        station=np.zeros(n, dtype=np.int64),
+    )
+
+
+# --------------------------------------------------------------------- #
+# Queueing correctness
+# --------------------------------------------------------------------- #
+
+
+def test_mdone_matches_pollaczek_khinchine():
+    """Single-station M/D/1 mean wait vs the P-K closed form
+    Wq = rho * s / (2 (1 - rho)), within Monte-Carlo + O(dt) tolerance."""
+    lam, s = 30.0, 0.02                     # rho = 0.6
+    pk = lam * s * s / (2.0 * (1.0 - lam * s))
+    rng = np.random.default_rng(42)
+    t = poisson_arrivals(lam, 400.0, rng)
+    w = station_waiting_times(t, s, dt_s=0.002, horizon_s=450.0)
+    assert abs(w.mean() - pk) / pk < 0.08
+    # At rho > 1 the backlog diverges instead.
+    t2 = poisson_arrivals(2.0 / s, 200.0, np.random.default_rng(1))
+    w2 = station_waiting_times(t2, s, dt_s=0.002, horizon_s=250.0)
+    assert w2[-100:].mean() > 10 * pk
+
+
+def test_station_waits_zero_at_zero_load():
+    w = station_waiting_times(np.array([1.0, 5.0, 9.0]), 0.001, dt_s=0.01)
+    np.testing.assert_array_equal(w, 0.0)
+
+
+def test_zero_load_reproduces_engine_exactly():
+    """A trickle of prompt-1 requests must reproduce evaluate_plans token
+    latencies bit-for-bit (waits all zero, same slots, same draws)."""
+    con, topo, activ = _world()
+    plans = _plans(con, topo, activ)
+    req = _uniform_requests(5)
+    sim = FleetSim(plans, topo, activ, WL, COMP, req,
+                   np.random.default_rng(9), qcfg=QueueConfig(dt_s=0.05))
+    res = sim.run()
+    ref = evaluate_plans(plans, topo, activ, WL, COMP,
+                         np.random.default_rng(9), n_tokens=sim.n_tokens,
+                         slots=res.slots)
+    for p in range(len(plans)):
+        assert res.plans[p].served.all()
+        np.testing.assert_array_equal(res.plans[p].token_total_s,
+                                      ref[p].token_latency_s)
+
+
+def test_load_inflates_latency_monotonically():
+    """The same trace at full rate vs heavily thinned: queue waits can
+    only grow latencies, never shrink them."""
+    con, topo, activ = _world()
+    plans = _plans(con, topo, activ)
+    # A burst: everything arrives within a second.
+    rng = np.random.default_rng(3)
+    req = RequestBatch(
+        arrival_s=np.sort(rng.random(40)),
+        prompt_len=np.full(40, 4), decode_len=np.full(40, 5),
+        station=np.zeros(40, dtype=np.int64))
+    sim = FleetSim(plans, topo, activ, WL, COMP, req,
+                   np.random.default_rng(5), qcfg=QueueConfig(dt_s=0.02))
+    sparse = sim.run(active=np.arange(40) == 0)
+    dense = sim.run()
+    p99_sparse = sparse.plans[0].quantile("e2e", 0.5)
+    p99_dense = dense.plans[0].quantile("e2e", 0.5)
+    assert p99_dense > p99_sparse
+    # token latencies never below the zero-load base
+    assert (dense.plans[0].token_total_s >= sim.tok_base[0] - 1e-12).all()
+
+
+def test_buffer_overflow_drops_requests():
+    con, topo, activ = _world()
+    plans = _plans(con, topo, activ)[:1]
+    req = RequestBatch(
+        arrival_s=np.zeros(30) + np.arange(30) * 1e-3,
+        prompt_len=np.full(30, 64), decode_len=np.full(30, 4),
+        station=np.zeros(30, dtype=np.int64))
+    tiny = FleetSim(plans, topo, activ, WL, COMP, req,
+                    np.random.default_rng(5),
+                    qcfg=QueueConfig(dt_s=0.02, buffer_s=0.5))
+    res = tiny.run()
+    assert res.plans[0].drop_rate > 0.0
+    roomy = FleetSim(plans, topo, activ, WL, COMP, req,
+                     np.random.default_rng(5),
+                     qcfg=QueueConfig(dt_s=0.02, buffer_s=1e9))
+    assert roomy.run().plans[0].drop_rate == 0.0
+
+
+def test_kv_admission_cap():
+    con, topo, activ = _world()
+    plans = _plans(con, topo, activ)[:1]
+    req = RequestBatch(
+        arrival_s=np.arange(20) * 1e-3,       # all in flight at once
+        prompt_len=np.full(20, 2), decode_len=np.full(20, 8),
+        station=np.zeros(20, dtype=np.int64))
+    capped = FleetSim(plans, topo, activ, WL, COMP, req,
+                      np.random.default_rng(5),
+                      qcfg=QueueConfig(dt_s=0.02, kv_slots=4))
+    res = capped.run()
+    assert 0.0 < res.plans[0].drop_rate <= 1.0 - 4 / 20 + 1e-9
+    uncapped = FleetSim(plans, topo, activ, WL, COMP, req,
+                        np.random.default_rng(5),
+                        qcfg=QueueConfig(dt_s=0.02, kv_slots=0))
+    assert uncapped.run().plans[0].drop_rate == 0.0
+
+
+# --------------------------------------------------------------------- #
+# Arrival processes
+# --------------------------------------------------------------------- #
+
+
+def test_poisson_arrivals_rate_and_order():
+    rng = np.random.default_rng(0)
+    t = poisson_arrivals(50.0, 100.0, rng)
+    assert (np.diff(t) > 0).all() and t[-1] < 100.0
+    assert abs(len(t) - 5000) < 5 * np.sqrt(5000)
+
+
+def test_sample_requests_shapes_and_bounds():
+    rng = np.random.default_rng(1)
+    req = sample_requests(rng, rate_rps=20.0, horizon_s=50.0, n_stations=4,
+                          prompt_max=128, decode_max=64)
+    assert req.n_requests > 0
+    assert req.prompt_len.max() <= 128 and req.decode_len.max() <= 64
+    assert req.station.min() >= 0 and req.station.max() < 4
+    sub = req.subset(req.station == 2)
+    assert (sub.station == 2).all()
+    assert req.request_of_token().shape == (req.total_decode_tokens,)
+
+
+def test_hotspot_concentrates_on_station():
+    rng = np.random.default_rng(2)
+    req = sample_requests(rng, rate_rps=40.0, horizon_s=100.0, n_stations=4,
+                          arrival="hotspot", hotspot_station=1,
+                          hotspot_boost=6.0)
+    counts = np.bincount(req.station, minlength=4)
+    assert counts[1] > 1.5 * counts[0]
+
+
+def test_diurnal_modulation_varies_rate():
+    rng = np.random.default_rng(3)
+    req = sample_requests(rng, rate_rps=40.0, horizon_s=200.0, n_stations=1,
+                          arrival="diurnal", diurnal_amplitude=1.0,
+                          diurnal_period_s=200.0)
+    half = req.arrival_s < 100.0
+    # sin > 0 on the first half-period: the busy half must dominate
+    assert half.sum() > 1.3 * (~half).sum()
+
+
+# --------------------------------------------------------------------- #
+# Ground segment + ingress offsets
+# --------------------------------------------------------------------- #
+
+
+def test_ground_segment_geometry():
+    con, topo, activ = _world()
+    g = build_ground_segment(con, LinkConfig(), min_elevation_deg=10.0)
+    assert 0.5 < g.coverage() <= 1.0
+    seen = g.ingress_sat >= 0
+    # visible choices respect the elevation mask
+    assert (g.elevation_rad[seen] >= np.deg2rad(10.0) - 1e-9).all()
+    # uplink at least the vertical light time to the shell
+    min_up = con.cfg.altitude_km * 1e3 / 299_792_458.0
+    assert (g.uplink_s[seen] >= min_up).all()
+    assert np.isinf(g.uplink_s[~seen]).all()
+
+
+def test_ingress_offsets_uses_gateway_row():
+    con, topo, activ = _world()
+    plans = _plans(con, topo, activ)
+    batch = PlanBatch.from_plans(plans, topo)
+    slots = np.array([0, 1, 2])
+    ing = np.array([3, 4, 5])
+    off = ingress_offsets(batch, slots, ing)
+    assert off.shape == (2, 3)
+    for p, plan in enumerate(plans):
+        for t in range(3):
+            row = batch.g_idx[p, 0]
+            assert off[p, t] == batch.dist[slots[t], row, ing[t]]
+
+
+# --------------------------------------------------------------------- #
+# Scenarios, failure storm, saturation
+# --------------------------------------------------------------------- #
+
+
+def test_scenario_registry_names():
+    for name in ("smoke", "steady-state", "diurnal-peak",
+                 "regional-hotspot", "failure-storm"):
+        assert get_scenario(name).name == name
+    assert set(SCENARIOS) >= {"smoke", "failure-storm"}
+    with pytest.raises(KeyError):
+        get_scenario("nope")
+
+
+def test_run_scenario_smoke_end_to_end():
+    con, topo, activ = _world()
+    plans = _plans(con, topo, activ)
+    sc = dataclasses.replace(get_scenario("smoke"), horizon_s=30.0,
+                             tail_s=30.0)
+    out = run_scenario(sc, plans, topo, activ, WL, COMP,
+                       np.random.default_rng(4), constellation=con)
+    rows = out.result.table(sc.slo, scenario="smoke")
+    assert {r["plan"] for r in rows} == {"SpaceMoE", "RandIntra-CG"}
+    assert all(np.isfinite(r["goodput_tok_s"]) for r in rows)
+
+
+def test_failure_storm_degrades_and_migrates():
+    con, topo, activ = _world()
+    plans = _plans(con, topo, activ)
+    storm = apply_failure_storm(plans, activ, np.random.default_rng(0),
+                                failure_frac=0.5, bytes_per_expert=1e6)
+    for old, new in zip(plans, storm.degraded_plans):
+        # survivors host multiple experts; all hosts drawn from old hosts
+        for layer in range(activ.n_layers):
+            hosts = set(new.expert_sats[layer])
+            assert hosts <= set(np.asarray(old.expert_sats)[layer])
+            assert len(hosts) < activ.n_experts
+        assert storm.migration_bytes[new.name] > 0
+    sc = dataclasses.replace(get_scenario("failure-storm"), horizon_s=40.0,
+                             failure_at_s=20.0, base_rate_rps=0.4,
+                             tail_s=30.0, decode_mean=4, decode_max=8,
+                             prompt_median=4, prompt_max=16)
+    out = run_scenario(sc, plans, topo, activ, WL, COMP,
+                       np.random.default_rng(6), constellation=con)
+    assert out.post_failure is not None and out.storm is not None
+    # degraded fleet: colocation contention can only slow decode down
+    pre = out.result.by_name("SpaceMoE").quantile("tpot", 0.5)
+    post = out.post_failure.by_name("SpaceMoE+storm").quantile("tpot", 0.5)
+    assert post >= pre * 0.95
+
+
+def test_saturation_sweep_nested_and_positive():
+    con, topo, activ = _world()
+    plans = _plans(con, topo, activ)
+    rng = np.random.default_rng(8)
+    req = sample_requests(rng, rate_rps=2.0, horizon_s=40.0, n_stations=1,
+                          prompt_median=4, prompt_max=16, decode_mean=4,
+                          decode_max=8)
+    sim = FleetSim(plans, topo, activ, WL, COMP, req,
+                   np.random.default_rng(5),
+                   qcfg=QueueConfig(dt_s=0.05, tail_s=30.0))
+    slo = get_scenario("smoke").slo
+    sat = saturation_sweep(sim, slo, np.random.default_rng(1),
+                           fractions=np.array([0.25, 1.0]))
+    assert (np.diff(sat.tested_rps) >= 0).all()
+    assert sat.sustained_rps["SpaceMoE"] > 0.0
+    ratio = sat.capacity_ratio("SpaceMoE", "RandIntra-CG")
+    assert ratio > 0.0
