@@ -1,0 +1,139 @@
+"""Adaptive-admission frontier: goodput vs p99 TTFT, AIMD controller vs static KV cap.
+
+One overloaded ``regional-hotspot`` trace is served under two admission
+regimes on the same world, plans and random draws:
+
+* **static** — the PR-2 ``kv_slots`` cap, swept over slot budgets
+  (reacts to the in-flight count: load is shed only after the backlog —
+  and the SLO — have already blown up);
+* **aimd** — the latency-target controller of
+  :mod:`repro.traffic.admission`, swept over TTFT targets expressed as
+  multiples of the zero-load p99 TTFT (sheds *before* the target is
+  crossed; rejected requests retry at the next-best visible gateway).
+
+Each run contributes one (goodput, p99 TTFT, shed/drop) frontier point
+per plan; the JSON summary (``BENCH_admission.json`` in CI) holds the
+full frontier so the controller's dominance over the static cap is
+tracked across PRs.
+
+    PYTHONPATH=src python -m benchmarks.run --fast --only admission
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.traffic import (AdmissionConfig, FleetSim, format_table,
+                           get_scenario)
+
+from .bench_traffic import _plans, _world
+from .common import Timer, emit
+
+#: TTFT targets tested, as multiples of the zero-load p99 TTFT.
+TARGET_SCALES = (1.5, 2.0, 3.0, 5.0)
+#: Static KV-slot budgets tested.
+KV_BUDGETS = (4, 8, 16, 32)
+
+
+def _round(x: float, digits: int) -> float | None:
+    """Round for JSON; non-finite (nothing served) becomes null."""
+    return round(float(x), digits) if np.isfinite(x) else None
+
+
+def _frontier_row(policy: str, knob: float, plan) -> dict:
+    """One frontier point: knob setting -> goodput/latency/shedding."""
+    return {
+        "policy": policy,
+        "knob": knob,
+        "plan": plan.plan_name,
+        "goodput_tok_s": _round(plan.goodput_tok_s, 3),
+        "ttft_p99_s": _round(plan.quantile("ttft", 0.99), 3),
+        "shed_rate": round(plan.shed_rate, 4),
+        "retry_rate": round(plan.retry_rate, 4),
+        "drop_rate": round(plan.drop_rate, 4),
+    }
+
+
+def run(fast: bool = True, json_path: str | None = None,
+        rate_scale: float = 6.0) -> dict:
+    """Sweep latency targets and KV budgets; emit the goodput-p99 frontier.
+
+    Args:
+        fast: CI-sized world and horizon when True.
+        json_path: Optional path for the JSON frontier summary.
+        rate_scale: Overload multiplier on the hotspot scenario's base
+            arrival rate (the frontier is only interesting past
+            saturation).
+
+    Returns:
+        JSON-able dict with the frontier rows and the per-policy best
+        goodput at the tightest common latency bound.
+    """
+    con, topo, activ, wl, comp, ground = _world(fast)
+    plans = _plans(con, topo, activ)[:2]          # SpaceMoE vs RandIntra-CG
+    sc = get_scenario("regional-hotspot")
+    horizon = 60.0 if fast else sc.horizon_s
+    sc = dataclasses.replace(sc, horizon_s=horizon, tail_s=60.0)
+    requests = sc.requests(np.random.default_rng(21), ground.n_stations,
+                           rate_scale=rate_scale)
+    slot_period = con.cfg.orbital_period_s / topo.n_slots
+
+    def make(qcfg_kw: dict) -> FleetSim:
+        qcfg = dataclasses.replace(sc.queue_config(slot_period), **qcfg_kw)
+        return FleetSim(plans, topo, activ, wl, comp, requests,
+                        np.random.default_rng(23), qcfg=qcfg, ground=ground)
+
+    # Zero-load reference anchors the target scales.
+    base = make({}).run(zero_load=True)
+    ttft0_p99 = max(p.quantile("ttft", 0.99) for p in base.plans)
+
+    rows: list[dict] = []
+    with Timer() as t_static:
+        for kv in KV_BUDGETS:
+            res = make({"kv_slots": kv}).run()
+            rows += [_frontier_row("static", float(kv), p)
+                     for p in res.plans]
+    with Timer() as t_aimd:
+        for scale in TARGET_SCALES:
+            acfg = AdmissionConfig(ttft_target_s=scale * ttft0_p99)
+            res = make({"kv_slots": 0, "admission": acfg}).run()
+            rows += [_frontier_row("aimd", round(scale * ttft0_p99, 3), p)
+                     for p in res.plans]
+
+    out = {
+        "fast": fast,
+        "plans": [p.name for p in plans],
+        "offered_rps": round(requests.n_requests / horizon, 3),
+        "zero_load_ttft_p99_s": round(ttft0_p99, 3),
+        "target_scales": list(TARGET_SCALES),
+        "kv_budgets": list(KV_BUDGETS),
+        "frontier": rows,
+    }
+    # Best goodput each policy achieves while keeping p99 TTFT under the
+    # loosest AIMD target — the headline "controller dominates" figure.
+    bound = TARGET_SCALES[-1] * ttft0_p99
+    for policy in ("static", "aimd"):
+        ok = [r for r in rows if r["policy"] == policy
+              and r["ttft_p99_s"] is not None and r["ttft_p99_s"] <= bound]
+        out[f"best_goodput_{policy}"] = (
+            max(r["goodput_tok_s"] or 0.0 for r in ok) if ok else 0.0)
+
+    print(format_table(rows, prefix="# "))
+    print(f"# zero-load p99 TTFT {ttft0_p99:.2f}s; p99<= {bound:.1f}s "
+          f"goodput: static={out['best_goodput_static']:.2f} "
+          f"aimd={out['best_goodput_aimd']:.2f} tok/s")
+    emit("admission/static_sweep", t_static.seconds * 1e6,
+         f"best_goodput={out['best_goodput_static']}")
+    emit("admission/aimd_sweep", t_aimd.seconds * 1e6,
+         f"best_goodput={out['best_goodput_aimd']}")
+
+    if json_path:
+        import json
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,5 +1,8 @@
-"""Paper Fig. 6: (a) per-layer inference latency mean/variance per scheme;
-(b) E2E token-generation latency comparison."""
+"""Paper Fig. 6: per-layer latency mean/variance + E2E comparison per scheme.
+
+(a) per-layer inference latency mean/variance per scheme;
+(b) E2E token-generation latency comparison.
+"""
 from __future__ import annotations
 
 import numpy as np

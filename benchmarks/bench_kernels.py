@@ -1,5 +1,6 @@
-"""Kernel micro-benchmarks (CPU interpret mode — correctness-grade timing;
-the derived column reports the roofline-relevant work per call).
+"""Pallas kernel micro-benchmarks (CPU interpret mode, correctness-grade).
+
+The derived column reports the roofline-relevant work per call.
 
 On-TPU performance claims for these kernels are made via the §Roofline
 analysis, not via CPU wall-clock; interpret mode executes the kernel body

@@ -1,5 +1,4 @@
-"""Paper Sec. VI-B / Table I: multi-expert satellites and the
-propagation-computing trade-off.
+"""Paper Sec. VI-B / Table I: multi-expert propagation-computing trade-off.
 
 Sweeps experts-per-satellite (N_E) x onboard parallelism (eta) for the
 slotted (concentrate) vs spread placements; the crossover the paper

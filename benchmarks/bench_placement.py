@@ -1,4 +1,4 @@
-"""Placement machinery benchmarks:
+"""Placement machinery benchmarks: planner scaling + plan-sweep cost.
 
 - planner scaling: spacemoe_plan cost vs constellation size (the paper
   claims O(I log I + V log V) per layer — Sec. V end);

@@ -1,5 +1,4 @@
-"""Roofline summary: read the dry-run JSON artifacts and print the
-per-cell three-term roofline table (the §Roofline deliverable feed)."""
+"""Roofline summary: per-cell three-term table from the dry-run artifacts."""
 from __future__ import annotations
 
 import glob

@@ -1,5 +1,7 @@
-"""Paper Table II: token-generation latency (s/token) of the four
-placement schemes on the LLaMA-MoE-3.5B model across eight
+"""Paper Table II: s/token of the four placement schemes, eight workloads.
+
+Token-generation latency of the four placement schemes on the
+LLaMA-MoE-3.5B model across eight
 language-understanding workloads.
 
 Datasets differ only by RNG stream (per-question topology snapshot +

@@ -1,5 +1,7 @@
-"""Traffic & capacity benchmark: plans x scenarios SLO table plus the
-SpaceMoE-vs-RandIntra-CG sustained-capacity ratio.
+"""Traffic & capacity: plans x scenarios SLO table + sustained-capacity ratio.
+
+Every registry scenario runs against the plan sweep and the saturation
+sweep reports the SpaceMoE-vs-RandIntra-CG sustained-capacity ratio.
 
 Every registry scenario runs the request-level fleet simulator
 (``repro.traffic``) over a plan sweep on one shared world; the

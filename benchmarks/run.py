@@ -31,32 +31,41 @@ def main() -> None:
                          "dicts) to this JSON file")
     args = ap.parse_args()
 
-    from . import (bench_engine, bench_fig6, bench_fig7, bench_kernels,
-                   bench_linkstate, bench_multi_expert, bench_placement,
-                   bench_roofline, bench_table2, bench_traffic)
+    from . import (bench_admission, bench_engine, bench_fig6, bench_fig7,
+                   bench_kernels, bench_linkstate, bench_multi_expert,
+                   bench_placement, bench_roofline, bench_table2,
+                   bench_traffic)
 
     n_tok = 120 if args.fast else 400
     suite = {
-        "engine": lambda: bench_engine.run(
+        "engine": (bench_engine, lambda: bench_engine.run(
             n_tokens=200 if args.fast else 1000,
             n_plans=8 if args.fast else 16,
-            n_slots=40 if args.fast else None),
-        "traffic": lambda: bench_traffic.run(fast=args.fast),
-        "table2": lambda: bench_table2.run(
-            n_tokens=n_tok, n_slots=60 if args.fast else None),
-        "fig6": lambda: bench_fig6.run(n_tokens=150 if args.fast else 600),
-        "fig7": lambda: bench_fig7.run(n_tokens=80 if args.fast else 250),
-        "multi_expert": lambda: bench_multi_expert.run(
-            n_tokens=80 if args.fast else 250),
-        "placement": bench_placement.run,
-        "kernels": bench_kernels.run,
-        "linkstate": lambda: bench_linkstate.run(
-            n_tokens=80 if args.fast else 250),
-        "roofline": bench_roofline.run,
+            n_slots=40 if args.fast else None)),
+        "traffic": (bench_traffic,
+                    lambda: bench_traffic.run(fast=args.fast)),
+        "admission": (bench_admission,
+                      lambda: bench_admission.run(fast=args.fast)),
+        "table2": (bench_table2, lambda: bench_table2.run(
+            n_tokens=n_tok, n_slots=60 if args.fast else None)),
+        "fig6": (bench_fig6,
+                 lambda: bench_fig6.run(n_tokens=150 if args.fast else 600)),
+        "fig7": (bench_fig7,
+                 lambda: bench_fig7.run(n_tokens=80 if args.fast else 250)),
+        "multi_expert": (bench_multi_expert, lambda: bench_multi_expert.run(
+            n_tokens=80 if args.fast else 250)),
+        "placement": (bench_placement, bench_placement.run),
+        "kernels": (bench_kernels, bench_kernels.run),
+        "linkstate": (bench_linkstate, lambda: bench_linkstate.run(
+            n_tokens=80 if args.fast else 250)),
+        "roofline": (bench_roofline, bench_roofline.run),
     }
     if args.list:
-        for name in suite:
-            print(name)
+        # One line per bench: name + the module docstring's summary line.
+        width = max(len(n) for n in suite)
+        for name, (module, _) in suite.items():
+            summary = (module.__doc__ or "").strip().splitlines()
+            print(f"{name:<{width}}  {summary[0] if summary else ''}")
         return
 
     selected = []
@@ -69,7 +78,7 @@ def main() -> None:
         if name not in suite:
             print(f"unknown bench {name!r} (see --list)", file=sys.stderr)
             raise SystemExit(2)
-        result = suite[name]()
+        result = suite[name][1]()
         if isinstance(result, dict):
             structured[name] = result
     print(f"# total {time.time()-t0:.1f}s")

@@ -1,0 +1,27 @@
+"""The README quickstart snippet, executable.
+
+This file IS the python snippet shown in README.md ("Evaluate a sweep
+of placement plans..."): `tools/check_docs.py` asserts the two stay
+byte-identical (between the SNIPPET markers) and executes this module,
+so the documented code path cannot silently rot.
+
+    PYTHONPATH=src python examples/readme_quickstart.py
+"""
+# --8<-- [start:snippet]
+import numpy as np
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        baseline_plans, rank_plans, sample_topology)
+
+cfg = ConstellationConfig.scaled(12, 16, n_slots=10)  # CI-sized world
+con = Constellation(cfg)
+rng = np.random.default_rng(0)
+topo = sample_topology(con, LinkConfig(), rng)
+activ = ActivationModel.zipf(n_layers=8, n_experts=4, top_k=2)
+plans = baseline_plans(con, topo, activ, rng)    # SpaceMoE + random baselines
+ranked = rank_plans(plans, topo, activ, MoEWorkload.llama_moe_3p5b(),
+                    ComputeConfig(), rng, n_tokens=200)
+for plan, result in ranked:
+    print(f"{plan.name:16s} mean={result.mean_s*1e3:7.2f} ms "
+          f"p99={result.p99_s*1e3:7.2f} ms drop={result.drop_rate:.3f}")
+# --8<-- [end:snippet]

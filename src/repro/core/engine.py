@@ -37,24 +37,37 @@ HOP_SCALE_S = 2e-3
 
 @dataclasses.dataclass
 class SimResult:
-    token_latency_s: np.ndarray     # (n_tokens,) — NaN where undeliverable
-    layer_latency_s: np.ndarray     # (n_tokens, L)
+    """Per-plan Monte-Carlo latency outcome of one engine pass.
+
+    Attributes:
+        token_latency_s: (n_tokens,) E2E latency per token — NaN where
+            the token was undeliverable in its topology slot.
+        layer_latency_s: (n_tokens, L) per-layer latency breakdown.
+        plan_name: Name of the placement plan evaluated.
+    """
+
+    token_latency_s: np.ndarray
+    layer_latency_s: np.ndarray
     plan_name: str
 
     @property
     def delivered(self) -> np.ndarray:
+        """(n_tokens,) bool — token reached the user (finite latency)."""
         return np.isfinite(self.token_latency_s)
 
     @property
     def mean_s(self) -> float:
+        """Mean latency over delivered tokens, seconds."""
         return float(np.nanmean(self.token_latency_s))
 
     @property
     def p99_s(self) -> float:
+        """99th-percentile latency over delivered tokens, seconds."""
         return float(np.nanpercentile(self.token_latency_s, 99))
 
     @property
     def drop_rate(self) -> float:
+        """Fraction of tokens that were undeliverable."""
         return float(1.0 - self.delivered.mean())
 
     def layer_stats(self) -> tuple[np.ndarray, np.ndarray]:
@@ -110,10 +123,12 @@ class PlanBatch:
 
     @property
     def n_plans(self) -> int:
+        """Number of plans stacked in the batch (P)."""
         return self.g_idx.shape[0]
 
     @property
     def n_layers(self) -> int:
+        """Number of MoE layers shared by every plan (L)."""
         return self.g_idx.shape[1]
 
     def device_arrays(self) -> tuple:
@@ -252,11 +267,10 @@ def _evaluate_batch(dist, g_idx, expert_sats, slots, stale_slots, draws,
     dist: (N_T, G, V); g_idx: (P, L); expert_sats: (P, L, I);
     slots/stale_slots: (T,); draws: (L, T, K); eta: (P,).
     """
-
-    def one_plan(g_row, sats_li, eta_p):
+    def _one_plan(g_row, sats_li, eta_p):
         g_next = jnp.roll(g_row, -1)      # ring wrap for the last layer
 
-        def layer_step(_, xs):
+        def _layer_step(_, xs):
             draws_l, g_l, g_n, sats_i = xs
             sats = sats_i[draws_l]                                # (T, K)
             d_out = hop_latency(dist, slots, stale_slots, g_l, sats,
@@ -269,11 +283,11 @@ def _evaluate_batch(dist, g_idx, expert_sats, slots, stale_slots, draws,
             lay = t_gateway + (d_out + t_exp + d_in).max(axis=1)
             return None, lay
 
-        _, lat = jax.lax.scan(layer_step, None,
+        _, lat = jax.lax.scan(_layer_step, None,
                               (draws, g_row, g_next, sats_li))
         return lat.T                                              # (T, L)
 
-    layer_lat = jax.vmap(one_plan)(g_idx, expert_sats, eta)       # (P, T, L)
+    layer_lat = jax.vmap(_one_plan)(g_idx, expert_sats, eta)       # (P, T, L)
     # Unreachable satellite in that slot => undeliverable token: count as a
     # drop (NaN), never as infinite latency.
     layer_lat = jnp.where(jnp.isfinite(layer_lat), layer_lat, jnp.nan)

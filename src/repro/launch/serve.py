@@ -14,7 +14,9 @@ The paper's kind is inference, so this is the headline end-to-end driver:
      paper's constellation — SpaceMoE vs RandIntra-CG in one batched
      ``evaluate_plans`` sweep (``--traffic <scenario>`` upgrades this to
      the request-level fleet simulation of ``repro.traffic`` and prints
-     the SLO table);
+     the SLO table; ``--admission aimd --ttft-target T`` swaps the
+     static KV cap for the latency-target admission controller with
+     gateway retry);
   5. (optional) elastic: fail a device, re-plan, report migration bytes.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama-moe-3.5b \
@@ -108,6 +110,16 @@ def main(argv=None) -> dict:
     ap.add_argument("--traffic", default=None, metavar="SCENARIO",
                     help="request-level fleet simulation under a named "
                          "repro.traffic scenario (implies --space-sim)")
+    ap.add_argument("--admission", default=None, choices=["static", "aimd"],
+                    help="admission policy for --traffic: 'static' forces "
+                         "the KV-slot cap (--kv-slots), 'aimd' switches to "
+                         "the latency-target controller with gateway retry")
+    ap.add_argument("--ttft-target", type=float, default=30.0,
+                    help="TTFT target (s) the aimd admission controller "
+                         "defends (with --admission aimd)")
+    ap.add_argument("--kv-slots", type=int, default=8,
+                    help="static KV-slot budget applied with "
+                         "--admission static (0 = uncapped)")
     ap.add_argument("--fail-device", type=int, default=-1,
                     help="elastic demo: fail this EP device and re-plan")
     args = ap.parse_args(argv)
@@ -208,9 +220,20 @@ def main(argv=None) -> dict:
         if args.traffic:
             import dataclasses
 
-            from repro.traffic import (build_ground_segment, format_table,
-                                       get_scenario, run_scenario)
+            from repro.traffic import (AdmissionConfig, build_ground_segment,
+                                       format_table, get_scenario,
+                                       run_scenario)
             sc = get_scenario(args.traffic)
+            if args.admission == "aimd":
+                sc = dataclasses.replace(
+                    sc, kv_slots=0,
+                    admission=AdmissionConfig(
+                        ttft_target_s=args.ttft_target),
+                    slo=dataclasses.replace(sc.slo,
+                                            ttft_s=args.ttft_target))
+            elif args.admission == "static":
+                sc = dataclasses.replace(sc, admission=None,
+                                         kv_slots=args.kv_slots)
             if args.smoke:
                 horizon = min(sc.horizon_s, 60.0)
                 sc = dataclasses.replace(

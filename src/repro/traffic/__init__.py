@@ -2,13 +2,23 @@
 
 Layers a constellation-scale serving simulator on top of the batched
 plan-evaluation engine: arrival processes (:mod:`.requests`), ground
-gateway -> ingress satellite mapping (:mod:`.ground`), the discrete-time
-per-satellite fleet queue kernel (:mod:`.queueing`), serving metrics +
-saturation sweeps (:mod:`.metrics`) and the named scenario registry
-(:mod:`.scenarios`).
+gateway -> ranked ingress-satellite mapping (:mod:`.ground`), the
+discrete-time per-satellite fleet queue kernel (:mod:`.queueing`),
+latency-target adaptive admission control with gateway retry
+(:mod:`.admission`), serving metrics + saturation sweeps
+(:mod:`.metrics`) and the named scenario registry (:mod:`.scenarios`).
+
+Shape conventions used throughout the subsystem: ``P`` plans of the
+sweep, ``R`` requests, ``N`` decode tokens, ``M = R + N`` engine tokens
+(prefill macro-token per request first), ``L`` layers, ``I`` experts
+per layer, ``K`` = top-k, ``S = L + L * I`` queue stations per plan
+(gateway satellites then per-layer expert blocks), ``G`` ground
+gateways, ``T`` time bins, ``A`` ingress attempts (1 + retries).
 """
+from .admission import (AdmissionConfig, admission_queue_scan,
+                        control_bin_flags, resolve_admission)
 from .ground import (DEFAULT_STATIONS, GroundSegment, GroundStation,
-                     build_ground_segment)
+                     build_ground_segment, ground_delay_table)
 from .metrics import (SLO, PlanTraffic, SaturationResult, TrafficResult,
                       format_table, saturation_sweep)
 from .queueing import (FleetSim, QueueConfig, simulate_traffic,
@@ -21,8 +31,10 @@ from .scenarios import (SCENARIOS, ScenarioOutcome, StormReport,
                         make_sim, run_scenario)
 
 __all__ = [
+    "AdmissionConfig", "admission_queue_scan", "control_bin_flags",
+    "resolve_admission",
     "DEFAULT_STATIONS", "GroundSegment", "GroundStation",
-    "build_ground_segment",
+    "build_ground_segment", "ground_delay_table",
     "SLO", "PlanTraffic", "SaturationResult", "TrafficResult",
     "format_table", "saturation_sweep",
     "FleetSim", "QueueConfig", "simulate_traffic", "station_waiting_times",

@@ -1,0 +1,232 @@
+"""Latency-target adaptive admission control for the fleet simulator.
+
+The static ``kv_slots`` cap of PR 2 sheds load only after the SLO is
+already breached (it reacts to the in-flight count, not to latency).
+This module closes the loop instead: a per-gateway controller observes
+the queue kernel's own backlog state each control interval and adjusts
+an admission probability so load is shed *before* the latency target is
+crossed.  Rejected requests retry at the next-best visible ground
+gateway (:meth:`repro.traffic.ground.GroundSegment.retry_stations`,
+entering through the first routable rank of that gateway's
+ranked-visibility table; when no alternative gateway exists the retry
+re-attempts the origin after the backoff), bounded by ``max_retries``,
+with the backoff + terrestrial-forward + alternate-uplink latency
+accounted in TTFT/E2E.
+
+Control law (pinned)
+--------------------
+**AIMD on the windowed-max predicted TTFT.**  Let ``backlog[p, s]`` be
+the queue kernel's per-station backlog (seconds of unserved work).  The
+critical-path queueing delay a request admitted *now* would face under
+plan p is estimated as::
+
+    qhat[p] = sum_l backlog[p, gateway_l] + sum_l max_i backlog[p, expert_{l,i}]
+
+i.e. the gateway chain plus, per layer, the worst expert queue (an upper
+bound on the max over the top-K draw — deliberately conservative: a
+control signal should breach before the SLO does).  Per control interval
+(``interval_s``, quantized to whole time bins) the controller tracks the
+windowed **max** of ``qhat`` — the sup-quantile of the interval — and
+compares the predicted latencies
+
+    ``ttft_hat[p, g] = ttft0[p, g] + max_win qhat[p]``  (per gateway g)
+    ``tpot_hat[p]    = tpot0[p]    + max_win qhat[p]``
+
+against ``target_margin *`` the configured targets, where ``ttft0`` /
+``tpot0`` are the zero-load (engine-exact) reference latencies.  On
+breach the admission probability is multiplicatively decreased
+(``admit *= decrease``), otherwise additively increased
+(``admit += increase``), clamped to ``[admit_min, 1]`` — the classic
+AIMD cell that converges to a fair stable shedding rate under sustained
+overload and recovers quickly once the surge passes.
+
+The controller state — ``(admit (P, G), window-max (P,))`` — is carried
+through the same jitted ``lax.scan`` that evolves the backlog matrix,
+vectorized over every plan of the sweep; no host round-trips happen
+inside the horizon.  Per-request admission is then resolved *between*
+schedule<->queue fixed-point iterations from the emitted admission
+trace (monotone outer iteration: the trace is accumulated as a running
+minimum, so the shed set only grows and the fixed point converges from
+the congested side).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Latency-target admission controller parameters.
+
+    Attributes:
+        policy: ``"aimd"`` enables the closed-loop controller;
+            ``"static"`` keeps the legacy ``kv_slots`` cap (the
+            controller machinery is bypassed entirely).
+        ttft_target_s: TTFT latency target the controller defends.
+        tpot_target_s: TPOT target (per decode token); +inf disables the
+            TPOT term.
+        interval_s: Control interval — the AIMD update cadence and the
+            width of the observation window (quantized to time bins).
+        increase: Additive admission-probability increase per
+            non-breaching interval.
+        decrease: Multiplicative factor applied on a breaching interval.
+        admit_min: Admission-probability floor (keeps a trickle flowing
+            so the controller can observe recovery).
+        target_margin: Fraction of the target the predictor is compared
+            against (< 1 sheds with headroom, compensating for the O(dt)
+            binning error and post-admission queue growth).
+        reference_quantile: Quantile of the zero-load TTFT/TPOT
+            distributions used as the predictor's ``ttft0``/``tpot0``
+            anchors.  The controller defends a *tail* target, so the
+            anchor must be a tail statistic — a median anchor would
+            under-budget the long-prompt requests that dominate p99.
+        max_retries: Gateway-retry attempts a rejected request may make
+            before it is shed.
+        retry_backoff_s: Delay between consecutive attempts, paid in
+            TTFT/E2E by retried requests.
+    """
+
+    policy: str = "aimd"
+    ttft_target_s: float = 30.0
+    tpot_target_s: float = float("inf")
+    interval_s: float = 0.5
+    increase: float = 0.1
+    decrease: float = 0.6
+    admit_min: float = 0.05
+    target_margin: float = 0.85
+    reference_quantile: float = 0.99
+    max_retries: int = 2
+    retry_backoff_s: float = 1.0
+
+    def __post_init__(self):
+        """Validate the law's parameters."""
+        if self.policy not in ("aimd", "static"):
+            raise ValueError(f"unknown admission policy {self.policy!r}")
+        if not 0.0 < self.decrease < 1.0:
+            raise ValueError("decrease must be in (0, 1)")
+        if self.increase <= 0.0:
+            raise ValueError("increase must be positive")
+        if not 0.0 < self.admit_min <= 1.0:
+            raise ValueError("admit_min must be in (0, 1]")
+        if not 0.0 < self.target_margin <= 1.0:
+            raise ValueError("target_margin must be in (0, 1]")
+        if not 0.0 <= self.reference_quantile <= 1.0:
+            raise ValueError("reference_quantile must be in [0, 1]")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+
+    @property
+    def n_attempts(self) -> int:
+        """Total ingress attempts per request (first try + retries)."""
+        return self.max_retries + 1
+
+
+@functools.partial(jax.jit, static_argnames=("n_gateways",))
+def admission_queue_scan(work, cap, dt, ttft0, tpot0, ctrl, admit0,
+                         ttft_target, tpot_target, increase, decrease,
+                         admit_min, n_gateways: int):
+    """Fleet backlog scan with the AIMD controller in the carry.
+
+    The backlog recursion is identical to
+    :func:`repro.traffic.queueing._fleet_queue_scan` (same wait/drop
+    outputs bit-for-bit), extended with the per-(plan, gateway)
+    admission state evolved by the AIMD law in the module docstring.
+
+    Args:
+        work: (P, S, T) seconds of offered work per (plan, station, bin).
+        cap: Scalar or (S,) backlog cap in seconds (backpressure).
+        dt: Time-bin width, seconds.
+        ttft0: (P, G) zero-load TTFT reference per (plan, ground gateway).
+        tpot0: (P,) zero-load TPOT reference per plan.
+        ctrl: (T,) bool — True on bins that close a control interval.
+        admit0: (P, G) initial admission probabilities (normally ones).
+        ttft_target: Margin-scaled TTFT target (scalar).
+        tpot_target: Margin-scaled TPOT target (scalar, +inf disables).
+        increase: AIMD additive increase per clean interval.
+        decrease: AIMD multiplicative decrease on breach.
+        admit_min: Admission floor.
+        n_gateways: Static — the plan's L gateway stations occupy
+            stations [0, L); the remaining S - L stations are the L
+            blocks of per-layer expert queues.
+
+    Returns:
+        (wait, dropped, admit): wait/dropped are (P, S, T) exactly as in
+        the plain kernel; admit is (P, G, T), the admission probability
+        in effect during each bin.
+    """
+    p, s, _ = work.shape
+    n_exp = (s - n_gateways) // n_gateways
+
+    def _step(carry, xs):
+        backlog, admit, win = carry
+        w_t, is_ctrl = xs
+        wait = backlog
+        total = backlog + w_t
+        dropped = jnp.maximum(total - cap, 0.0)
+        backlog = jnp.maximum(jnp.minimum(total, cap) - dt, 0.0)
+        # Critical-path queueing-delay estimate (see module docstring).
+        gw = backlog[:, :n_gateways].sum(axis=1)
+        exp = backlog[:, n_gateways:].reshape(p, n_gateways, n_exp) \
+            .max(axis=2).sum(axis=1)
+        win = jnp.maximum(win, gw + exp)                         # (P,)
+        over = ((ttft0 + win[:, None]) > ttft_target) \
+            | ((tpot0 + win) > tpot_target)[:, None]             # (P, G)
+        stepped = jnp.where(over,
+                            jnp.maximum(admit * decrease, admit_min),
+                            jnp.minimum(admit + increase, 1.0))
+        admit_next = jnp.where(is_ctrl, stepped, admit)
+        win_next = jnp.where(is_ctrl, 0.0, win)
+        return (backlog, admit_next, win_next), (wait, dropped, admit)
+
+    backlog0 = jnp.zeros((p, s), dtype=work.dtype)
+    win0 = jnp.zeros((p,), dtype=work.dtype)
+    _, (wait, dropped, admit) = jax.lax.scan(
+        _step, (backlog0, jnp.asarray(admit0, dtype=work.dtype), win0),
+        (jnp.moveaxis(work, 2, 0), ctrl))
+    return (jnp.moveaxis(wait, 0, 2), jnp.moveaxis(dropped, 0, 2),
+            jnp.moveaxis(admit, 0, 2))
+
+
+def control_bin_flags(n_bins: int, dt_s: float, interval_s: float
+                      ) -> np.ndarray:
+    """(T,) bool — True on bins that close a control interval.
+
+    The interval is quantized to whole bins (minimum one bin, i.e. a
+    controller update every ``max(1, round(interval_s / dt_s))`` bins).
+    """
+    every = max(1, int(round(interval_s / dt_s)))
+    t = np.arange(n_bins)
+    return (t + 1) % every == 0
+
+
+def resolve_admission(admit: np.ndarray, attempt_bin: np.ndarray,
+                      attempt_station: np.ndarray, feasible: np.ndarray,
+                      u: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Resolve each request's first admitted ingress attempt.
+
+    Attempt a of request r is admitted iff its uniform draw clears the
+    admission probability in effect at the attempt's (gateway, bin) —
+    common random numbers: the same ``u`` is used for every plan, so
+    plan-to-plan differences reflect the controllers, not the dice.
+
+    Args:
+        admit: (P, G, T) admission-probability trace.
+        attempt_bin: (A, R) time bin of each attempt.
+        attempt_station: (A, R) gateway of each attempt.
+        feasible: (A, P, R) attempt reaches a visible, routable ingress.
+        u: (A, R) per-(attempt, request) uniform draws in [0, 1).
+
+    Returns:
+        (choice, shed): choice is (P, R) — the index of the first
+        admitted attempt (0 = no retry needed; undefined where shed);
+        shed is (P, R) bool — every attempt rejected or infeasible.
+    """
+    adm = admit[:, attempt_station, attempt_bin]                # (P, A, R)
+    ok = (u[None, :, :] < adm) & np.moveaxis(feasible, 1, 0)    # (P, A, R)
+    shed = ~ok.any(axis=1)
+    return ok.argmax(axis=1), shed

@@ -1,11 +1,19 @@
 """Serving metrics, SLOs and saturation sweeps.
 
-TTFT  — time-to-first-token: uplink + ingress hop + prefill (+ queueing).
+TTFT  — time-to-first-token: uplink + ingress hop + prefill (+ queueing,
+        + retry backoff/forwarding for admission-retried requests).
 TPOT  — time-per-output-token: mean decode-step latency after the first
         token.
 E2E   — request completion time.
 Goodput — decode tokens/s delivered by served (non-dropped, admitted)
         requests over the arrival span.
+Shed  — requests rejected by the adaptive admission controller after
+        exhausting their gateway retries; accounted separately from
+        involuntary drops (a shed request gets an immediate fast-fail
+        response, a dropped one times out), so ``drop_rate`` only counts
+        the involuntary kind and ``goodput`` only counts served decode
+        tokens — the "goodput under control" the admission benchmarks
+        trade against the latency target.
 
 ``saturation_sweep`` finds the highest arrival rate at which a plan
 still meets an :class:`SLO`, by Poisson-thinning one request trace with
@@ -35,6 +43,7 @@ class SLO:
     max_drop: float = 0.01
 
     def describe(self) -> str:
+        """One-line human-readable rendering of the objective."""
         q = int(round(self.quantile * 100))
         return (f"p{q} TTFT<={self.ttft_s:g}s, p{q} TPOT<={self.tpot_s:g}s, "
                 f"drop<={self.max_drop:.0%}")
@@ -42,42 +51,98 @@ class SLO:
 
 @dataclasses.dataclass
 class PlanTraffic:
-    """Per-plan request-level outcome of one traffic simulation."""
+    """Per-plan request-level outcome of one traffic simulation.
+
+    Attributes:
+        plan_name: Name of the placement plan this row belongs to.
+        active: (R,) request participated in this run.
+        served: (R,) active, admitted, and fully delivered.
+        ttft_s: (R,) time-to-first-token, NaN unless served.
+        tpot_s: (R,) time-per-output-token, NaN unless served.
+        e2e_s: (R,) completion time, NaN unless served.
+        decode_len: (R,) decode tokens per request.
+        station_util: (S,) offered utilization per station.
+        span_s: Arrival span of the active requests, seconds.
+        token_total_s: (M,) per-token latency incl. queueing.
+        shed: (R,) rejected by the admission controller after all
+            gateway retries (None when no controller ran).
+        retries: (R,) gateway-retry attempts used by served requests
+            (0 = admitted at the original gateway; None when no
+            controller ran).
+    """
 
     plan_name: str
-    active: np.ndarray        # (R,) request participated in this run
-    served: np.ndarray        # (R,) active, admitted, and fully delivered
-    ttft_s: np.ndarray        # (R,) NaN unless served
-    tpot_s: np.ndarray        # (R,) NaN unless served
-    e2e_s: np.ndarray         # (R,) NaN unless served
-    decode_len: np.ndarray    # (R,)
-    station_util: np.ndarray  # (S,) offered utilization per station
-    span_s: float             # arrival span of the active requests
-    token_total_s: np.ndarray  # (M,) per-token latency incl. queueing
+    active: np.ndarray
+    served: np.ndarray
+    ttft_s: np.ndarray
+    tpot_s: np.ndarray
+    e2e_s: np.ndarray
+    decode_len: np.ndarray
+    station_util: np.ndarray
+    span_s: float
+    token_total_s: np.ndarray
+    shed: np.ndarray | None = None
+    retries: np.ndarray | None = None
 
     @property
     def n_active(self) -> int:
+        """Number of requests offered in this run."""
         return int(self.active.sum())
 
     @property
-    def drop_rate(self) -> float:
+    def shed_rate(self) -> float:
+        """Fraction of offered requests the admission controller shed
+        (0.0 when no controller ran)."""
         n = self.n_active
-        return float(1.0 - self.served.sum() / n) if n else 0.0
+        if self.shed is None or not n:
+            return 0.0
+        return float(self.shed.sum() / n)
+
+    @property
+    def drop_rate(self) -> float:
+        """Fraction of offered requests that failed *involuntarily*
+        (undeliverable tokens, backpressure overflow, static-cap
+        rejections) — controller sheds are excluded."""
+        n = self.n_active
+        if not n:
+            return 0.0
+        return float(1.0 - self.served.sum() / n) - self.shed_rate
+
+    @property
+    def retry_rate(self) -> float:
+        """Fraction of served requests that needed >= 1 gateway retry."""
+        if self.retries is None or not self.served.any():
+            return 0.0
+        return float((self.retries[self.served] > 0).mean())
 
     @property
     def goodput_tok_s(self) -> float:
+        """Decode tokens/s delivered by served requests over the span —
+        the goodput-under-control figure the admission frontier plots."""
         return float(self.decode_len[self.served].sum() / self.span_s)
 
     @property
     def offered_rps(self) -> float:
+        """Offered request rate (active requests over the arrival span)."""
         return self.n_active / self.span_s
 
     def quantile(self, which: str, q: float) -> float:
+        """Latency quantile over served requests.
+
+        Args:
+            which: ``"ttft"`` | ``"tpot"`` | ``"e2e"``.
+            q: Quantile in [0, 1].
+
+        Returns:
+            The quantile in seconds (NaN when nothing was served).
+        """
         arr = {"ttft": self.ttft_s, "tpot": self.tpot_s,
                "e2e": self.e2e_s}[which][self.served]
         return float(np.quantile(arr, q)) if len(arr) else float("nan")
 
     def meets(self, slo: SLO) -> bool:
+        """True iff this run satisfies ``slo`` (quantiles over served
+        requests; ``max_drop`` checked against involuntary drops)."""
         if self.drop_rate > slo.max_drop:
             return False
         if not self.served.any():
@@ -92,6 +157,8 @@ class PlanTraffic:
             "offered_rps": round(self.offered_rps, 4),
             "goodput_tok_s": round(self.goodput_tok_s, 3),
             "drop_rate": round(self.drop_rate, 4),
+            "shed_rate": round(self.shed_rate, 4),
+            "retry_rate": round(self.retry_rate, 4),
             "ttft_p50_s": round(self.quantile("ttft", 0.5), 3),
             "ttft_p99_s": round(self.quantile("ttft", 0.99), 3),
             "tpot_p50_s": round(self.quantile("tpot", 0.5), 3),
@@ -116,15 +183,19 @@ class TrafficResult:
     dt_s: float
 
     def __getitem__(self, i: int) -> PlanTraffic:
+        """The i-th plan's :class:`PlanTraffic` (sweep order)."""
         return self.plans[i]
 
     def by_name(self, name: str) -> PlanTraffic:
+        """Look up a plan's outcome by its plan name (KeyError if absent)."""
         for p in self.plans:
             if p.plan_name == name:
                 return p
         raise KeyError(name)
 
     def table(self, slo: SLO | None = None, scenario: str = "") -> list[dict]:
+        """One flat summary row per plan (optionally SLO-checked and
+        tagged with a scenario name)."""
         rows = []
         for p in self.plans:
             row = p.row(slo)

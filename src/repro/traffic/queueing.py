@@ -28,10 +28,19 @@ deliberately split into
    consecutive bins (chunked-prefill semantics, like production
    continuous-batching schedulers).
 
-KV-cache memory is an admission cap: a request arriving when more than
-``kv_slots`` requests are in flight is rejected (its offered load still
-occupies the queues — rejection happens at the ingress gateway after
-the uplink, the conservative accounting).
+Two admission regimes guard KV-cache memory and the latency SLO:
+
+* the legacy **static cap** — a request arriving when more than
+  ``kv_slots`` requests are in flight is rejected (its offered load
+  still occupies the queues: rejection happens at the ingress gateway
+  *after* the uplink, the conservative accounting);
+* the **latency-target controller** (``QueueConfig.admission`` with
+  policy ``"aimd"``, see :mod:`repro.traffic.admission`) — an AIMD loop
+  carried through the fleet scan observes the windowed critical-path
+  backlog and sheds load *before* the target is crossed.  Rejections
+  happen at the ground gateway before the uplink (shed load never
+  enters the queues), and rejected requests retry at the next-best
+  visible gateway with the retry latency accounted in TTFT/E2E.
 
 ``FleetSim`` precomputes everything rate-independent once (engine pass,
 station indices, chunk layout) so a saturation sweep replays only the
@@ -52,6 +61,8 @@ from repro.core.latency import ComputeConfig, TopologySample
 from repro.core.placement import MultiExpertPlan
 from repro.core.workload import MoEWorkload
 
+from .admission import (AdmissionConfig, admission_queue_scan,
+                        control_bin_flags, resolve_admission)
 from .ground import GroundSegment
 from .metrics import PlanTraffic, TrafficResult
 from .requests import RequestBatch
@@ -61,21 +72,26 @@ from .requests import RequestBatch
 class QueueConfig:
     """Discrete-time queueing parameters.
 
-    dt_s:          time-bin width.  Per-visit service times below dt
-                   never self-queue; the binning error is O(dt).
-    buffer_s:      per-station backlog cap in seconds of work; arrivals
-                   overflowing it are dropped (backpressure).
-    kv_slots:      max requests concurrently holding KV cache (0 = no
-                   admission cap).
-    slot_period_s: wall-clock seconds per topology slot (ties tokens to
-                   the constellation's time-varying graph; default is a
-                   550 km LEO period split over 20 slots).
-    tail_s:        extra horizon past the last zero-load completion so
-                   in-flight requests can drain.  Congestion-stretched
-                   schedules beyond it clip into the final bin (such
-                   runs are deep in SLO failure anyway).
-    iterations:    schedule<->queue fixed-point iterations (1 = open
-                   loop).
+    Attributes:
+        dt_s: Time-bin width.  Per-visit service times below dt never
+            self-queue; the binning error is O(dt).
+        buffer_s: Per-station backlog cap in seconds of work; arrivals
+            overflowing it are dropped (backpressure).
+        kv_slots: Max requests concurrently holding KV cache (0 = no
+            admission cap).  Ignored when the adaptive controller is
+            active — the controller *replaces* the static cap.
+        slot_period_s: Wall-clock seconds per topology slot (ties tokens
+            to the constellation's time-varying graph; default is a
+            550 km LEO period split over 20 slots).
+        tail_s: Extra horizon past the last zero-load completion so
+            in-flight requests can drain.  Congestion-stretched
+            schedules beyond it clip into the final bin (such runs are
+            deep in SLO failure anyway).
+        iterations: Schedule<->queue fixed-point iterations (1 = open
+            loop).
+        admission: Optional :class:`~repro.traffic.admission
+            .AdmissionConfig`; policy ``"aimd"`` switches the run loop
+            to the latency-target controller with gateway retry.
     """
 
     dt_s: float = 0.05
@@ -84,6 +100,7 @@ class QueueConfig:
     slot_period_s: float = 300.0
     tail_s: float = 120.0
     iterations: int = 3
+    admission: AdmissionConfig | None = None
 
 
 # --------------------------------------------------------------------- #
@@ -101,8 +118,7 @@ def _fleet_queue_scan(work, cap, dt):
     backlog an arrival in bin t finds (work deposited in bin t is seen
     by later bins only); ``dropped`` is the overflow discarded per bin.
     """
-
-    def step(backlog, w_t):
+    def _step(backlog, w_t):
         wait = backlog
         total = backlog + w_t
         dropped = jnp.maximum(total - cap, 0.0)
@@ -111,7 +127,7 @@ def _fleet_queue_scan(work, cap, dt):
 
     p, s, _ = work.shape
     backlog0 = jnp.zeros((p, s), dtype=work.dtype)
-    _, (wait, dropped) = jax.lax.scan(step, backlog0,
+    _, (wait, dropped) = jax.lax.scan(_step, backlog0,
                                       jnp.moveaxis(work, 2, 0))
     return jnp.moveaxis(wait, 0, 2), jnp.moveaxis(dropped, 0, 2)
 
@@ -134,6 +150,17 @@ def station_waiting_times(
 
     since the server drains continuously through the bin.  This is the
     single-station reference the M/D/1 Pollaczek-Khinchine test checks.
+
+    Args:
+        arrival_s: (n,) sorted arrival times, seconds.
+        service_s: Scalar or (n,) per-arrival service demand, seconds.
+        dt_s: Time-bin width of the underlying scan.
+        buffer_s: Backlog cap (overflow is dropped), default unbounded.
+        horizon_s: Optional simulation horizon (defaults to the last
+            arrival).
+
+    Returns:
+        (n,) waiting time each arrival experiences before service.
     """
     t = np.asarray(arrival_s, dtype=np.float64)
     if len(t) and not (np.diff(t) >= 0).all():
@@ -186,6 +213,25 @@ def _segment_any(flags: np.ndarray, seg_ids: np.ndarray,
     return hits.reshape(p, n_seg) > 0.0
 
 
+def _station_quantile(values: np.ndarray, ok: np.ndarray,
+                      station: np.ndarray, n_stations: int,
+                      q: float) -> np.ndarray:
+    """(P, G) per-(plan, station) q-quantile of ``values`` (P, R) over
+    the requests with ``ok`` set; stations with no valid request fall
+    back to the plan-wide quantile (0 when nothing is valid at all)."""
+    p = values.shape[0]
+    out = np.zeros((p, n_stations))
+    overall = np.array([
+        np.quantile(values[i][ok[i]], q) if ok[i].any() else 0.0
+        for i in range(p)])
+    for g in range(n_stations):
+        sel = ok & (station[None, :] == g)
+        for i in range(p):
+            out[i, g] = np.quantile(values[i][sel[i]], q) if sel[i].any() \
+                else overall[i]
+    return out
+
+
 # --------------------------------------------------------------------- #
 # The fleet simulator
 # --------------------------------------------------------------------- #
@@ -201,6 +247,14 @@ class FleetSim:
     and the chunk layout.  ``run`` then iterates the schedule/queue
     fixed point for any request-activity mask — the cheap inner call of
     a saturation sweep.
+
+    When ``qcfg.admission`` enables the AIMD policy, construction also
+    precomputes the gateway-retry attempt tables (per attempt: target
+    gateway, terrestrial forward + backoff + uplink + ingress-offset
+    latency, feasibility) and the controller's zero-load TTFT/TPOT
+    references; ``run`` then resolves per-request admission between
+    fixed-point iterations from the controller trace the fleet scan
+    emits (see :mod:`repro.traffic.admission` for the law).
     """
 
     def __init__(
@@ -219,6 +273,28 @@ class FleetSim:
         include_lm_head: bool = True,
         batch: PlanBatch | None = None,
     ):
+        """Build the simulator and run every rate-independent precompute.
+
+        Args:
+            plans: Placement-plan sweep (P entries; mixed
+                :class:`~repro.core.placement.PlacementPlan` /
+                :class:`~repro.core.placement.MultiExpertPlan` allowed).
+            topo: Sampled time-varying topology the engine pass uses.
+            activation: Conditional-Poisson expert-activation model.
+            workload: Per-component FLOP model of the served MoE.
+            compute: FLOPs -> seconds conversion for onboard compute.
+            requests: The request trace (R requests, sorted arrivals).
+            rng: Source of the engine's expert draws and the admission
+                uniforms (consumed at construction; runs are replayable).
+            qcfg: Queueing/admission parameters.
+            ground: Optional ground segment; enables uplink + ingress
+                accounting and (under AIMD admission) gateway retry.
+            ctx_len: Attention context length for gateway service time.
+            eta: Eq. 43 compute-sharing efficiency for multi-expert plans.
+            include_lm_head: Account lm-head service on the last gateway.
+            batch: Optional prebuilt :class:`~repro.core.PlanBatch` to
+                reuse the deduped Dijkstra table across simulators.
+        """
         self.plans = list(plans)
         self.requests = requests
         self.qcfg = qcfg
@@ -398,7 +474,7 @@ class FleetSim:
         self._n_events = ev_work.size
 
         # --- time bins (fixed across runs so the scan compiles once) ------
-        start_dec0, _, c00 = self._chain(self.tok_base)
+        start_dec0, _, c00 = self._chain(self.tok_base, self.start_pref)
         end0 = start_dec0 + self.tok_base[:, R:]
         horizon = max(float(requests.arrival_s.max()),
                       float(np.where(np.isfinite(end0), end0, 0.0).max()),
@@ -408,9 +484,115 @@ class FleetSim:
             raise ValueError(
                 f"{self.n_bins} time bins — raise dt_s or shrink the horizon")
 
+        # --- admission controller precompute ------------------------------
+        acfg = qcfg.admission
+        self.admission_on = acfg is not None and acfg.policy == "aimd"
+        if self.admission_on:
+            self._build_admission_tables(acfg, ground, slot_r, rng)
+
     # ----------------------------------------------------------------- #
 
-    def _chain(self, tok_total: np.ndarray):
+    def _build_admission_tables(self, acfg: AdmissionConfig,
+                                ground: GroundSegment | None,
+                                slot_r: np.ndarray,
+                                rng: np.random.Generator) -> None:
+        """Precompute the gateway-retry attempt tables and the AIMD
+        controller's zero-load references.
+
+        Per attempt a (0 = the original gateway, a >= 1 = the a-th best
+        alternative gateway from :meth:`GroundSegment.retry_stations`):
+        target gateway, total ingress latency (a * backoff + terrestrial
+        forward + uplink + ingress hop) and per-plan feasibility.  An
+        alternate gateway enters through the first rank of its
+        ranked-visibility table whose ingress route exists for the plan
+        in that slot (deeper ranks cover an occluded or unroutable best
+        satellite).  When no a-th alternative exists — no ground
+        segment, or fewer visible gateways than retries — attempt a is a
+        same-gateway backoff retry: the origin is re-attempted after the
+        backoff, drawing against the (time-varying) admit state of a
+        later bin.  Retries happen within the arrival's topology slot
+        (backoff << slot period).
+        """
+        req = self.requests
+        P, R = self.n_plans, self.n_requests
+        A = acfg.n_attempts
+        self.n_gw_stations = ground.n_stations if ground is not None else 1
+
+        # Without a ground segment there is a single logical gateway.
+        station = req.station if ground is not None \
+            else np.zeros(R, dtype=np.int64)
+        st_att = np.tile(station, (A, 1))                         # (A, R)
+        alt_ok = np.zeros((A, R), dtype=bool)
+        alt_ok[0] = True
+        if ground is not None and acfg.max_retries > 0:
+            alts = ground.retry_stations(slot_r, req.station,
+                                         acfg.max_retries)        # (R, n_alt)
+            n_alt = alts.shape[1]
+            for a in range(1, min(A, n_alt + 1)):
+                st_att[a] = alts[:, a - 1]
+                alt_ok[a] = True
+
+        extra = np.empty((A, P, R))
+        feas = np.zeros((A, P, R), dtype=bool)
+        extra[0] = self.ingress_extra
+        feas[0] = ~self.fail_ingress
+        for a in range(1, A):
+            if ground is None or not alt_ok[a].any():
+                # Same-gateway backoff retry (see docstring).
+                extra[a] = self.ingress_extra + a * acfg.retry_backoff_s
+                feas[a] = feas[0]
+                continue
+            gdelay = ground.ground_delay_s[req.station, st_att[a]]
+            # Ranked-visibility fallback: per plan, the first rank of
+            # the alternate gateway's satellite ranking with a finite
+            # ingress route.
+            ing_r = ground.ingress_ranked[slot_r, st_att[a]]      # (R, K)
+            up_r = ground.uplink_ranked_s[slot_r, st_att[a]]      # (R, K)
+            best = np.zeros((P, R))
+            best_ok = np.zeros((P, R), dtype=bool)
+            for k in range(ground.n_ranked):
+                reachable = ing_r[:, k] >= 0
+                off = ingress_offsets(self.batch, slot_r,
+                                      np.where(reachable, ing_r[:, k], 0))
+                ok = reachable[None, :] & np.isfinite(off)
+                take = ok & ~best_ok
+                best = np.where(take, up_r[None, :, k] + off, best)
+                best_ok |= ok
+            extra[a] = (a * acfg.retry_backoff_s + gdelay)[None, :] \
+                + np.where(best_ok, best, 0.0)
+            feas[a] = best_ok & alt_ok[a][None, :]
+        self._att_station = st_att
+        self._att_extra = extra
+        self._att_feasible = feas
+        # Attempt a is evaluated at the gateway it targets, after the
+        # backoff + terrestrial forward but before the uplink.
+        t_att = req.arrival_s[None, :] + np.arange(A)[:, None] \
+            * acfg.retry_backoff_s
+        if ground is not None:
+            t_att = t_att + ground.ground_delay_s[req.station, st_att]
+        self._att_bin = np.clip((t_att / self.qcfg.dt_s).astype(np.int64),
+                                0, self.n_bins - 1)
+        # Common random numbers: one uniform per (attempt, request),
+        # shared by every plan and every run() call.
+        self._adm_u = rng.random((A, R))
+
+        # Zero-load controller references (see admission module
+        # docstring): tail anchors at the configured reference quantile.
+        base_ttft = self.ingress_extra + self.tok_base[:, :R]     # (P, R)
+        ok = feas[0] & ~_segment_any(self.nan_tok[:, R:], self.tok_req, R) \
+            & ~self.nan_tok[:, :R]
+        self._adm_ttft0 = _station_quantile(
+            base_ttft, ok, station, self.n_gw_stations,
+            acfg.reference_quantile)                              # (P, G)
+        dec_ok = np.isfinite(self.tok_base[:, R:]) & ~self.nan_tok[:, R:]
+        self._adm_tpot0 = np.array([
+            np.quantile(self.tok_base[i, R:][dec_ok[i]],
+                        acfg.reference_quantile)
+            if dec_ok[i].any() else 0.0 for i in range(P)])        # (P,)
+
+    # ----------------------------------------------------------------- #
+
+    def _chain(self, tok_total: np.ndarray, start_pref: np.ndarray):
         """Autoregressive chaining: (decode token starts (P, N), their
         per-request inclusive cumsums (P, N), prefill completion (P, R))."""
         R = self.n_requests
@@ -418,22 +600,24 @@ class FleetSim:
         cs = np.cumsum(dec, axis=1)
         base = (cs - dec)[:, self.first_tok][:, self.tok_req]
         seg_excl = (cs - dec) - base
-        c0 = self.start_pref + tok_total[:, :R]
+        c0 = start_pref + tok_total[:, :R]
         start_dec = c0[:, self.tok_req] + seg_excl
         return start_dec, cs - base, c0
 
-    def _schedule(self, gw_wait: np.ndarray, ex_max: np.ndarray):
+    def _schedule(self, gw_wait: np.ndarray, ex_max: np.ndarray,
+                  start_pref: np.ndarray):
         """Wait-augmented schedule: per-(plan, token, layer) gateway and
         expert arrival times, plus per-token total latencies."""
         lay_cost = self.eff_layer + gw_wait + ex_max              # (P, M, L)
         tok_total = self.tok_base + gw_wait.sum(2) + ex_max.sum(2)
-        start_dec, seg_incl, c0 = self._chain(tok_total)
-        start_all = np.concatenate([self.start_pref, start_dec], axis=1)
+        start_dec, seg_incl, c0 = self._chain(tok_total, start_pref)
+        start_all = np.concatenate([start_pref, start_dec], axis=1)
         layer_arr = start_all[:, :, None] + _exclusive_cumsum(lay_cost, 2)
         exp_arr = layer_arr + gw_wait + self.gw_service[None, :, None]
         return layer_arr, exp_arr, tok_total, seg_incl, c0
 
     def _to_bins(self, times: np.ndarray):
+        """Clip finite ``times`` to bin indices; returns (bins, finite)."""
         finite = np.isfinite(times)
         b = np.where(
             finite,
@@ -441,8 +625,9 @@ class FleetSim:
                     .astype(np.int64), 0, self.n_bins - 1), 0)
         return b, finite
 
-    def _bin_work(self, layer_arr, exp_arr, active):
-        """Offered work (P, S, T) for the current schedule + mask."""
+    def _bin_work(self, layer_arr, exp_arr, active2d):
+        """Offered work (P, S, T) for the current schedule + per-plan
+        request-activity mask ``active2d`` (P, R)."""
         P, R = self.n_plans, self.n_requests
         S, T = self.n_stations, self.n_bins
         ev_time = np.concatenate([
@@ -459,7 +644,7 @@ class FleetSim:
         base_bin, finite = self._to_bins(ev_time)
         bins = np.minimum(base_bin[self._rep] + self._offs, T - 1)
         w = self.ev_chunk_work * finite[self._rep] \
-            * active[self.ev_chunk_req]
+            * active2d[self.ev_chunk_plan, self.ev_chunk_req]
         flat = (self.ev_chunk_plan * S + self.ev_chunk_station) * T + bins
         return np.bincount(flat, weights=w,
                            minlength=P * S * T).reshape(P, S, T)
@@ -490,9 +675,20 @@ class FleetSim:
 
         ``zero_load`` skips the queue scan entirely (all waits zero):
         the infinite-capacity reference whose latencies are exactly the
-        engine's — the natural anchor for relative-headroom SLOs.
+        engine's — the natural anchor for relative-headroom SLOs.  The
+        admission controller (if configured) is also bypassed at zero
+        load.
+
+        Args:
+            active: Optional (R,) bool participation mask (default: all).
+            zero_load: Skip queueing and admission entirely.
+
+        Returns:
+            A :class:`~repro.traffic.metrics.TrafficResult` with one
+            :class:`~repro.traffic.metrics.PlanTraffic` per plan.
         """
         qcfg = self.qcfg
+        acfg = qcfg.admission
         req = self.requests
         P, R = self.n_plans, self.n_requests
         M, L = self.n_tokens, self.n_layers
@@ -501,6 +697,19 @@ class FleetSim:
             active = np.ones(R, dtype=bool)
         active = np.asarray(active, dtype=bool)
 
+        adm_on = self.admission_on and not zero_load
+        shed = np.zeros((P, R), dtype=bool)
+        retries = np.zeros((P, R), dtype=np.int64)
+        ingress_extra = self.ingress_extra
+        start_pref = self.start_pref
+        if adm_on:
+            ctrl = jnp.asarray(control_bin_flags(self.n_bins, qcfg.dt_s,
+                                                 acfg.interval_s))
+            admit_floor = np.ones((P, self.n_gw_stations, self.n_bins))
+            margin = acfg.target_margin
+            ttft0 = jnp.asarray(self._adm_ttft0)
+            tpot0 = jnp.asarray(self._adm_tpot0)
+
         gw_wait = np.zeros((P, M, L))
         ex_max = np.zeros((P, M, L))
         gw_over = np.zeros((P, M, L), dtype=bool)
@@ -508,12 +717,36 @@ class FleetSim:
         n_iter = 1 if zero_load else max(1, qcfg.iterations)
         for _ in range(n_iter):
             layer_arr, exp_arr, tok_total, seg_incl, c0 = \
-                self._schedule(gw_wait, ex_max)
-            work = self._bin_work(layer_arr, exp_arr, active)
+                self._schedule(gw_wait, ex_max, start_pref)
+            work = self._bin_work(layer_arr, exp_arr,
+                                  active[None, :] & ~shed)
             if zero_load:
                 break
-            wait, dropped = _fleet_queue_scan(
-                jnp.asarray(work), jnp.asarray(qcfg.buffer_s), qcfg.dt_s)
+            if adm_on:
+                wait, dropped, admit = admission_queue_scan(
+                    jnp.asarray(work), jnp.asarray(qcfg.buffer_s),
+                    qcfg.dt_s, ttft0, tpot0, ctrl,
+                    jnp.ones((P, self.n_gw_stations)),
+                    margin * acfg.ttft_target_s,
+                    margin * acfg.tpot_target_s,
+                    acfg.increase, acfg.decrease, acfg.admit_min,
+                    n_gateways=L)
+                # Monotone outer iteration: accumulate the trace as a
+                # running minimum so the shed set only grows and the
+                # fixed point converges from the congested side.
+                admit_floor = np.minimum(admit_floor, np.asarray(admit))
+                choice, shed = resolve_admission(
+                    admit_floor, self._att_bin, self._att_station,
+                    self._att_feasible, self._adm_u)
+                retries = np.where(shed, 0, choice)
+                ingress_extra = np.take_along_axis(
+                    np.moveaxis(self._att_extra, 0, 1),     # (P, A, R)
+                    retries[:, None, :], axis=1)[:, 0, :]   # (P, R)
+                start_pref = req.arrival_s[None, :] + ingress_extra
+            else:
+                wait, dropped = _fleet_queue_scan(
+                    jnp.asarray(work), jnp.asarray(qcfg.buffer_s),
+                    qcfg.dt_s)
             wait = np.asarray(wait)
             overload = np.asarray(dropped) > 0.0
             gw_wait, ex_max, gw_over, ex_over = self._gather(
@@ -521,23 +754,29 @@ class FleetSim:
         # Fold the final gather into the schedule once more so reported
         # latencies reflect the waits actually found on the last pass.
         layer_arr, exp_arr, tok_total, seg_incl, c0 = \
-            self._schedule(gw_wait, ex_max)
+            self._schedule(gw_wait, ex_max, start_pref)
 
         # --- request metrics -----------------------------------------------
         last_tok = self.first_tok + req.decode_len - 1
-        ttft = self.ingress_extra + tok_total[:, :R]              # (P, R)
+        ttft = ingress_extra + tok_total[:, :R]                   # (P, R)
         e2e = ttft + seg_incl[:, last_tok]                        # (P, R)
 
         tok_over = gw_over.any(axis=2) | ex_over.any(axis=2)      # (P, M)
         fail_tok = self.nan_tok | tok_over
-        failed = self.fail_ingress | fail_tok[:, :R] \
+        failed = fail_tok[:, :R] \
             | _segment_any(fail_tok[:, R:], self.tok_req, R)      # (P, R)
+        if adm_on:
+            # Shed requests are accounted separately (not involuntary
+            # drops); admitted requests entered via a feasible attempt.
+            failed |= shed
+        else:
+            failed |= self.fail_ingress
 
         # KV admission cap: reject arrivals that would exceed the
         # in-flight budget (first-order: in-flight counted over all
-        # offered requests).
+        # offered requests).  The adaptive controller replaces this cap.
         admitted = np.ones((P, R), dtype=bool)
-        if qcfg.kv_slots > 0:
+        if qcfg.kv_slots > 0 and not adm_on:
             comp = req.arrival_s[None, :] + np.nan_to_num(
                 e2e, nan=np.inf, posinf=np.inf)
             comp = np.where(active[None, :], comp, -np.inf)
@@ -571,6 +810,9 @@ class FleetSim:
                 station_util=util[p],
                 span_s=span,
                 token_total_s=tok_total[p],
+                shed=(shed[p] & active) if adm_on else None,
+                retries=np.where(served[p], retries[p], 0)
+                if adm_on else None,
             ))
         return TrafficResult(plans=plans_out, requests=req,
                              slots=self.slots, n_bins=self.n_bins,
@@ -590,7 +832,23 @@ def simulate_traffic(
     **kwargs,
 ) -> TrafficResult:
     """One-shot convenience wrapper: build a :class:`FleetSim` and run it
-    with every request active."""
+    with every request active.
+
+    Args:
+        plans: Placement-plan sweep.
+        topo: Sampled topology.
+        activation: Expert-activation model.
+        workload: FLOP model of the served MoE.
+        compute: FLOPs -> seconds conversion.
+        requests: The request trace.
+        rng: Randomness for engine draws / admission uniforms.
+        qcfg: Queueing/admission parameters.
+        ground: Optional ground segment.
+        **kwargs: Forwarded to :class:`FleetSim`.
+
+    Returns:
+        The :class:`~repro.traffic.metrics.TrafficResult` of one full run.
+    """
     sim = FleetSim(plans, topo, activation, workload, compute, requests,
                    rng, qcfg=qcfg, ground=ground, **kwargs)
     return sim.run()

@@ -42,14 +42,17 @@ class RequestBatch:
 
     @property
     def n_requests(self) -> int:
+        """Number of requests in the trace (R)."""
         return len(self.arrival_s)
 
     @property
     def total_decode_tokens(self) -> int:
+        """Total decode tokens across the trace (N)."""
         return int(self.decode_len.sum())
 
     @property
     def horizon_s(self) -> float:
+        """Last arrival time, seconds (0 for an empty trace)."""
         return float(self.arrival_s[-1]) if self.n_requests else 0.0
 
     def subset(self, mask: np.ndarray) -> "RequestBatch":

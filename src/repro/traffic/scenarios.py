@@ -26,6 +26,7 @@ from repro.core.latency import ComputeConfig, TopologySample
 from repro.core.workload import MoEWorkload
 from repro.distributed import migration, replan_on_failure
 
+from .admission import AdmissionConfig
 from .ground import GroundSegment
 from .metrics import SLO, TrafficResult
 from .queueing import FleetSim, QueueConfig
@@ -34,7 +35,13 @@ from .requests import RequestBatch, sample_requests
 
 @dataclasses.dataclass(frozen=True)
 class TrafficScenario:
-    """A named, fully-specified serving workload."""
+    """A named, fully-specified serving workload.
+
+    ``admission`` switches the fleet simulator from the static
+    ``kv_slots`` cap to the latency-target AIMD controller with gateway
+    retry (see :mod:`repro.traffic.admission`); the ``*-controlled``
+    registry entries are the canonical examples.
+    """
 
     name: str
     description: str
@@ -59,6 +66,8 @@ class TrafficScenario:
     buffer_s: float = 10.0
     kv_slots: int = 0
     tail_s: float = 120.0
+    # adaptive admission (None = static kv_slots cap only)
+    admission: AdmissionConfig | None = None
     # objective
     slo: SLO = SLO()
     # failure storm (None = no storm)
@@ -67,6 +76,17 @@ class TrafficScenario:
 
     def requests(self, rng: np.random.Generator, n_stations: int = 1,
                  rate_scale: float = 1.0) -> RequestBatch:
+        """Sample this scenario's request trace.
+
+        Args:
+            rng: Randomness source for arrivals and lengths.
+            n_stations: Ground-gateway count to spread arrivals over.
+            rate_scale: Multiplier on the base arrival rate (overload /
+                saturation studies).
+
+        Returns:
+            The sampled :class:`~repro.traffic.requests.RequestBatch`.
+        """
         period = self.diurnal_period_s or self.horizon_s
         return sample_requests(
             rng,
@@ -88,8 +108,11 @@ class TrafficScenario:
         )
 
     def queue_config(self, slot_period_s: float | None = None) -> QueueConfig:
+        """The scenario's :class:`~repro.traffic.queueing.QueueConfig`
+        (optionally overriding the wall-clock slot period)."""
         kw = dict(dt_s=self.dt_s, buffer_s=self.buffer_s,
-                  kv_slots=self.kv_slots, tail_s=self.tail_s)
+                  kv_slots=self.kv_slots, tail_s=self.tail_s,
+                  admission=self.admission)
         if slot_period_s is not None:
             kw["slot_period_s"] = slot_period_s
         return QueueConfig(**kw)
@@ -130,11 +153,32 @@ SCENARIOS: dict[str, TrafficScenario] = {
             horizon_s=300.0, base_rate_rps=0.3, decode_mean=16,
             failure_at_s=150.0, failure_frac=0.25,
         ),
+        TrafficScenario(
+            name="regional-hotspot-controlled",
+            description="regional-hotspot surge under the AIMD "
+                        "latency-target admission controller "
+                        "(gateway retry; replaces the static KV cap)",
+            horizon_s=300.0, base_rate_rps=0.3, arrival="hotspot",
+            hotspot_boost=5.0, decode_mean=16, kv_slots=0,
+            admission=AdmissionConfig(ttft_target_s=30.0),
+            slo=SLO(ttft_s=30.0),
+        ),
+        TrafficScenario(
+            name="failure-storm-controlled",
+            description="failure-storm with the AIMD admission "
+                        "controller defending the TTFT target through "
+                        "the post-storm degraded (multi-expert) fleet",
+            horizon_s=300.0, base_rate_rps=0.3, decode_mean=16,
+            failure_at_s=150.0, failure_frac=0.25, kv_slots=0,
+            admission=AdmissionConfig(ttft_target_s=30.0),
+            slo=SLO(ttft_s=30.0),
+        ),
     )
 }
 
 
 def get_scenario(name: str) -> TrafficScenario:
+    """Look up a registry scenario by name (KeyError lists the options)."""
     try:
         return SCENARIOS[name]
     except KeyError:

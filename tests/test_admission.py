@@ -1,0 +1,282 @@
+"""Adaptive admission control tests: slack-target parity with the
+uncontrolled simulator, target-holding + goodput dominance over the
+static KV cap under the regional-hotspot overload (frontier written to
+BENCH_admission.json), ranked ground visibility / gateway-retry tables,
+controller plumbing through the scenario registry, and config
+validation."""
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        rand_intra_cg_plan, sample_topology, spacemoe_plan)
+from repro.traffic import (AdmissionConfig, FleetSim, QueueConfig,
+                           build_ground_segment, control_bin_flags,
+                           get_scenario, resolve_admission, run_scenario,
+                           sample_requests)
+
+CFG = ConstellationConfig.scaled(8, 12, n_slots=10, survival_prob=1.0)
+WL = MoEWorkload.llama_moe_3p5b()
+COMP = ComputeConfig()
+
+
+def _world(seed=0, n_layers=4, n_experts=4, top_k=2):
+    con = Constellation(CFG)
+    topo = sample_topology(con, LinkConfig(), np.random.default_rng(seed))
+    activ = ActivationModel.zipf(n_layers, n_experts, top_k, seed=1)
+    ground = build_ground_segment(con, LinkConfig(), min_elevation_deg=10.0)
+    plans = [spacemoe_plan(con, topo, activ),
+             rand_intra_cg_plan(con.cfg, n_layers, n_experts,
+                                np.random.default_rng(7))]
+    return con, topo, activ, ground, plans
+
+
+def _sim(plans, topo, activ, ground, req, qcfg, seed=5):
+    return FleetSim(plans, topo, activ, WL, COMP, req,
+                    np.random.default_rng(seed), qcfg=qcfg, ground=ground)
+
+
+# --------------------------------------------------------------------- #
+# (a) slack target == uncontrolled
+# --------------------------------------------------------------------- #
+
+
+def test_slack_target_reproduces_uncontrolled_steady_state():
+    """With a latency target far above anything the trace can reach, the
+    controller must admit everything at attempt 0 (zero shedding, zero
+    retries) and reproduce the uncontrolled metrics bit-for-bit."""
+    con, topo, activ, ground, plans = _world()
+    rng = np.random.default_rng(3)
+    req = sample_requests(rng, rate_rps=1.0, horizon_s=40.0,
+                          n_stations=ground.n_stations,
+                          prompt_median=4, prompt_max=16,
+                          decode_mean=4, decode_max=8)
+    base = _sim(plans, topo, activ, ground, req,
+                QueueConfig(dt_s=0.05, tail_s=30.0)).run()
+    slack = AdmissionConfig(ttft_target_s=1e6)
+    ctrl = _sim(plans, topo, activ, ground, req,
+                QueueConfig(dt_s=0.05, tail_s=30.0, admission=slack)).run()
+    for p in range(len(plans)):
+        b, c = base.plans[p], ctrl.plans[p]
+        assert c.shed_rate == 0.0
+        assert (c.retries == 0).all()
+        np.testing.assert_array_equal(b.served, c.served)
+        np.testing.assert_array_equal(b.ttft_s, c.ttft_s)
+        np.testing.assert_array_equal(b.e2e_s, c.e2e_s)
+        assert b.goodput_tok_s == c.goodput_tok_s
+
+
+# --------------------------------------------------------------------- #
+# (b) hotspot overload: hold the target, beat the static cap
+# --------------------------------------------------------------------- #
+
+
+def test_controller_holds_target_and_beats_static_cap():
+    """Under the regional-hotspot overload the AIMD controller keeps the
+    served p99 TTFT within the target while delivering at least the
+    static-cap baseline's goodput; the measured frontier is written to
+    BENCH_admission.json."""
+    con, topo, activ, ground, plans = _world()
+    sc = get_scenario("regional-hotspot")
+    sc = dataclasses.replace(sc, horizon_s=60.0, tail_s=60.0)
+    req = sc.requests(np.random.default_rng(2), ground.n_stations,
+                      rate_scale=6.0)
+    assert req.n_requests > 50                     # genuinely overloaded
+
+    static = _sim(plans, topo, activ, ground, req,
+                  QueueConfig(dt_s=0.05, tail_s=60.0, kv_slots=8)).run()
+    zero = _sim(plans, topo, activ, ground, req,
+                QueueConfig(dt_s=0.05, tail_s=60.0)).run(zero_load=True)
+    target = 3.0 * max(p.quantile("ttft", 0.99) for p in zero.plans)
+
+    frontier = [dict(policy="static", knob=8.0, **{
+        "plan": p.plan_name, "goodput_tok_s": p.goodput_tok_s,
+        "ttft_p99_s": p.quantile("ttft", 0.99),
+        "shed_rate": p.shed_rate, "drop_rate": p.drop_rate,
+    }) for p in static.plans]
+    for scale in (3.0, 5.0):
+        t = scale / 3.0 * target
+        acfg = AdmissionConfig(ttft_target_s=t)
+        ctrl = _sim(plans, topo, activ, ground, req,
+                    QueueConfig(dt_s=0.05, tail_s=60.0,
+                                admission=acfg)).run()
+        for p, s in zip(ctrl.plans, static.plans):
+            assert p.shed_rate > 0.0               # overload: load was shed
+            assert p.quantile("ttft", 0.99) <= t   # target held
+            assert p.goodput_tok_s >= s.goodput_tok_s   # >= static cap
+            frontier.append(dict(
+                policy="aimd", knob=t, plan=p.plan_name,
+                goodput_tok_s=p.goodput_tok_s,
+                ttft_p99_s=p.quantile("ttft", 0.99),
+                shed_rate=p.shed_rate, drop_rate=p.drop_rate))
+    out = pathlib.Path(__file__).resolve().parent.parent \
+        / "BENCH_admission.json"
+    out.write_text(json.dumps(
+        {"world": "test-8x12", "offered_rps": req.n_requests / 60.0,
+         "frontier": frontier}, indent=2))
+    assert out.exists() and len(frontier) >= 6
+
+
+def test_retry_recovers_goodput_over_no_retry():
+    """Gateway retry should never lose requests relative to the same
+    controller with retries disabled (the retried fraction is extra
+    admitted mass)."""
+    con, topo, activ, ground, plans = _world()
+    sc = get_scenario("regional-hotspot")
+    req = dataclasses.replace(sc, horizon_s=40.0).requests(
+        np.random.default_rng(9), ground.n_stations, rate_scale=5.0)
+    kw = dict(ttft_target_s=15.0)
+    with_retry = _sim(plans, topo, activ, ground, req,
+                      QueueConfig(dt_s=0.05, tail_s=40.0,
+                                  admission=AdmissionConfig(**kw))).run()
+    no_retry = _sim(plans, topo, activ, ground, req,
+                    QueueConfig(dt_s=0.05, tail_s=40.0,
+                                admission=AdmissionConfig(
+                                    max_retries=0, **kw))).run()
+    for p_r, p_n in zip(with_retry.plans, no_retry.plans):
+        assert p_r.shed_rate <= p_n.shed_rate + 1e-12
+        if p_r.retry_rate > 0:
+            # retried requests paid latency for admission: TTFT includes
+            # the backoff + terrestrial forward
+            retried = p_r.served & (p_r.retries > 0)
+            assert p_r.ttft_s[retried].min() >= \
+                AdmissionConfig(**kw).retry_backoff_s
+
+
+# --------------------------------------------------------------------- #
+# Ranked ground tables + retry ordering
+# --------------------------------------------------------------------- #
+
+
+def test_ground_ranked_visibility_table():
+    con, topo, activ, ground, plans = _world()
+    assert ground.n_ranked > 1
+    # rank 0 is exactly the legacy argmax ingress
+    np.testing.assert_array_equal(ground.ingress_ranked[..., 0],
+                                  ground.ingress_sat)
+    # elevations non-increasing along the rank axis (where visible)
+    el = ground.elevation_ranked_rad
+    vis = ground.ingress_ranked >= 0
+    both = vis[..., :-1] & vis[..., 1:]
+    assert (el[..., :-1][both] >= el[..., 1:][both] - 1e-12).all()
+    # invisible tail is padded with -1 / +inf
+    assert np.isinf(ground.uplink_ranked_s[~vis]).all()
+
+
+def test_ground_retry_stations_exclude_origin_and_rank_by_latency():
+    con, topo, activ, ground, plans = _world()
+    rng = np.random.default_rng(0)
+    R = 64
+    slots = rng.integers(0, ground.n_slots, R)
+    origin = rng.integers(0, ground.n_stations, R)
+    alts = ground.retry_stations(slots, origin, 3)
+    assert alts.shape == (R, 3)
+    assert (alts != origin[:, None]).all()
+    score = ground.uplink_s[slots] + ground.ground_delay_s[origin]
+    picked = np.take_along_axis(score, alts, axis=1)
+    assert (np.diff(picked, axis=1) >= -1e-12).all()
+    # terrestrial delay table: symmetric, zero diagonal, sub-100ms
+    g = ground.ground_delay_s
+    np.testing.assert_allclose(g, g.T)
+    assert (np.diag(g) == 0).all() and g.max() < 0.11
+
+
+def test_retry_stations_never_returns_origin_under_sparse_visibility():
+    """The origin's +inf score can tie with invisible gateways' +inf
+    uplinks — the origin must still never appear among the retries."""
+    from repro.traffic import GroundSegment, GroundStation
+    stations = (GroundStation("a", 0.0, 0.0), GroundStation("b", 0.0, 90.0),
+                GroundStation("c", 0.0, 180.0))
+    g = GroundSegment(
+        stations=stations,
+        ingress_sat=np.array([[3, -1, -1]]),      # only the origin sees a sat
+        uplink_s=np.array([[0.01, np.inf, np.inf]]),
+        elevation_rad=np.zeros((1, 3)),
+        min_elevation_deg=25.0)
+    alts = g.retry_stations(np.array([0]), np.array([0]), 2)
+    assert alts.shape == (1, 2)
+    assert (alts != 0).all()
+
+
+def test_no_ground_retries_are_same_gateway_backoff():
+    """Without a ground segment a retry re-attempts the (single logical)
+    gateway after the backoff — feasible wherever attempt 0 was."""
+    con, topo, activ, ground, plans = _world()
+    req = sample_requests(np.random.default_rng(1), rate_rps=1.0,
+                          horizon_s=20.0, n_stations=1, prompt_median=4,
+                          prompt_max=8, decode_mean=2, decode_max=4)
+    sim = FleetSim(plans, topo, activ, WL, COMP, req,
+                   np.random.default_rng(5),
+                   qcfg=QueueConfig(dt_s=0.05, tail_s=20.0,
+                                    admission=AdmissionConfig()))
+    np.testing.assert_array_equal(sim._att_feasible[1], sim._att_feasible[0])
+    assert (sim._att_extra[1] >= sim._att_extra[0]
+            + AdmissionConfig().retry_backoff_s - 1e-12).all()
+
+
+# --------------------------------------------------------------------- #
+# Scenario plumbing + config validation + kernel helpers
+# --------------------------------------------------------------------- #
+
+
+def test_controlled_scenarios_registered_and_runnable():
+    con, topo, activ, ground, plans = _world()
+    for name in ("regional-hotspot-controlled", "failure-storm-controlled"):
+        sc = get_scenario(name)
+        assert sc.admission is not None and sc.admission.policy == "aimd"
+        assert sc.kv_slots == 0              # the controller replaces the cap
+    sc = dataclasses.replace(
+        get_scenario("regional-hotspot-controlled"), horizon_s=30.0,
+        tail_s=30.0, decode_mean=4, decode_max=8, prompt_median=4,
+        prompt_max=16)
+    out = run_scenario(sc, plans, topo, activ, WL, COMP,
+                       np.random.default_rng(4), ground=ground,
+                       constellation=con)
+    rows = out.result.table(sc.slo, scenario=sc.name)
+    assert {"shed_rate", "retry_rate"} <= set(rows[0])
+
+
+def test_admission_config_validation():
+    with pytest.raises(ValueError):
+        AdmissionConfig(policy="nope")
+    with pytest.raises(ValueError):
+        AdmissionConfig(decrease=1.5)
+    with pytest.raises(ValueError):
+        AdmissionConfig(increase=0.0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(max_retries=-1)
+    with pytest.raises(ValueError):
+        AdmissionConfig(target_margin=0.0)
+    with pytest.raises(ValueError):
+        AdmissionConfig(reference_quantile=1.5)
+    assert AdmissionConfig().n_attempts == 3
+
+
+def test_control_bin_flags_cadence():
+    flags = control_bin_flags(10, dt_s=0.05, interval_s=0.2)  # every 4 bins
+    np.testing.assert_array_equal(np.flatnonzero(flags), [3, 7])
+    assert control_bin_flags(4, dt_s=0.5, interval_s=0.1).all()
+
+
+def test_resolve_admission_first_feasible_attempt_wins():
+    P, G, T, A, R = 2, 2, 4, 3, 3
+    admit = np.ones((P, G, T))
+    admit[0, 0, :] = 0.0                      # plan 0, gateway 0 rejects
+    attempt_bin = np.zeros((A, R), dtype=np.int64)
+    attempt_station = np.array([[0, 0, 0], [1, 1, 1], [1, 1, 1]])
+    feasible = np.ones((A, P, R), dtype=bool)
+    feasible[1, :, 2] = False                 # r2 must go to attempt 2
+    u = np.full((A, R), 0.5)
+    choice, shed = resolve_admission(admit, attempt_bin, attempt_station,
+                                     feasible, u)
+    assert not shed.any()
+    np.testing.assert_array_equal(choice[0], [1, 1, 2])   # retried off g0
+    np.testing.assert_array_equal(choice[1], [0, 0, 0])   # plan 1 admits
+    # all-rejecting trace -> shed
+    choice, shed = resolve_admission(np.zeros((P, G, T)), attempt_bin,
+                                     attempt_station, feasible, u)
+    assert shed.all()

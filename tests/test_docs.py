@@ -1,0 +1,51 @@
+"""Docs-layer tests: the CI docs job's checks must pass from pytest too
+(markdown links resolve, README quickstart snippet is in sync and
+executes), and the benchmark registry must expose descriptions."""
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_docs_pages_exist_and_linked_from_readme():
+    readme = (REPO / "README.md").read_text()
+    for page in ("docs/architecture.md", "docs/paper_map.md"):
+        assert (REPO / page).exists(), page
+        assert page in readme, f"README does not link {page}"
+
+
+def test_check_docs_links_and_snippet_parity():
+    """Link check + README/example snippet parity (no execution — the
+    full quickstart run happens in test_quickstart_executes)."""
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py"), "--no-exec"],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr + proc.stdout
+
+
+def test_quickstart_executes():
+    """The README quickstart (examples/readme_quickstart.py) runs and
+    prints the ranked plan table."""
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "examples" / "readme_quickstart.py")],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert "SpaceMoE" in proc.stdout
+
+
+def test_bench_list_prints_descriptions():
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--list"],
+        capture_output=True, text=True, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr
+    lines = [ln for ln in proc.stdout.splitlines() if ln.strip()]
+    names = {ln.split()[0] for ln in lines}
+    assert {"engine", "traffic", "admission"} <= names
+    for ln in lines:
+        name, _, desc = ln.partition(" ")
+        assert desc.strip(), f"bench {name!r} listed without a description"

@@ -1,0 +1,129 @@
+"""Docs health check: markdown link check + executable README quickstart.
+
+Three stdlib-only checks, run by the CI ``docs`` job and by
+``tests/test_docs.py``:
+
+1. **Link check** — every relative markdown link in ``README.md`` and
+   ``docs/*.md`` must resolve to an existing file (anchors stripped);
+   absolute URLs are only validated for scheme sanity (CI stays
+   offline-deterministic).
+2. **Snippet parity** — the first fenced ``python`` block in README.md
+   must be byte-identical to the marked snippet region of
+   ``examples/readme_quickstart.py``, so the README code cannot drift
+   from the file that is actually executed.
+3. **Quickstart execution** (skippable with ``--no-exec``) — runs
+   ``examples/readme_quickstart.py`` with ``PYTHONPATH=src`` and
+   requires a SpaceMoE result row on stdout.
+
+    python tools/check_docs.py [--no-exec]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SNIPPET_START = "# --8<-- [start:snippet]"
+SNIPPET_END = "# --8<-- [end:snippet]"
+
+
+def iter_doc_files() -> list[pathlib.Path]:
+    """README.md plus every markdown page under docs/."""
+    return [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+
+
+def check_links(errors: list[str]) -> int:
+    """Validate every markdown link target; returns the link count."""
+    n = 0
+    for doc in iter_doc_files():
+        if not doc.exists():
+            errors.append(f"{doc.relative_to(REPO)}: file missing")
+            continue
+        for target in LINK_RE.findall(doc.read_text()):
+            n += 1
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if target.startswith("#"):          # in-page anchor
+                continue
+            rel = target.split("#", 1)[0]
+            if not (doc.parent / rel).exists():
+                errors.append(
+                    f"{doc.relative_to(REPO)}: broken link -> {target}")
+    return n
+
+
+def readme_python_block() -> str:
+    """The first fenced ```python block in README.md (stripped)."""
+    text = (REPO / "README.md").read_text()
+    m = re.search(r"```python\n(.*?)```", text, flags=re.S)
+    if not m:
+        raise SystemExit("README.md has no ```python block")
+    return m.group(1).strip()
+
+
+def snippet_region() -> str:
+    """The marked snippet region of examples/readme_quickstart.py."""
+    lines = (REPO / "examples" / "readme_quickstart.py").read_text() \
+        .splitlines()
+    try:
+        lo = lines.index(SNIPPET_START) + 1
+        hi = lines.index(SNIPPET_END)
+    except ValueError:
+        raise SystemExit("readme_quickstart.py lost its snippet markers")
+    return "\n".join(lines[lo:hi]).strip()
+
+
+def check_snippet(errors: list[str]) -> None:
+    """README python block must equal the executable snippet region."""
+    if readme_python_block() != snippet_region():
+        errors.append(
+            "README.md python block != examples/readme_quickstart.py "
+            "snippet region — update one to match the other")
+
+
+def run_quickstart(errors: list[str]) -> None:
+    """Execute the quickstart and require a SpaceMoE row on stdout."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "examples" / "readme_quickstart.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    if proc.returncode != 0:
+        errors.append(f"quickstart failed (rc={proc.returncode}):\n"
+                      f"{proc.stderr[-2000:]}")
+    elif "SpaceMoE" not in proc.stdout:
+        errors.append("quickstart ran but printed no SpaceMoE result row")
+
+
+def main(argv: list[str] | None = None) -> int:
+    """Run all checks; print a report and return a process exit code."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-exec", action="store_true",
+                    help="skip executing the quickstart snippet")
+    args = ap.parse_args(argv)
+
+    errors: list[str] = []
+    n_links = check_links(errors)
+    check_snippet(errors)
+    if not args.no_exec:
+        run_quickstart(errors)
+
+    docs = ", ".join(str(d.relative_to(REPO)) for d in iter_doc_files())
+    if errors:
+        print("docs check FAILED:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    print(f"docs check OK: {n_links} links across [{docs}], README snippet "
+          f"in sync" + ("" if args.no_exec else ", quickstart executed"))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
