@@ -1,0 +1,214 @@
+"""Re-placement frontier: replan cadence x migration budget vs the best static plan.
+
+Two overloaded re-placement scenarios (``regional-hotspot-replan``,
+``failure-storm-replan``) run on one world and candidate pool.  The
+backlog-driven controller of :mod:`repro.traffic.replan` is swept over
+its two knobs —
+
+* **cadence** (``period_slots``): how many topology-slot boundaries
+  pass between decisions;
+* **migration budget** (``migration_weight_s_per_mb``): the
+  switching-cost gate, seconds of predicted gain demanded per MB of
+  expert weights moved —
+
+and every point lands on a goodput vs p99-TTFT frontier next to the
+static candidates (which ride along in the same fleet sweep, common
+random numbers).  A ``periodic`` (backlog-blind) point isolates what
+the live backlog signal buys.  The headline check is the PR's
+acceptance criterion: backlog-driven replanning beats the best static
+plan on goodput at matched (no worse) p99 TTFT under both scenarios,
+storm phases combined.  CI uploads ``BENCH_replan.json``.
+
+    PYTHONPATH=src python -m benchmarks.run --fast --only replan
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        baseline_plans, sample_topology)
+from repro.traffic import (ReplanConfig, build_ground_segment, format_table,
+                           get_scenario, run_scenario)
+
+from .common import Timer, emit
+
+#: Decision cadences tested (topology-slot boundaries per decision).
+CADENCES_FAST = (1, 2)
+CADENCES_FULL = (1, 2, 4)
+#: Migration budgets tested (s of predicted gain demanded per MB moved).
+MIG_WEIGHTS_FAST = (0.0, 0.05)
+MIG_WEIGHTS_FULL = (0.0, 0.01, 0.1)
+#: Overload multiplier (the frontier is only interesting past saturation).
+RATE_SCALE = 9.0
+
+
+def _world(fast: bool, seed: int = 0):
+    """A roomy constellation (placement alternatives must exist) serving
+    a short-request workload that saturates at RATE_SCALE."""
+    ccfg = ConstellationConfig.scaled(12, 16, n_slots=12)
+    con = Constellation(ccfg)
+    link = LinkConfig()
+    topo = sample_topology(con, link, np.random.default_rng(seed))
+    activ = ActivationModel.zipf(4, 8, 2, seed=seed)
+    wl = MoEWorkload.llama_moe_3p5b()
+    ground = build_ground_segment(con, link, min_elevation_deg=10.0)
+    return con, topo, activ, wl, ComputeConfig(), ground
+
+
+def _scenario(name: str, fast: bool):
+    horizon = 90.0 if fast else 180.0
+    return dataclasses.replace(
+        get_scenario(name),
+        horizon_s=horizon, tail_s=60.0, slot_period_s=15.0, buffer_s=3.0,
+        decode_mean=8, decode_max=16, prompt_median=4, prompt_max=16,
+        failure_at_s=(horizon / 2.0
+                      if get_scenario(name).failure_at_s is not None
+                      else None))
+
+
+def _phases(out):
+    """(tag, TrafficResult, ReplanReport|None) per phase of an outcome."""
+    phases = [("main", out.result, out.replan)]
+    if out.post_failure is not None:
+        phases.append(("post", out.post_failure, out.post_replan))
+    return phases
+
+
+def _combined(rows_by_phase: list[dict]) -> tuple[float, float]:
+    """(goodput, p99 TTFT) over all phases: token-weighted goodput, worst
+    phase p99 (the stricter matched-latency bound)."""
+    tok = sum(r["goodput_tok_s"] * r["span_s"] for r in rows_by_phase)
+    span = sum(r["span_s"] for r in rows_by_phase)
+    p99s = [r["ttft_p99_s"] for r in rows_by_phase
+            if np.isfinite(r["ttft_p99_s"])]
+    return tok / span if span else 0.0, max(p99s) if p99s else float("nan")
+
+
+def _collect(out, policy: str, knobs: dict) -> list[dict]:
+    """Flatten one scenario outcome into frontier rows (replan row and
+    every static candidate, per phase)."""
+    rows = []
+    for tag, res, rep in _phases(out):
+        for p in res.plans:
+            is_replan = p.plan_name.startswith("replan/")
+            rows.append({
+                "policy": policy if is_replan else "static",
+                **(knobs if is_replan else
+                   {k: None for k in knobs}),
+                "phase": tag,
+                "plan": p.plan_name,
+                "goodput_tok_s": round(p.goodput_tok_s, 3),
+                "ttft_p99_s": round(p.quantile("ttft", 0.99), 3),
+                "drop_rate": round(p.drop_rate, 4),
+                "span_s": round(p.span_s, 3),
+                "migration_mb": round(p.migration_bytes / 1e6, 3),
+                "switches": rep.n_switches if (is_replan and rep) else 0,
+            })
+    return rows
+
+
+def run(fast: bool = True, json_path: str | None = None) -> dict:
+    """Sweep cadence x migration budget; emit the replan-vs-static
+    frontier and the acceptance headline per scenario."""
+    con, topo, activ, wl, comp, ground = _world(fast)
+    plans = baseline_plans(con, topo, activ, np.random.default_rng(3),
+                           n_random_draws=2)
+    cadences = CADENCES_FAST if fast else CADENCES_FULL
+    weights = MIG_WEIGHTS_FAST if fast else MIG_WEIGHTS_FULL
+
+    out: dict = {"fast": fast, "rate_scale": RATE_SCALE,
+                 "candidates": [p.name for p in plans],
+                 "cadences": list(cadences), "mig_weights": list(weights)}
+    all_rows: list[dict] = []
+    headline = {}
+    for name in ("regional-hotspot-replan", "failure-storm-replan"):
+        sc0 = _scenario(name, fast)
+        rows: list[dict] = []
+
+        def run_one(rcfg, policy, knobs, sc0=sc0, rows=rows):
+            sc = dataclasses.replace(sc0, replan=rcfg)
+            res = run_scenario(sc, plans, topo, activ, wl, comp,
+                               np.random.default_rng(11), ground=ground,
+                               constellation=con, rate_scale=RATE_SCALE)
+            rows += _collect(res, policy, knobs)
+
+        with Timer() as t:
+            for cad in cadences:
+                for w in weights:
+                    run_one(ReplanConfig(mode="backlog", period_slots=cad,
+                                         migration_weight_s_per_mb=w),
+                            "backlog", {"cadence": cad, "mig_weight": w})
+            # Backlog-blind control point: what the live signal buys.
+            run_one(ReplanConfig(mode="periodic"), "periodic",
+                    {"cadence": 1, "mig_weight": 0.01})
+
+        # Acceptance: best backlog point's combined goodput must beat the
+        # best static candidate's at matched (no worse) p99 TTFT.
+        def combined(policy, plan=None):
+            sel = [r for r in rows if r["policy"] == policy
+                   and (plan is None or r["plan"] == plan)]
+            by_knob: dict = {}
+            for r in sel:
+                by_knob.setdefault(
+                    (r["plan"], r.get("cadence"), r.get("mig_weight")),
+                    []).append(r)
+            return {k: _combined(v) for k, v in by_knob.items()}
+
+        statics = combined("static")
+        # One (goodput, p99) per static candidate: keep each candidate's
+        # first sweep point (statics repeat identically across points).
+        static_best = {}
+        for (plan, _c, _w), gp in statics.items():
+            static_best.setdefault(plan, gp)
+        best_static_plan, (best_static_g, best_static_p99) = max(
+            static_best.items(), key=lambda kv: kv[1][0])
+        backlog_pts = combined("backlog")
+        matched = {k: v for k, v in backlog_pts.items()
+                   if not np.isfinite(best_static_p99)
+                   or (np.isfinite(v[1]) and v[1] <= best_static_p99)}
+        best_replan = max(matched.values(), key=lambda v: v[0],
+                          default=(0.0, float("nan")))
+        headline[name] = {
+            "best_static_plan": best_static_plan,
+            "best_static_goodput": round(best_static_g, 3),
+            "best_static_ttft_p99_s": round(best_static_p99, 3),
+            "best_replan_goodput_at_matched_p99": round(best_replan[0], 3),
+            "replan_beats_static": bool(best_replan[0] > best_static_g),
+        }
+        all_rows += [{"scenario": name, **r} for r in rows]
+        emit(f"replan/{name}", t.seconds * 1e6,
+             f"replan={best_replan[0]:.3f};static={best_static_g:.3f};"
+             f"beats={headline[name]['replan_beats_static']}")
+
+    out["frontier"] = all_rows
+    out["headline"] = headline
+    # Console table: every replan point, but each static candidate only
+    # once per (scenario, phase) — statics repeat identically across
+    # sweep points.
+    show, seen_static = [], set()
+    for r in all_rows:
+        if r["policy"] == "static":
+            key = (r["scenario"], r["phase"], r["plan"])
+            if key in seen_static:
+                continue
+            seen_static.add(key)
+        show.append(r)
+    print(format_table(show, prefix="# "))
+    for name, h in headline.items():
+        print(f"# {name}: replan {h['best_replan_goodput_at_matched_p99']} "
+              f"vs static {h['best_static_goodput']} tok/s at p99 <= "
+              f"{h['best_static_ttft_p99_s']}s -> "
+              f"{'BEATS' if h['replan_beats_static'] else 'does not beat'}")
+
+    if json_path:
+        import json
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    run()

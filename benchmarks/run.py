@@ -33,8 +33,8 @@ def main() -> None:
 
     from . import (bench_admission, bench_engine, bench_fig6, bench_fig7,
                    bench_kernels, bench_linkstate, bench_multi_expert,
-                   bench_placement, bench_roofline, bench_table2,
-                   bench_traffic)
+                   bench_placement, bench_replan, bench_roofline,
+                   bench_table2, bench_traffic)
 
     n_tok = 120 if args.fast else 400
     suite = {
@@ -46,6 +46,8 @@ def main() -> None:
                     lambda: bench_traffic.run(fast=args.fast)),
         "admission": (bench_admission,
                       lambda: bench_admission.run(fast=args.fast)),
+        "replan": (bench_replan,
+                   lambda: bench_replan.run(fast=args.fast)),
         "table2": (bench_table2, lambda: bench_table2.run(
             n_tokens=n_tok, n_slots=60 if args.fast else None)),
         "fig6": (bench_fig6,

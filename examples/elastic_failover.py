@@ -1,52 +1,98 @@
-"""Elastic failover study: node failures and stragglers during MoE serving.
+"""Elastic failover study: satellite failures, live re-placement, stragglers.
 
-Maps the paper's ISL-outage model (Eq. 3) onto device failures on the EP
-ring: as devices die, the Theorem-1 re-plan concentrates surviving slots
-around the dispatch origin, trading weight-migration bytes for expected
-dispatch latency (paper Sec. VI-B's multi-expert regime appears
-automatically as capacity shrinks).
+Maps the paper's ISL-outage model (Eq. 3) onto expert-satellite failures
+and shows the three recovery layers the repo now has:
+
+1. **failure-storm** (scenario registry): a storm knocks out a fraction
+   of every layer's expert satellites mid-horizon; the Theorem-1
+   machinery re-places their experts on the survivors via
+   ``repro.distributed.elastic`` (multi-expert regime), with the weight
+   migration bytes accounted — what used to be a hand-rolled failure
+   loop here is now one registry call;
+2. **PlanSchedule / replan**: the post-storm fleet keeps re-placing
+   *continuously* — the backlog-driven controller of
+   ``repro.traffic.replan`` re-ranks the candidate pool each topology
+   slot and assembles a time-indexed schedule whose migration bytes
+   ride the ISL queues;
+3. **straggler mitigation** (device ring): a slow device keeps its
+   slots but its inflated cost drains hot experts away (soft failure).
 
     PYTHONPATH=src python examples/elastic_failover.py
 """
+import dataclasses
+
 import numpy as np
 
-from repro.core import (ActivationModel, TorusSpec, expected_dispatch_cost,
-                        plan_expert_devices)
-from repro.distributed import (migration, replan_on_failure,
-                               replan_with_stragglers)
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        TorusSpec, baseline_plans, plan_expert_devices,
+                        sample_topology)
+from repro.distributed import replan_with_stragglers
+from repro.traffic import format_table, get_scenario, run_scenario
 
-E, TOP_K = 64, 6                      # deepseek-moe-16b MoE geometry
-BYTES_PER_EXPERT = 3 * 2048 * 1408 * 2   # bf16 expert weights
+E, TOP_K = 8, 2
 
 
 def main():
-    w = ActivationModel.zipf(1, E, TOP_K, seed=0).weights[0]
-    torus = TorusSpec(shape=(4, 4))
-    plan = plan_expert_devices(w, TOP_K, torus)
-    print(f"initial: {E} experts on {torus.n_devices} devices, "
-          f"expected dispatch {expected_dispatch_cost(plan, w, TOP_K)*1e6:.2f} us")
+    # ---- world + candidate pool --------------------------------------
+    cfg = ConstellationConfig.scaled(8, 12, n_slots=10, survival_prob=1.0)
+    con = Constellation(cfg)
+    topo = sample_topology(con, LinkConfig(), np.random.default_rng(0))
+    activ = ActivationModel.zipf(4, E, TOP_K, seed=0)
+    wl, comp = MoEWorkload.llama_moe_3p5b(), ComputeConfig()
+    plans = baseline_plans(con, topo, activ, np.random.default_rng(3),
+                           n_random_draws=1)
+    print(f"candidate pool: {[p.name for p in plans]}")
 
-    rng = np.random.default_rng(0)
-    failed: set[int] = set()
-    for round_i in range(4):
-        nxt = int(rng.choice([d for d in range(torus.n_devices)
-                              if d not in failed]))
-        failed.add(nxt)
-        new_plan, survivors = replan_on_failure(w, TOP_K, torus, failed)
-        mig = migration(plan, new_plan, BYTES_PER_EXPERT, survivors)
-        cost = expected_dispatch_cost(new_plan, w, TOP_K)
-        print(f"round {round_i+1}: device {nxt} fails "
-              f"({len(survivors)} left, {new_plan.experts_per_device}/dev) -> "
-              f"move {len(mig.moved_experts)} experts "
-              f"({mig.bytes_moved/1e6:.0f} MB), dispatch {cost*1e6:.2f} us")
-        plan = new_plan
+    # ---- 1: failure-storm via the scenario registry ------------------
+    sc = dataclasses.replace(
+        get_scenario("failure-storm"), horizon_s=60.0, tail_s=30.0,
+        failure_at_s=30.0, decode_mean=4, decode_max=8, prompt_median=4,
+        prompt_max=16)
+    out = run_scenario(sc, plans, topo, activ, wl, comp,
+                       np.random.default_rng(4), constellation=con,
+                       rate_scale=3.0)
+    rows = out.result.table(sc.slo, scenario="pre-storm")
+    rows += out.post_failure.table(sc.slo, scenario="post-storm")
+    print(format_table(rows))
+    for name, b in out.storm.migration_bytes.items():
+        print(f"  storm re-place {name}: {out.storm.moved_experts[name]} "
+              f"experts move, {b/1e6:.0f} MB")
 
+    # ---- 2: continuous re-placement over a PlanSchedule --------------
+    sc = dataclasses.replace(
+        get_scenario("failure-storm-replan"), horizon_s=60.0, tail_s=30.0,
+        failure_at_s=30.0, slot_period_s=15.0, decode_mean=4, decode_max=8,
+        prompt_median=4, prompt_max=16)
+    out = run_scenario(sc, plans, topo, activ, wl, comp,
+                       np.random.default_rng(4), constellation=con,
+                       rate_scale=5.0)
+    print("\ncontinuous re-placement (backlog mode):")
+    for tag, res, rep in (("pre", out.result, out.replan),
+                          ("post", out.post_failure, out.post_replan)):
+        rp = res.by_name(rep.schedule.name)
+        best_static = max((p.goodput_tok_s for p in res.plans
+                           if p.plan_name != rep.schedule.name))
+        print(f"  {tag}-storm {rep.schedule.name}: "
+              f"{rep.n_switches} switch(es), "
+              f"{rp.migration_bytes/1e6:.0f} MB migrated in-horizon, "
+              f"goodput {rp.goodput_tok_s:.2f} tok/s "
+              f"(best static {best_static:.2f})")
+        for d in rep.decisions:
+            if d.switched:
+                cand = rep.candidates[d.chosen]
+                print(f"    boundary {d.boundary} (slot {d.slot}): "
+                      f"-> {cand.name} ({d.migration_bytes/1e6:.0f} MB)")
+
+    # ---- 3: straggler mitigation (device ring, soft failure) ---------
     print("\nstraggler mitigation (no failure, device 0 slowed 20x):")
-    base = plan_expert_devices(w, TOP_K, torus)
-    hot_on_0 = [e for e in range(E) if base.device_of_expert(e) == 0]
-    slow = replan_with_stragglers(w, TOP_K, torus, {0: 20.0})
-    hot_after = [e for e in range(E) if slow.device_of_expert(e) == 0]
-    p = ActivationModel(weights=w[None], top_k=TOP_K).probs(0)
+    w = ActivationModel.zipf(1, 64, 6, seed=0).weights[0]
+    torus = TorusSpec(shape=(4, 4))
+    base = plan_expert_devices(w, 6, torus)
+    hot_on_0 = [e for e in range(64) if base.device_of_expert(e) == 0]
+    slow = replan_with_stragglers(w, 6, torus, {0: 20.0})
+    hot_after = [e for e in range(64) if slow.device_of_expert(e) == 0]
+    p = ActivationModel(weights=w[None], top_k=6).probs(0)
     print(f"  device-0 expert load before: {p[hot_on_0].sum():.3f}  "
           f"after: {p[hot_after].sum():.3f} (hot experts drained)")
 

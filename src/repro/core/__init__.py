@@ -14,8 +14,9 @@ from .constellation import (EARTH_RADIUS_M, SPEED_OF_LIGHT, Constellation,
 from .device_placement import (DevicePlacementPlan, TorusSpec,
                                expected_dispatch_cost, identity_plan,
                                plan_expert_devices)
-from .engine import (PlanBatch, contention_counts, evaluate_plans,
-                     hop_latency, ingress_offsets)
+from .engine import (PlanBatch, ScheduleBatch, contention_counts,
+                     evaluate_plans, evaluate_schedules, hop_latency,
+                     ingress_offsets, schedule_ingress_offsets)
 from .latency import (ComputeConfig, LinkConfig, TopologySample,
                       expected_path_latency, gateway_distance_table,
                       sample_topology, source_distance_table)
@@ -26,6 +27,8 @@ from .placement import (MultiExpertPlan, PlacementPlan, baseline_plans,
                         rand_intra_cg_plan, rand_intra_plan, rand_place_plan,
                         rank_plans, ring_subnets, spacemoe_plan,
                         subnet_routing_sets, theorem1_assignment)
+from .schedule import (PlanSchedule, ScheduleMigration, as_schedule,
+                       migration_between, slot_of_time)
 from .simulator import (SimResult, simulate_token_generation,
                         simulate_token_generation_legacy)
 from .workload import MoEWorkload
@@ -37,8 +40,11 @@ __all__ = [
     "EARTH_RADIUS_M", "SPEED_OF_LIGHT", "Constellation", "ConstellationConfig",
     "DevicePlacementPlan", "TorusSpec", "expected_dispatch_cost",
     "identity_plan", "plan_expert_devices",
-    "PlanBatch", "contention_counts", "evaluate_plans", "hop_latency",
-    "ingress_offsets",
+    "PlanBatch", "ScheduleBatch", "contention_counts", "evaluate_plans",
+    "evaluate_schedules", "hop_latency", "ingress_offsets",
+    "schedule_ingress_offsets",
+    "PlanSchedule", "ScheduleMigration", "as_schedule", "migration_between",
+    "slot_of_time",
     "ComputeConfig", "LinkConfig", "TopologySample", "expected_path_latency",
     "gateway_distance_table", "sample_topology", "source_distance_table",
     "brute_force_optimal", "layer_latency_closed_form",

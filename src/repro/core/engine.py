@@ -28,6 +28,7 @@ from .activation import ActivationModel, sample_topk_jax
 from .latency import (ComputeConfig, TopologySample, node_masks_from_sets,
                       source_distance_table)
 from .placement import MultiExpertPlan, PlacementPlan
+from .schedule import PlanSchedule, as_schedule
 from .workload import MoEWorkload
 
 # A stale route whose latency moved by more than one hop (> ~2 ms) — or
@@ -215,6 +216,118 @@ class PlanBatch:
 
 
 # --------------------------------------------------------------------- #
+# Schedule batching: Q time-indexed schedules over one union PlanBatch
+# --------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass
+class ScheduleBatch:
+    """Q :class:`~repro.core.schedule.PlanSchedule` entries stacked for one
+    engine pass.
+
+    The union of every schedule's distinct plans is stacked into one
+    :class:`PlanBatch` (the Dijkstra rows dedupe across the whole
+    union); ``plan_row[q, n]`` maps schedule q / topology slot n to its
+    row of the base batch — the slot -> plan-row gather that replaces the
+    static engine path's constant plan index.
+    """
+
+    base: PlanBatch           # union-plan batch (deduped Dijkstra table)
+    plan_row: np.ndarray      # (Q, N_T) base-batch row per (schedule, slot)
+    names: tuple[str, ...]
+    _device: object | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def n_schedules(self) -> int:
+        """Number of schedules stacked in the batch (Q)."""
+        return self.plan_row.shape[0]
+
+    @property
+    def n_layers(self) -> int:
+        """MoE layers shared by every plan of every schedule (L)."""
+        return self.base.n_layers
+
+    @property
+    def n_sats(self) -> int:
+        """Graph nodes of the topology the batch was built on (V)."""
+        return self.base.dist.shape[2]
+
+    def plan_row_device(self):
+        """``plan_row`` as a cached device array (the base batch caches
+        its own arrays separately)."""
+        if self._device is None:
+            self._device = jnp.asarray(self.plan_row, dtype=jnp.int32)
+        return self._device
+
+    def gateways_by_slot(self) -> np.ndarray:
+        """(Q, N_T, L) gateway satellite per (schedule, slot, layer)."""
+        return self.base.gateways[self.plan_row]
+
+    def expert_sats_by_slot(self) -> np.ndarray:
+        """(Q, N_T, L, I) expert satellite per (schedule, slot, layer,
+        expert)."""
+        return self.base.expert_sats[self.plan_row]
+
+    def eta_by_slot(self) -> np.ndarray:
+        """(Q, N_T) Eq. 43 compute-sharing efficiency per (schedule,
+        slot)."""
+        return self.base.eta[self.plan_row]
+
+    def matches(self, schedules: list, topo: TopologySample,
+                node_sets: list | None, eta: float) -> bool:
+        """True iff this batch was built from exactly these schedules on
+        this topology realization and these settings."""
+        union = [p for s in schedules for p in s.plans]
+        if len(union) != self.base.n_plans:
+            return False
+        rows = _schedule_rows(schedules)
+        return (rows.shape == self.plan_row.shape
+                and np.array_equal(rows, self.plan_row)
+                and self.base.matches(union, topo, node_sets, eta))
+
+    @classmethod
+    def from_schedules(
+        cls,
+        schedules: list[PlanSchedule],
+        topo: TopologySample,
+        node_sets: list | None = None,
+        eta: float = 1.0,
+    ) -> "ScheduleBatch":
+        """Stack schedules onto one union :class:`PlanBatch`."""
+        schedules = list(schedules)
+        if not schedules:
+            raise ValueError("empty schedule sweep")
+        for s in schedules:
+            if s.n_slots != topo.n_slots:
+                raise ValueError(
+                    f"schedule {s.name!r} covers {s.n_slots} slots but the "
+                    f"topology has {topo.n_slots}")
+        union = [p for s in schedules for p in s.plans]
+        base = PlanBatch.from_plans(union, topo, node_sets=node_sets, eta=eta)
+        return cls(base=base, plan_row=_schedule_rows(schedules),
+                   names=tuple(s.name for s in schedules))
+
+
+def _schedule_rows(schedules: list[PlanSchedule]) -> np.ndarray:
+    """(Q, N_T) union-batch row per (schedule, slot)."""
+    offsets = np.cumsum([0] + [len(s.plans) for s in schedules[:-1]])
+    return np.stack([off + s.slot_plan
+                     for off, s in zip(offsets, schedules)])
+
+
+def schedule_ingress_offsets(batch: ScheduleBatch, slots: np.ndarray,
+                             ingress_sats: np.ndarray) -> np.ndarray:
+    """Per-token uphill offset D(ingress sat, gateway_0; slot), shape
+    (Q, T) — the :func:`ingress_offsets` analog where the layer-0
+    gateway row follows the slot's plan instead of being constant."""
+    slots = np.asarray(slots)
+    ingress_sats = np.asarray(ingress_sats)
+    g0 = batch.base.g_idx[batch.plan_row[:, slots], 0]        # (Q, T)
+    return batch.base.dist[slots[None, :], g0, ingress_sats[None, :]]
+
+
+# --------------------------------------------------------------------- #
 # The jit kernel
 # --------------------------------------------------------------------- #
 
@@ -295,6 +408,54 @@ def _evaluate_batch(dist, g_idx, expert_sats, slots, stale_slots, draws,
     return token_lat, layer_lat
 
 
+@functools.partial(jax.jit, static_argnames=("stale",))
+def _evaluate_schedule_batch(dist, g_idx, expert_sats, eta, plan_row,
+                             slots, stale_slots, draws,
+                             t_gateway, t_expert, t_head, penalty,
+                             stale: bool):
+    """(token_latency (Q, T), layer_latency (Q, T, L)) for a ScheduleBatch.
+
+    Identical arithmetic to :func:`_evaluate_batch` except the plan is a
+    function of the token's topology slot: ``plan_row[q, slots[t]]``
+    selects the row of the union batch, so gateways, expert satellites
+    and eta are gathered per token.  With a constant schedule every
+    gather returns the static plan's values and the result is bit-for-bit
+    the static kernel's (the parity ``tests/test_schedule.py`` pins).
+
+    dist: (N_T, G, V); g_idx: (P, L); expert_sats: (P, L, I); eta: (P,);
+    plan_row: (Q, N_T); slots/stale_slots: (T,); draws: (L, T, K).
+    """
+    row_tok = plan_row[:, slots]                              # (Q, T)
+
+    def _one_schedule(rows):
+        g_tok = g_idx[rows]                                   # (T, L)
+        g_next = jnp.roll(g_tok, -1, axis=1)  # ring wrap for the last layer
+        sats_tok = expert_sats[rows]                          # (T, L, I)
+        eta_tok = eta[rows]                                   # (T,)
+
+        def _layer_step(_, xs):
+            draws_l, g_l, g_n, sats_i = xs    # (T, K), (T,), (T,), (T, I)
+            sats = jnp.take_along_axis(sats_i, draws_l, axis=1)   # (T, K)
+            d_out = hop_latency(dist, slots, stale_slots, g_l[:, None],
+                                sats, penalty, stale)
+            d_in = hop_latency(dist, slots, stale_slots, g_n[:, None],
+                               sats, penalty, stale)
+            q = contention_counts(sats)
+            t_exp = (q.astype(dist.dtype) / eta_tok[:, None]) * t_expert
+            lay = t_gateway + (d_out + t_exp + d_in).max(axis=1)
+            return None, lay
+
+        _, lat = jax.lax.scan(
+            _layer_step, None,
+            (draws, g_tok.T, g_next.T, jnp.moveaxis(sats_tok, 1, 0)))
+        return lat.T                                          # (T, L)
+
+    layer_lat = jax.vmap(_one_schedule)(row_tok)              # (Q, T, L)
+    layer_lat = jnp.where(jnp.isfinite(layer_lat), layer_lat, jnp.nan)
+    token_lat = layer_lat.sum(axis=2) + t_head
+    return token_lat, layer_lat
+
+
 @functools.partial(jax.jit, static_argnames=("n_tokens", "top_k"))
 def _sample_draws_jax(weights, key, n_tokens: int, top_k: int):
     """(L, T, K) conditional-Poisson draws, one key-split per layer."""
@@ -307,6 +468,41 @@ def _sample_draws_jax(weights, key, n_tokens: int, top_k: int):
 # --------------------------------------------------------------------- #
 # Public sweep API
 # --------------------------------------------------------------------- #
+
+
+def _resolve_slots_draws(topo, activation, rng, n_tokens, slots, draws,
+                         sample_backend):
+    """Shared host-side sampling for the plan and schedule sweeps: the
+    token -> slot assignment and the (L, T, K) expert draws, honoring the
+    legacy random stream when neither is pinned by the caller."""
+    n_layers = activation.n_layers
+    if slots is None:
+        slots = rng.integers(0, topo.n_slots, size=n_tokens)
+    else:
+        slots = np.asarray(slots)
+        if slots.shape != (n_tokens,):
+            raise ValueError("slots must have shape (n_tokens,)")
+        if slots.min() < 0 or slots.max() >= topo.n_slots:
+            raise ValueError("slot index out of range for this topology")
+    if draws is not None:
+        draws = np.asarray(draws)
+        if draws.shape != (n_layers, n_tokens, activation.top_k):
+            raise ValueError("draws must have shape (n_layers, n_tokens, K)")
+    elif sample_backend == "host":
+        # Same call order as the legacy simulator: slots, then layer draws.
+        draws = np.stack(
+            [activation.sample(layer, rng, n_tokens)
+             for layer in range(n_layers)]
+        )
+    elif sample_backend == "jax":
+        key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
+        draws = _sample_draws_jax(
+            jnp.asarray(activation.weights, dtype=jnp.float32), key,
+            n_tokens, activation.top_k,
+        )
+    else:
+        raise ValueError(f"unknown sample_backend {sample_backend!r}")
+    return slots, draws
 
 
 def evaluate_plans(
@@ -367,32 +563,8 @@ def evaluate_plans(
     if batch.n_layers != n_layers:
         raise ValueError("plan sweep and activation model disagree on n_layers")
 
-    if slots is None:
-        slots = rng.integers(0, topo.n_slots, size=n_tokens)
-    else:
-        slots = np.asarray(slots)
-        if slots.shape != (n_tokens,):
-            raise ValueError("slots must have shape (n_tokens,)")
-        if slots.min() < 0 or slots.max() >= topo.n_slots:
-            raise ValueError("slot index out of range for this topology")
-    if draws is not None:
-        draws = np.asarray(draws)
-        if draws.shape != (n_layers, n_tokens, activation.top_k):
-            raise ValueError("draws must have shape (n_layers, n_tokens, K)")
-    elif sample_backend == "host":
-        # Same call order as the legacy simulator: slots, then layer draws.
-        draws = np.stack(
-            [activation.sample(layer, rng, n_tokens)
-             for layer in range(n_layers)]
-        )
-    elif sample_backend == "jax":
-        key = jax.random.PRNGKey(int(rng.integers(0, 2**31 - 1)))
-        draws = _sample_draws_jax(
-            jnp.asarray(activation.weights, dtype=jnp.float32), key,
-            n_tokens, activation.top_k,
-        )
-    else:
-        raise ValueError(f"unknown sample_backend {sample_backend!r}")
+    slots, draws = _resolve_slots_draws(topo, activation, rng, n_tokens,
+                                        slots, draws, sample_backend)
     stale_slots = (slots - route_staleness) % topo.n_slots
 
     t_gateway = compute.latency_s(workload.gateway_flops(ctx_len))
@@ -415,4 +587,80 @@ def evaluate_plans(
         SimResult(token_latency_s=token_lat[p], layer_latency_s=layer_lat[p],
                   plan_name=batch.names[p])
         for p in range(batch.n_plans)
+    ]
+
+
+def evaluate_schedules(
+    schedules: list,
+    topo: TopologySample,
+    activation: ActivationModel,
+    workload: MoEWorkload,
+    compute: ComputeConfig,
+    rng: np.random.Generator,
+    n_tokens: int = 1000,
+    ctx_len: int = 1024,
+    include_lm_head: bool = True,
+    eta: float = 1.0,
+    node_sets: list | None = None,
+    route_staleness: int = 0,
+    reroute_penalty_s: float = 0.0,
+    batch: ScheduleBatch | None = None,
+    sample_backend: str = "host",
+    slots: np.ndarray | None = None,
+    draws: np.ndarray | None = None,
+) -> list[SimResult]:
+    """Monte-Carlo E2E latency for a sweep of Q time-indexed schedules.
+
+    The time-indexed face of :func:`evaluate_plans`: per token the
+    topology slot selects the plan in effect (the ``plan_row`` gather of
+    :class:`ScheduleBatch`), so a schedule that switches plans pays each
+    slot's own gateways, expert satellites and contention.  Entries may
+    be plain plans — they are wrapped into constant schedules, and a
+    constant schedule reproduces ``evaluate_plans`` **bit-for-bit**
+    (same slots, same draws, same float ops; pinned by
+    ``tests/test_schedule.py``).
+
+    Sampling semantics (``slots`` / ``draws`` pinning, the legacy random
+    stream, ``sample_backend``) are exactly ``evaluate_plans``'s.
+    """
+    schedules = [as_schedule(s, topo.n_slots) for s in schedules]
+    if batch is None:
+        batch = ScheduleBatch.from_schedules(schedules, topo,
+                                             node_sets=node_sets, eta=eta)
+    if batch.n_schedules != len(schedules):
+        raise ValueError("batch/schedules length mismatch")
+    if not batch.matches(schedules, topo, node_sets, eta):
+        raise ValueError(
+            "prebuilt batch was built from a different sweep (schedule "
+            "plans, slot maps, topology realization, node_sets or eta "
+            "disagree) — rebuild it with ScheduleBatch.from_schedules")
+    if batch.n_layers != activation.n_layers:
+        raise ValueError("schedule sweep and activation model disagree on "
+                         "n_layers")
+
+    slots, draws = _resolve_slots_draws(topo, activation, rng, n_tokens,
+                                        slots, draws, sample_backend)
+    stale_slots = (slots - route_staleness) % topo.n_slots
+
+    t_gateway = compute.latency_s(workload.gateway_flops(ctx_len))
+    t_expert = compute.latency_s(workload.expert_flops)
+    t_head = compute.latency_s(workload.lm_head_flops) if include_lm_head \
+        else 0.0
+
+    dist_d, g_idx_d, sats_d, eta_d = batch.base.device_arrays()
+    token_lat, layer_lat = _evaluate_schedule_batch(
+        dist_d, g_idx_d, sats_d, eta_d, batch.plan_row_device(),
+        jnp.asarray(slots, dtype=jnp.int32),
+        jnp.asarray(stale_slots, dtype=jnp.int32),
+        jnp.asarray(draws, dtype=jnp.int32),
+        t_gateway, t_expert, t_head,
+        reroute_penalty_s,
+        stale=route_staleness != 0,
+    )
+    token_lat = np.asarray(token_lat, dtype=np.float64)
+    layer_lat = np.asarray(layer_lat, dtype=np.float64)
+    return [
+        SimResult(token_latency_s=token_lat[q], layer_latency_s=layer_lat[q],
+                  plan_name=batch.names[q])
+        for q in range(batch.n_schedules)
     ]

@@ -120,6 +120,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--kv-slots", type=int, default=8,
                     help="static KV-slot budget applied with "
                          "--admission static (0 = uncapped)")
+    ap.add_argument("--replan", default=None,
+                    choices=["off", "periodic", "backlog"],
+                    help="continuous re-placement for --traffic: 'off' "
+                         "holds the plans for the whole horizon, "
+                         "'periodic' re-ranks the candidate pool every "
+                         "topology slot, 'backlog' additionally inflates "
+                         "scores with the live per-satellite backlog "
+                         "(adds a replan/<mode> row to the table)")
     ap.add_argument("--fail-device", type=int, default=-1,
                     help="elastic demo: fail this EP device and re-plan")
     args = ap.parse_args(argv)
@@ -220,10 +228,18 @@ def main(argv=None) -> dict:
         if args.traffic:
             import dataclasses
 
-            from repro.traffic import (AdmissionConfig, build_ground_segment,
-                                       format_table, get_scenario,
-                                       run_scenario)
+            from repro.traffic import (AdmissionConfig, ReplanConfig,
+                                       build_ground_segment, format_table,
+                                       get_scenario, run_scenario)
             sc = get_scenario(args.traffic)
+            if args.replan is not None:
+                # Re-placement needs slot boundaries inside the horizon;
+                # keep the scenario's own period when it pins one.
+                sc = dataclasses.replace(
+                    sc,
+                    replan=(None if args.replan == "off"
+                            else ReplanConfig(mode=args.replan)),
+                    slot_period_s=sc.slot_period_s or 60.0)
             if args.admission == "aimd":
                 sc = dataclasses.replace(
                     sc, kv_slots=0,
@@ -252,6 +268,16 @@ def main(argv=None) -> dict:
                     sc.slo, scenario=f"{sc.name}(post)")
             print(format_table(rows, prefix="[traffic] "))
             out["traffic"] = rows
+            for tag, rep in (("replan", res.replan),
+                             ("replan(post)", res.post_replan)):
+                if rep is None:
+                    continue
+                print(f"[{tag}] {rep.schedule.name}: "
+                      f"{rep.n_switches} switch(es), "
+                      f"{rep.total_migration_bytes/1e6:.1f} MB migrated "
+                      f"over {len(rep.decisions)} decision(s)")
+                out[tag] = {"switches": rep.n_switches,
+                            "migration_bytes": rep.total_migration_bytes}
     return out
 
 

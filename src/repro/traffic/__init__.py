@@ -5,15 +5,18 @@ plan-evaluation engine: arrival processes (:mod:`.requests`), ground
 gateway -> ranked ingress-satellite mapping (:mod:`.ground`), the
 discrete-time per-satellite fleet queue kernel (:mod:`.queueing`),
 latency-target adaptive admission control with gateway retry
-(:mod:`.admission`), serving metrics + saturation sweeps
-(:mod:`.metrics`) and the named scenario registry (:mod:`.scenarios`).
+(:mod:`.admission`), backlog-driven continuous re-placement over
+time-indexed :class:`~repro.core.schedule.PlanSchedule` rows
+(:mod:`.replan`), serving metrics + saturation sweeps (:mod:`.metrics`)
+and the named scenario registry (:mod:`.scenarios`).
 
-Shape conventions used throughout the subsystem: ``P`` plans of the
-sweep, ``R`` requests, ``N`` decode tokens, ``M = R + N`` engine tokens
-(prefill macro-token per request first), ``L`` layers, ``I`` experts
-per layer, ``K`` = top-k, ``S = L + L * I`` queue stations per plan
-(gateway satellites then per-layer expert blocks), ``G`` ground
-gateways, ``T`` time bins, ``A`` ingress attempts (1 + retries).
+Shape conventions used throughout the subsystem: ``P`` plan/schedule
+rows of the sweep, ``R`` requests, ``N`` decode tokens, ``M = R + N``
+engine tokens (prefill macro-token per request first), ``L`` layers,
+``I`` experts per layer, ``K`` = top-k, ``S = V`` queue stations (one
+FIFO per satellite), ``G`` ground gateways, ``T`` time bins, ``A``
+ingress attempts (1 + retries), ``N_T`` topology slots, ``C`` candidate
+plans of the re-placement pool.
 """
 from .admission import (AdmissionConfig, admission_queue_scan,
                         control_bin_flags, resolve_admission)
@@ -23,6 +26,9 @@ from .metrics import (SLO, PlanTraffic, SaturationResult, TrafficResult,
                       format_table, saturation_sweep)
 from .queueing import (FleetSim, QueueConfig, simulate_traffic,
                        station_waiting_times)
+from .replan import (ReplanConfig, ReplanDecision, ReplanOutcome,
+                     ReplanReport, backlog_penalty_s, build_replan_schedule,
+                     replan_traffic)
 from .requests import (RequestBatch, diurnal_rate, hotspot_rate,
                        poisson_arrivals, sample_decode_lens,
                        sample_prompt_lens, sample_requests, thinned_arrivals)
@@ -38,6 +44,8 @@ __all__ = [
     "SLO", "PlanTraffic", "SaturationResult", "TrafficResult",
     "format_table", "saturation_sweep",
     "FleetSim", "QueueConfig", "simulate_traffic", "station_waiting_times",
+    "ReplanConfig", "ReplanDecision", "ReplanOutcome", "ReplanReport",
+    "backlog_penalty_s", "build_replan_schedule", "replan_traffic",
     "RequestBatch", "diurnal_rate", "hotspot_rate", "poisson_arrivals",
     "sample_decode_lens", "sample_prompt_lens", "sample_requests",
     "thinned_arrivals",

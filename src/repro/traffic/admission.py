@@ -52,7 +52,6 @@ the congested side).
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -126,16 +125,23 @@ class AdmissionConfig:
         return self.max_retries + 1
 
 
-@functools.partial(jax.jit, static_argnames=("n_gateways",))
-def admission_queue_scan(work, cap, dt, ttft0, tpot0, ctrl, admit0,
-                         ttft_target, tpot_target, increase, decrease,
-                         admit_min, n_gateways: int):
+@jax.jit
+def admission_queue_scan(work, cap, dt, ttft0, tpot0, ctrl, gw_idx, exp_idx,
+                         admit0, ttft_target, tpot_target, increase,
+                         decrease, admit_min):
     """Fleet backlog scan with the AIMD controller in the carry.
 
     The backlog recursion is identical to
     :func:`repro.traffic.queueing._fleet_queue_scan` (same wait/drop
     outputs bit-for-bit), extended with the per-(plan, gateway)
     admission state evolved by the AIMD law in the module docstring.
+
+    Stations are satellites, so which of them form a plan's gateway
+    chain and expert queues is a function of the bin's topology slot
+    under a time-indexed :class:`~repro.core.schedule.PlanSchedule`:
+    ``gw_idx``/``exp_idx`` carry the per-bin station maps through the
+    scan, and the qhat estimate follows the schedule across every plan
+    switch.
 
     Args:
         work: (P, S, T) seconds of offered work per (plan, station, bin).
@@ -144,15 +150,16 @@ def admission_queue_scan(work, cap, dt, ttft0, tpot0, ctrl, admit0,
         ttft0: (P, G) zero-load TTFT reference per (plan, ground gateway).
         tpot0: (P,) zero-load TPOT reference per plan.
         ctrl: (T,) bool — True on bins that close a control interval.
+        gw_idx: (T, P, L) station (satellite) of each gateway of the
+            plan in effect during the bin's topology slot.
+        exp_idx: (T, P, L*I) station of each (layer, expert) under the
+            bin's plan.
         admit0: (P, G) initial admission probabilities (normally ones).
         ttft_target: Margin-scaled TTFT target (scalar).
         tpot_target: Margin-scaled TPOT target (scalar, +inf disables).
         increase: AIMD additive increase per clean interval.
         decrease: AIMD multiplicative decrease on breach.
         admit_min: Admission floor.
-        n_gateways: Static — the plan's L gateway stations occupy
-            stations [0, L); the remaining S - L stations are the L
-            blocks of per-layer expert queues.
 
     Returns:
         (wait, dropped, admit): wait/dropped are (P, S, T) exactly as in
@@ -160,19 +167,20 @@ def admission_queue_scan(work, cap, dt, ttft0, tpot0, ctrl, admit0,
         in effect during each bin.
     """
     p, s, _ = work.shape
-    n_exp = (s - n_gateways) // n_gateways
+    n_layers = gw_idx.shape[2]
 
     def _step(carry, xs):
         backlog, admit, win = carry
-        w_t, is_ctrl = xs
+        w_t, is_ctrl, gw_t, exp_t = xs
         wait = backlog
         total = backlog + w_t
         dropped = jnp.maximum(total - cap, 0.0)
         backlog = jnp.maximum(jnp.minimum(total, cap) - dt, 0.0)
-        # Critical-path queueing-delay estimate (see module docstring).
-        gw = backlog[:, :n_gateways].sum(axis=1)
-        exp = backlog[:, n_gateways:].reshape(p, n_gateways, n_exp) \
-            .max(axis=2).sum(axis=1)
+        # Critical-path queueing-delay estimate (see module docstring),
+        # read at the bin's slot-dependent gateway/expert stations.
+        gw = jnp.take_along_axis(backlog, gw_t, axis=1).sum(axis=1)
+        exp = jnp.take_along_axis(backlog, exp_t, axis=1) \
+            .reshape(p, n_layers, -1).max(axis=2).sum(axis=1)
         win = jnp.maximum(win, gw + exp)                         # (P,)
         over = ((ttft0 + win[:, None]) > ttft_target) \
             | ((tpot0 + win) > tpot_target)[:, None]             # (P, G)
@@ -187,7 +195,7 @@ def admission_queue_scan(work, cap, dt, ttft0, tpot0, ctrl, admit0,
     win0 = jnp.zeros((p,), dtype=work.dtype)
     _, (wait, dropped, admit) = jax.lax.scan(
         _step, (backlog0, jnp.asarray(admit0, dtype=work.dtype), win0),
-        (jnp.moveaxis(work, 2, 0), ctrl))
+        (jnp.moveaxis(work, 2, 0), ctrl, gw_idx, exp_idx))
     return (jnp.moveaxis(wait, 0, 2), jnp.moveaxis(dropped, 0, 2),
             jnp.moveaxis(admit, 0, 2))
 

@@ -69,6 +69,9 @@ class PlanTraffic:
         retries: (R,) gateway-retry attempts used by served requests
             (0 = admitted at the original gateway; None when no
             controller ran).
+        migration_bytes: Weight bytes the plan row's
+            :class:`~repro.core.schedule.PlanSchedule` migrated at slot
+            boundaries within the horizon (0.0 for a static plan).
     """
 
     plan_name: str
@@ -83,6 +86,7 @@ class PlanTraffic:
     token_total_s: np.ndarray
     shed: np.ndarray | None = None
     retries: np.ndarray | None = None
+    migration_bytes: float = 0.0
 
     @property
     def n_active(self) -> int:
@@ -165,6 +169,7 @@ class PlanTraffic:
             "tpot_p99_s": round(self.quantile("tpot", 0.99), 3),
             "e2e_p99_s": round(self.quantile("e2e", 0.99), 3),
             "max_util": round(float(self.station_util.max()), 3),
+            "migration_mb": round(self.migration_bytes / 1e6, 3),
         }
         if slo is not None:
             out["slo_met"] = bool(self.meets(slo))

@@ -1,10 +1,16 @@
 """Discrete-time per-satellite service model for request-level serving.
 
-Every satellite a plan touches is a FIFO work queue: the L gateway
+Every satellite of the constellation is a FIFO work queue (stations are
+keyed by satellite id, S = V): a token deposits on the L gateway
 satellites (attention + gating + lm-head service) and the per-layer
-expert satellites (FFN service; colocated experts share one queue — the
-queue-theoretic face of the Eq. 43 contention term).  The simulator is
-deliberately split into
+expert satellites (FFN service) of *the plan its topology slot selects*
+— plans are time-indexed :class:`~repro.core.schedule.PlanSchedule`
+entries, plain plans riding as constant schedules.  Colocated experts
+share their satellite's queue (the queue-theoretic face of the Eq. 43
+contention term), and a plan switch at a slot boundary redirects new
+deposits while the old plan's backlog drains in place, with the moved
+expert weights occupying destination queues as background load.  The
+simulator is deliberately split into
 
 1. a **base schedule** — per-token zero-load trajectories straight from
    the batched plan-evaluation engine (``core.engine.evaluate_plans``
@@ -55,10 +61,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import PlanBatch, evaluate_plans, ingress_offsets
+from repro.core import (ScheduleBatch, evaluate_schedules,
+                        schedule_ingress_offsets)
 from repro.core.activation import ActivationModel
 from repro.core.latency import ComputeConfig, TopologySample
-from repro.core.placement import MultiExpertPlan
+from repro.core.schedule import as_schedule, slot_of_time
 from repro.core.workload import MoEWorkload
 
 from .admission import (AdmissionConfig, admission_queue_scan,
@@ -92,6 +99,12 @@ class QueueConfig:
         admission: Optional :class:`~repro.traffic.admission
             .AdmissionConfig`; policy ``"aimd"`` switches the run loop
             to the latency-target controller with gateway retry.
+        migration_bytes_per_expert: Weight bytes one expert drags to a
+            new satellite when a :class:`~repro.core.schedule
+            .PlanSchedule` switches plans at a slot boundary.
+        migration_rate_gbps: ISL share available to weight migration;
+            each moved expert occupies its destination satellite's queue
+            for ``bytes * 8 / rate`` seconds of background load.
     """
 
     dt_s: float = 0.05
@@ -101,6 +114,8 @@ class QueueConfig:
     tail_s: float = 120.0
     iterations: int = 3
     admission: AdmissionConfig | None = None
+    migration_bytes_per_expert: float = 1e6
+    migration_rate_gbps: float = 10.0
 
 
 # --------------------------------------------------------------------- #
@@ -195,14 +210,6 @@ def _exclusive_cumsum(a: np.ndarray, axis: int) -> np.ndarray:
     return out - a
 
 
-def _colocation_slots(expert_sats: np.ndarray) -> np.ndarray:
-    """(P, L, I) canonical expert index per (plan, layer, expert):
-    colocated experts map to the first expert on the same satellite, so
-    they share one service queue."""
-    eq = expert_sats[..., :, None] == expert_sats[..., None, :]  # (P,L,I,I)
-    return eq.argmax(axis=-1)
-
-
 def _segment_any(flags: np.ndarray, seg_ids: np.ndarray,
                  n_seg: int) -> np.ndarray:
     """OR-reduce boolean ``flags`` (P, E) over segments of the last axis."""
@@ -238,7 +245,21 @@ def _station_quantile(values: np.ndarray, ok: np.ndarray,
 
 
 class FleetSim:
-    """Request-level serving simulator for a sweep of placement plans.
+    """Request-level serving simulator for a sweep of placement plans
+    *or* time-indexed :class:`~repro.core.schedule.PlanSchedule` entries
+    (plain plans are wrapped into constant schedules, which reproduce
+    the PR-2 static behavior bit-for-bit).
+
+    Queue stations are keyed by **satellite id** — one FIFO work queue
+    per satellite of the constellation (S = V).  Colocated experts share
+    their satellite's queue by construction (the queue-theoretic face of
+    Eq. 43), and a schedule that switches plans at a topology-slot
+    boundary points new deposits at the incoming plan's satellites while
+    the outgoing plan's backlog drains where it sits — the mechanism
+    that makes live re-placement pay.  The weight bytes a switch moves
+    (:meth:`~repro.core.schedule.PlanSchedule.migration_edges`, the
+    ``distributed.elastic`` accounting) occupy each moved expert's
+    destination-satellite queue as background load.
 
     Construction does all the rate-independent precompute: one batched
     engine pass over R prefill macro-tokens + N decode tokens (shared
@@ -271,14 +292,17 @@ class FleetSim:
         ctx_len: int = 1024,
         eta: float = 1.0,
         include_lm_head: bool = True,
-        batch: PlanBatch | None = None,
+        batch: ScheduleBatch | None = None,
     ):
         """Build the simulator and run every rate-independent precompute.
 
         Args:
-            plans: Placement-plan sweep (P entries; mixed
+            plans: Sweep entries (P of them): plain
                 :class:`~repro.core.placement.PlacementPlan` /
-                :class:`~repro.core.placement.MultiExpertPlan` allowed).
+                :class:`~repro.core.placement.MultiExpertPlan` (held for
+                the whole horizon) and/or time-indexed
+                :class:`~repro.core.schedule.PlanSchedule` rows, mixed
+                freely.
             topo: Sampled time-varying topology the engine pass uses.
             activation: Conditional-Poisson expert-activation model.
             workload: Per-component FLOP model of the served MoE.
@@ -292,15 +316,16 @@ class FleetSim:
             ctx_len: Attention context length for gateway service time.
             eta: Eq. 43 compute-sharing efficiency for multi-expert plans.
             include_lm_head: Account lm-head service on the last gateway.
-            batch: Optional prebuilt :class:`~repro.core.PlanBatch` to
-                reuse the deduped Dijkstra table across simulators.
+            batch: Optional prebuilt :class:`~repro.core.ScheduleBatch`
+                to reuse the deduped Dijkstra table across simulators.
         """
         self.plans = list(plans)
+        self.schedules = [as_schedule(p, topo.n_slots) for p in self.plans]
         self.requests = requests
         self.qcfg = qcfg
         self.activation = activation
 
-        P = len(self.plans)
+        P = len(self.schedules)
         R = requests.n_requests
         if R == 0:
             raise ValueError("empty request trace")
@@ -311,26 +336,29 @@ class FleetSim:
         M = R + N
         self.n_plans, self.n_requests = P, R
         self.n_decode_tokens, self.n_tokens = N, M
-        self.n_layers, self.n_stations = L, L + L * n_exp
+        # One FIFO work queue per satellite of the constellation.
+        self.n_layers, self.n_stations = L, topo.n_sats
+        self.n_topo_slots = topo.n_slots
 
         tok_req = requests.request_of_token()                    # (N,)
         self.tok_req = tok_req
 
         # --- slots from wall-clock time (one slot per request: request
         # lifetimes are seconds, a topology slot is minutes) ---------------
-        slot_r = ((requests.arrival_s // qcfg.slot_period_s)
-                  % topo.n_slots).astype(np.int64)
+        slot_r = slot_of_time(requests.arrival_s, qcfg.slot_period_s,
+                              topo.n_slots)
         self.slots = np.concatenate([slot_r, slot_r[tok_req]])   # (M,)
 
         # --- ingress mapping ----------------------------------------------
         if batch is None:
-            batch = PlanBatch.from_plans(self.plans, topo, eta=eta)
+            batch = ScheduleBatch.from_schedules(self.schedules, topo,
+                                                 eta=eta)
         self.batch = batch
         if ground is not None:
             ing_sat, uplink = ground.for_requests(slot_r, requests.station)
             reachable = ing_sat >= 0
-            ing_off = ingress_offsets(batch, slot_r,
-                                      np.where(reachable, ing_sat, 0))
+            ing_off = schedule_ingress_offsets(
+                batch, slot_r, np.where(reachable, ing_sat, 0))
             ing_off = np.where(reachable[None, :], ing_off, np.inf)
         else:
             uplink = np.zeros(R)
@@ -343,8 +371,8 @@ class FleetSim:
         draws = np.stack([activation.sample(layer, rng, M)
                           for layer in range(L)])                 # (L, M, K)
         self.draws = draws
-        self.engine_results = evaluate_plans(
-            self.plans, topo, activation, workload, compute, rng,
+        self.engine_results = evaluate_schedules(
+            self.schedules, topo, activation, workload, compute, rng,
             n_tokens=M, ctx_len=ctx_len, include_lm_head=include_lm_head,
             eta=eta, batch=batch, slots=self.slots, draws=draws)
         token_lat = np.stack(
@@ -388,45 +416,47 @@ class FleetSim:
             - requests.decode_len                                 # (R,)
 
         # --- queue events: (plan, station, request, work) ------------------
-        # Station layout per plan: [0, L) gateways, then L blocks of I
-        # expert queues keyed by (layer, canonical colocated expert).
-        expert_sats = np.stack([np.asarray(p.expert_sats)
-                                for p in self.plans])             # (P, L, I)
-        slot_of = _colocation_slots(expert_sats)                  # (P, L, I)
-        self.slot_of = slot_of
-        eta_p = np.array([eta if isinstance(p, MultiExpertPlan) else 1.0
-                          for p in self.plans])                   # (P,)
-        lidx = np.arange(L)[:, None, None]                        # (L, 1, 1)
+        # Stations are satellites: each token's deposits land on the
+        # satellites its slot's plan routes it through (the slot -> plan
+        # gather), so colocated experts share their satellite's queue
+        # (Eq. 43) and a mid-horizon plan switch redirects new deposits
+        # while the old plan's backlog drains in place.
+        self.gateways_slot = batch.gateways_by_slot()         # (P, N_T, L)
+        self.expert_sats_slot = batch.expert_sats_by_slot()   # (P,N_T,L,I)
+        eta_slot = batch.eta_by_slot()                        # (P, N_T)
+        gw_tok = self.gateways_slot[:, self.slots]            # (P, M, L)
+        sats_tok = self.expert_sats_slot[:, self.slots]       # (P, M, L, I)
+        eta_tok = eta_slot[:, self.slots]                     # (P, M)
 
-        # Gateway work: every token visits every gateway; lm-head work on
-        # the last gateway.
-        gw_station = np.broadcast_to(np.arange(L)[None, None, :], (P, M, L))
+        # Gateway work: every token visits every gateway satellite of its
+        # slot's plan; lm-head work on the last gateway.
+        gw_station = gw_tok
         gw_work = np.broadcast_to(self.gw_service[None, :, None],
                                   (P, M, L)).copy()
         gw_work[:, :, L - 1] += t_head
         gw_req = np.concatenate([np.arange(R), tok_req])          # (M,)
 
         # Decode expert work: the engine's own draws, scattered onto the
-        # colocated queue; colocation multiplies the deposited work (the
-        # Eq. 43 q factor) and eta scales the shared-compute efficiency.
-        d_dec = draws[:, R:, :]                                   # (L, N, K)
-        dec_exp_station = L + lidx * n_exp \
-            + slot_of[:, lidx, d_dec]                             # (P,L,N,K)
+        # drawn expert's satellite; colocation multiplies the deposited
+        # work (the Eq. 43 q factor) and eta scales the shared-compute
+        # efficiency.
+        draws_mlk = np.moveaxis(draws, 0, 1)                      # (M, L, K)
+        exp_sat_tok = np.take_along_axis(
+            sats_tok, draws_mlk[None], axis=3)                    # (P,M,L,K)
+        dec_exp_station = exp_sat_tok[:, R:]                      # (P,N,L,K)
         dec_exp_work = np.broadcast_to(
-            (t_expert / eta_p)[:, None, None, None],
+            (t_expert / eta_tok[:, R:])[..., None, None],
             dec_exp_station.shape)
 
         # Prefill expert work: the whole prompt hits every expert of the
         # layer in proportion to its activation probability (fluid split
         # of the batch), deposited at the prefill token's expert visit.
         probs = activation.all_probs()                            # (L, I)
-        pre_exp_station = np.broadcast_to(
-            (L + np.arange(L)[None, :, None] * n_exp
-             + slot_of)[:, None, :, :], (P, R, L, n_exp))
+        pre_exp_station = sats_tok[:, :R]                         # (P,R,L,I)
         pre_exp_work = np.broadcast_to(
             requests.prompt_len[None, :, None, None]
             * probs[None, None, :, :] * t_expert
-            / eta_p[:, None, None, None], (P, R, L, n_exp))
+            / eta_tok[:, :R, None, None], (P, R, L, n_exp))
 
         ev_station = np.concatenate([
             gw_station.reshape(P, -1),
@@ -440,7 +470,7 @@ class FleetSim:
         ], axis=1)                                                # (P, E)
         ev_req = np.concatenate([
             np.broadcast_to(gw_req[:, None], (M, L)).ravel(),
-            np.broadcast_to(tok_req[None, :, None], (L, N, K)).ravel(),
+            np.broadcast_to(tok_req[:, None, None], (N, L, K)).ravel(),
             np.broadcast_to(np.arange(R)[:, None, None],
                             (R, L, n_exp)).ravel(),
         ])                                                        # (E,)
@@ -449,8 +479,7 @@ class FleetSim:
         # the K expert branches (max over branches joins the layer
         # critical path, mirroring the engine's max over experts).
         self.gather_gw_station = gw_station                       # (P, M, L)
-        self.gather_exp_station = np.moveaxis(
-            L + lidx * n_exp + slot_of[:, lidx, draws], 1, 2)     # (P,M,L,K)
+        self.gather_exp_station = exp_sat_tok                     # (P,M,L,K)
 
         # Chunked service (continuous-batching semantics): a deposit
         # larger than one bin of capacity is spread over consecutive
@@ -484,11 +513,61 @@ class FleetSim:
             raise ValueError(
                 f"{self.n_bins} time bins — raise dt_s or shrink the horizon")
 
+        # --- migration background load (schedule switches) -----------------
+        self._build_migration_load()
+
         # --- admission controller precompute ------------------------------
         acfg = qcfg.admission
         self.admission_on = acfg is not None and acfg.policy == "aimd"
         if self.admission_on:
             self._build_admission_tables(acfg, ground, slot_r, rng)
+
+        # Filled by ``run``: (plan, satellite, bin) backlog of the last
+        # fleet scan (the re-placement controller's observation).
+        self.last_wait: np.ndarray | None = None
+
+    # ----------------------------------------------------------------- #
+
+    def _build_migration_load(self) -> None:
+        """Precompute the background work a schedule's plan switches
+        deposit on the fleet.
+
+        Every slot boundary the wall-clock horizon crosses is checked
+        against each row's :class:`~repro.core.schedule.PlanSchedule`;
+        per moved expert (the ``distributed.elastic`` diff rule via
+        :meth:`~repro.core.schedule.PlanSchedule.migrations_over`) the
+        weight transfer occupies the *destination* satellite's queue for
+        ``bytes * 8 / migration_rate_gbps`` seconds, chunked into dt
+        bins from the boundary — arriving tokens queue behind the
+        weights being installed.  Constant schedules deposit nothing, so
+        the static path is untouched bit-for-bit.
+        """
+        qcfg = self.qcfg
+        dt, T, S = qcfg.dt_s, self.n_bins, self.n_stations
+        sec_per_expert = (qcfg.migration_bytes_per_expert * 8.0
+                          / (qcfg.migration_rate_gbps * 1e9))
+        flat_parts: list[np.ndarray] = []
+        work_parts: list[np.ndarray] = []
+        self.migration_bytes = np.zeros(self.n_plans)
+        for p, sched in enumerate(self.schedules):
+            for t_b, mig in sched.migrations_over(
+                    T * dt, qcfg.slot_period_s,
+                    qcfg.migration_bytes_per_expert):
+                self.migration_bytes[p] += mig.bytes_moved
+                if mig.n_moved == 0 or sec_per_expert <= 0.0:
+                    continue
+                n_ch = max(int(np.ceil(sec_per_expert / dt)), 1)
+                bins = np.minimum(int(t_b / dt) + np.arange(n_ch), T - 1)
+                w = np.minimum(sec_per_expert - np.arange(n_ch) * dt, dt)
+                fl = ((p * S + mig.new_sats[:, None]) * T
+                      + bins[None, :]).ravel()
+                flat_parts.append(fl)
+                work_parts.append(np.broadcast_to(
+                    w[None, :], (mig.n_moved, n_ch)).ravel())
+        self._mig_flat = (np.concatenate(flat_parts) if flat_parts
+                          else np.empty(0, dtype=np.int64))
+        self._mig_work = (np.concatenate(work_parts) if work_parts
+                          else np.empty(0, dtype=np.float64))
 
     # ----------------------------------------------------------------- #
 
@@ -552,8 +631,8 @@ class FleetSim:
             best_ok = np.zeros((P, R), dtype=bool)
             for k in range(ground.n_ranked):
                 reachable = ing_r[:, k] >= 0
-                off = ingress_offsets(self.batch, slot_r,
-                                      np.where(reachable, ing_r[:, k], 0))
+                off = schedule_ingress_offsets(
+                    self.batch, slot_r, np.where(reachable, ing_r[:, k], 0))
                 ok = reachable[None, :] & np.isfinite(off)
                 take = ok & ~best_ok
                 best = np.where(take, up_r[None, :, k] + off, best)
@@ -589,6 +668,19 @@ class FleetSim:
             np.quantile(self.tok_base[i, R:][dec_ok[i]],
                         acfg.reference_quantile)
             if dec_ok[i].any() else 0.0 for i in range(P)])        # (P,)
+
+        # Slot-dependent critical-path stations for the in-scan
+        # controller: per time bin, the bin's topology slot selects each
+        # plan's gateway chain and expert satellites — the admission
+        # law's qhat follows the schedule through every plan switch.
+        slot_of_bin = slot_of_time(np.arange(self.n_bins) * self.qcfg.dt_s,
+                                   self.qcfg.slot_period_s,
+                                   self.n_topo_slots)
+        self._adm_gw_idx = np.ascontiguousarray(np.moveaxis(
+            self.gateways_slot[:, slot_of_bin], 1, 0)).astype(np.int32)
+        self._adm_exp_idx = np.ascontiguousarray(np.moveaxis(
+            self.expert_sats_slot[:, slot_of_bin], 1, 0)).reshape(
+                self.n_bins, P, -1).astype(np.int32)
 
     # ----------------------------------------------------------------- #
 
@@ -633,8 +725,8 @@ class FleetSim:
         ev_time = np.concatenate([
             layer_arr.reshape(P, -1),
             np.broadcast_to(
-                np.moveaxis(exp_arr[:, R:, :], 2, 1)[..., None],
-                (P, self.n_layers, self.n_decode_tokens,
+                exp_arr[:, R:, :, None],
+                (P, self.n_decode_tokens, self.n_layers,
                  self.activation.top_k)).reshape(P, -1),
             np.broadcast_to(
                 exp_arr[:, :R, :, None],
@@ -646,6 +738,10 @@ class FleetSim:
         w = self.ev_chunk_work * finite[self._rep] \
             * active2d[self.ev_chunk_plan, self.ev_chunk_req]
         flat = (self.ev_chunk_plan * S + self.ev_chunk_station) * T + bins
+        if self._mig_flat.size:
+            # Schedule-switch weight migrations ride as background load.
+            flat = np.concatenate([flat, self._mig_flat])
+            w = np.concatenate([w, self._mig_work])
         return np.bincount(flat, weights=w,
                            minlength=P * S * T).reshape(P, S, T)
 
@@ -665,6 +761,18 @@ class FleetSim:
         ex_over = ex_f4 & \
             overload[p_idx[..., None], self.gather_exp_station, ex_b4]
         return gw_wait, ex_wait.max(axis=3), gw_over, ex_over.any(axis=3)
+
+    # ----------------------------------------------------------------- #
+
+    def satellite_backlog(self, plan: int, t_s: float) -> np.ndarray:
+        """(V,) seconds of backlog per satellite that plan row ``plan``
+        observed at wall-clock ``t_s`` in the last ``run`` — the live
+        signal the re-placement controller scores candidate plans
+        against (zeros before any loaded run)."""
+        if self.last_wait is None:
+            return np.zeros(self.n_stations)
+        b = min(int(t_s / self.qcfg.dt_s), self.n_bins - 1)
+        return self.last_wait[plan, :, b]
 
     # ----------------------------------------------------------------- #
 
@@ -709,6 +817,8 @@ class FleetSim:
             margin = acfg.target_margin
             ttft0 = jnp.asarray(self._adm_ttft0)
             tpot0 = jnp.asarray(self._adm_tpot0)
+            gw_idx = jnp.asarray(self._adm_gw_idx)
+            exp_idx = jnp.asarray(self._adm_exp_idx)
 
         gw_wait = np.zeros((P, M, L))
         ex_max = np.zeros((P, M, L))
@@ -725,12 +835,11 @@ class FleetSim:
             if adm_on:
                 wait, dropped, admit = admission_queue_scan(
                     jnp.asarray(work), jnp.asarray(qcfg.buffer_s),
-                    qcfg.dt_s, ttft0, tpot0, ctrl,
+                    qcfg.dt_s, ttft0, tpot0, ctrl, gw_idx, exp_idx,
                     jnp.ones((P, self.n_gw_stations)),
                     margin * acfg.ttft_target_s,
                     margin * acfg.tpot_target_s,
-                    acfg.increase, acfg.decrease, acfg.admit_min,
-                    n_gateways=L)
+                    acfg.increase, acfg.decrease, acfg.admit_min)
                 # Monotone outer iteration: accumulate the trace as a
                 # running minimum so the shed set only grows and the
                 # fixed point converges from the congested side.
@@ -749,6 +858,9 @@ class FleetSim:
                     qcfg.dt_s)
             wait = np.asarray(wait)
             overload = np.asarray(dropped) > 0.0
+            # Exposed for the re-placement controller: the live
+            # (plan, satellite, bin) backlog of the last fleet scan.
+            self.last_wait = wait
             gw_wait, ex_max, gw_over, ex_over = self._gather(
                 wait, overload, layer_arr, exp_arr)
         # Fold the final gather into the schedule once more so reported
@@ -813,6 +925,7 @@ class FleetSim:
                 shed=(shed[p] & active) if adm_on else None,
                 retries=np.where(served[p], retries[p], 0)
                 if adm_on else None,
+                migration_bytes=float(self.migration_bytes[p]),
             ))
         return TrafficResult(plans=plans_out, requests=req,
                              slots=self.slots, n_bins=self.n_bins,

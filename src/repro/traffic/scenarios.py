@@ -30,6 +30,7 @@ from .admission import AdmissionConfig
 from .ground import GroundSegment
 from .metrics import SLO, TrafficResult
 from .queueing import FleetSim, QueueConfig
+from .replan import ReplanConfig, ReplanReport, replan_traffic
 from .requests import RequestBatch, sample_requests
 
 
@@ -66,8 +67,14 @@ class TrafficScenario:
     buffer_s: float = 10.0
     kv_slots: int = 0
     tail_s: float = 120.0
+    # wall-clock seconds per topology slot (None = constellation-derived;
+    # re-placement scenarios pin a short slot so boundaries fall inside
+    # the horizon)
+    slot_period_s: float | None = None
     # adaptive admission (None = static kv_slots cap only)
     admission: AdmissionConfig | None = None
+    # continuous re-placement (None = plans held for the whole horizon)
+    replan: ReplanConfig | None = None
     # objective
     slo: SLO = SLO()
     # failure storm (None = no storm)
@@ -108,13 +115,18 @@ class TrafficScenario:
         )
 
     def queue_config(self, slot_period_s: float | None = None) -> QueueConfig:
-        """The scenario's :class:`~repro.traffic.queueing.QueueConfig`
-        (optionally overriding the wall-clock slot period)."""
+        """The scenario's :class:`~repro.traffic.queueing.QueueConfig`.
+
+        The scenario's own ``slot_period_s`` (when set) wins over the
+        caller's (typically constellation-derived) value.
+        """
         kw = dict(dt_s=self.dt_s, buffer_s=self.buffer_s,
                   kv_slots=self.kv_slots, tail_s=self.tail_s,
                   admission=self.admission)
-        if slot_period_s is not None:
-            kw["slot_period_s"] = slot_period_s
+        period = (self.slot_period_s if self.slot_period_s is not None
+                  else slot_period_s)
+        if period is not None:
+            kw["slot_period_s"] = period
         return QueueConfig(**kw)
 
 
@@ -172,6 +184,25 @@ SCENARIOS: dict[str, TrafficScenario] = {
             failure_at_s=150.0, failure_frac=0.25, kv_slots=0,
             admission=AdmissionConfig(ttft_target_s=30.0),
             slo=SLO(ttft_s=30.0),
+        ),
+        TrafficScenario(
+            name="regional-hotspot-replan",
+            description="regional-hotspot surge under backlog-driven "
+                        "per-slot re-placement (hysteresis + "
+                        "migration-cost gate; statics ride along for "
+                        "comparison)",
+            horizon_s=300.0, base_rate_rps=0.3, arrival="hotspot",
+            hotspot_boost=5.0, decode_mean=16, slot_period_s=60.0,
+            replan=ReplanConfig(mode="backlog"),
+        ),
+        TrafficScenario(
+            name="failure-storm-replan",
+            description="failure-storm where both phases re-place per "
+                        "slot from live backlog (post-storm: among the "
+                        "elastic-degraded multi-expert plans)",
+            horizon_s=300.0, base_rate_rps=0.3, decode_mean=16,
+            failure_at_s=150.0, failure_frac=0.25, slot_period_s=60.0,
+            replan=ReplanConfig(mode="backlog"),
         ),
     )
 }
@@ -277,6 +308,8 @@ class ScenarioOutcome:
     sim: FleetSim
     post_failure: TrafficResult | None = None
     storm: StormReport | None = None
+    replan: ReplanReport | None = None         # main-phase controller
+    post_replan: ReplanReport | None = None    # post-storm controller
 
 
 def make_sim(
@@ -327,17 +360,43 @@ def run_scenario(
     requests arriving after the storm.  Queue state does not carry over
     the boundary (the storm re-plan itself drains the fleet while
     weights migrate), and the migration bytes are reported.
+
+    When ``scenario.replan`` is set, ``plans`` is the *candidate pool*
+    of the re-placement controller (:mod:`repro.traffic.replan`): each
+    phase probes, decides a :class:`~repro.core.schedule.PlanSchedule`
+    and evaluates it alongside the static candidates, so the phase's
+    result table carries one extra ``replan/<mode>`` row (for a storm
+    scenario, the post phase re-places among the degraded plans).
     """
     if isinstance(scenario, str):
         scenario = get_scenario(scenario)
     n_stations = ground.n_stations if ground is not None else 1
     requests = scenario.requests(rng, n_stations, rate_scale=rate_scale)
+    slot_period = (constellation.cfg.orbital_period_s / topo.n_slots
+                   if constellation is not None else None)
+    # One per-expert byte price for the whole outcome: the storm
+    # re-place accounting, the replan migration gate and the fleet's
+    # queue billing must all agree.
+    qcfg = dataclasses.replace(scenario.queue_config(slot_period),
+                               migration_bytes_per_expert=bytes_per_expert)
+
+    def _phase(phase_plans, phase_requests):
+        """One phase: replan-controlled when the scenario asks for it."""
+        if scenario.replan is not None:
+            out = replan_traffic(phase_plans, topo, activation, workload,
+                                 compute, phase_requests, rng,
+                                 scenario.replan, qcfg, ground=ground,
+                                 **sim_kwargs)
+            return out.result, out.sim, out.report
+        sim = FleetSim(phase_plans, topo, activation, workload, compute,
+                       phase_requests, rng, qcfg=qcfg, ground=ground,
+                       **sim_kwargs)
+        return sim.run(), sim, None
 
     if scenario.failure_at_s is None:
-        sim = make_sim(scenario, plans, topo, activation, workload, compute,
-                       rng, ground=ground, constellation=constellation,
-                       requests=requests, **sim_kwargs)
-        return ScenarioOutcome(scenario=scenario, result=sim.run(), sim=sim)
+        result, sim, report = _phase(plans, requests)
+        return ScenarioOutcome(scenario=scenario, result=result, sim=sim,
+                               replan=report)
 
     pre = requests.subset(requests.arrival_s < scenario.failure_at_s)
     post = requests.subset(requests.arrival_s >= scenario.failure_at_s)
@@ -348,16 +407,10 @@ def run_scenario(
     storm = apply_failure_storm(plans, activation, rng,
                                 failure_frac=scenario.failure_frac,
                                 bytes_per_expert=bytes_per_expert)
-    sim = make_sim(scenario, plans, topo, activation, workload, compute,
-                   rng, ground=ground, constellation=constellation,
-                   requests=pre, **sim_kwargs)
-    result = sim.run()
-    post_result = None
+    result, sim, report = _phase(plans, pre)
+    post_result, post_report = None, None
     if post.n_requests:
-        post_sim = make_sim(scenario, storm.degraded_plans, topo, activation,
-                            workload, compute, rng, ground=ground,
-                            constellation=constellation, requests=post,
-                            **sim_kwargs)
-        post_result = post_sim.run()
+        post_result, _, post_report = _phase(storm.degraded_plans, post)
     return ScenarioOutcome(scenario=scenario, result=result, sim=sim,
-                           post_failure=post_result, storm=storm)
+                           post_failure=post_result, storm=storm,
+                           replan=report, post_replan=post_report)

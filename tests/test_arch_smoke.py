@@ -57,6 +57,7 @@ def test_active_params():
     assert 3.0e9 < a < 4.2e9
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_smoke_forward_and_train_step(arch):
     cfg = smoke_config(arch)
@@ -80,6 +81,7 @@ def test_smoke_forward_and_train_step(arch):
     assert bool(jnp.isfinite(loss2)), arch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_smoke_decode_path(arch):
     cfg = smoke_config(arch)

@@ -103,6 +103,7 @@ def test_walker_matches_xla_cost_analysis_without_multipliers():
         / xla["bytes accessed"] < 0.30
 
 
+@pytest.mark.slow
 def test_walker_scales_with_depth_xla_does_not():
     c2 = _compile_train(2)
     c6 = _compile_train(6)

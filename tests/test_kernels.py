@@ -24,8 +24,10 @@ def tol(dtype):
     [
         (4, 128, 256, 128),      # aligned
         (8, 96, 64, 48),         # needs padding on every axis
-        (1, 8, 512, 128),        # single expert, tall K
-        (16, 256, 128, 384),     # many experts
+        pytest.param(1, 8, 512, 128,       # single expert, tall K
+                     marks=pytest.mark.slow),
+        pytest.param(16, 256, 128, 384,    # many experts
+                     marks=pytest.mark.slow),
         (3, 130, 100, 36),       # awkward primes
     ],
 )
@@ -76,9 +78,11 @@ def test_expert_ffn_pallas_matches_moe_layer():
 @pytest.mark.parametrize(
     "b,hkv,g,s,hd,bs",
     [
-        (2, 2, 4, 1024, 128, 512),    # aligned
+        pytest.param(2, 2, 4, 1024, 128, 512,    # aligned
+                     marks=pytest.mark.slow),
         (1, 1, 1, 333, 64, 128),      # MQA, ragged S
-        (4, 8, 12, 256, 128, 256),    # mistral-like grouping
+        pytest.param(4, 8, 12, 256, 128, 256,    # mistral-like grouping
+                     marks=pytest.mark.slow),
         (2, 2, 3, 96, 64, 64),        # tiny G (sublane padding)
     ],
 )

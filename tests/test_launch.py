@@ -127,6 +127,7 @@ print(json.dumps({"ref": float(ref), "dist": float(dist)}))
 """
 
 
+@pytest.mark.slow
 def test_distributed_loss_matches_single_shard():
     """EP shard_map path on 8 host devices == local math (same routing)."""
     res = subprocess.run(
@@ -140,6 +141,7 @@ def test_distributed_loss_matches_single_shard():
     assert abs(out["ref"] - out["dist"]) / abs(out["ref"]) < 2e-2, out
 
 
+@pytest.mark.slow
 def test_dryrun_cli_end_to_end(tmp_path):
     """The actual deliverable path: dryrun CLI lowers+compiles a cell on the
     512-device production mesh and emits a roofline JSON artifact."""

@@ -124,6 +124,7 @@ def dense_moe_oracle(cfg, params, x):
     return y.reshape(b, s, d)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("e,k,shared", [(8, 2, 0), (16, 4, 0), (8, 2, 2)])
 def test_moe_local_matches_dense_oracle(e, k, shared):
     cfg = tiny_cfg(pattern=(LayerSpec("attn", "moe"),), n_experts=e, top_k=k,
@@ -175,6 +176,7 @@ ARCH_CASES = {
 }
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("case", list(ARCH_CASES))
 def test_decode_matches_forward(case):
     cfg = tiny_cfg(**ARCH_CASES[case])

@@ -42,6 +42,7 @@ def _moe_cfg(e, k, slotting, dff=32):
     )
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("e,k", [(8, 2), (40, 8), (6, 2), (64, 6)])
 def test_slotted_moe_matches_canonical(e, k):
     cfg0, cfg1 = _moe_cfg(e, k, False), _moe_cfg(e, k, True)
@@ -83,6 +84,7 @@ def _naive(q, k, v, pos, sliding=0):
     return jnp.einsum("bnqgk,bknd->bqngd", p, v).reshape(b, s, hq, hd)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("sw", [0, 8])
 @pytest.mark.parametrize("hq,hkv", [(4, 2), (4, 4), (8, 1)])
 def test_flash_vjp_grads_match_naive(sw, hq, hkv):
@@ -110,6 +112,7 @@ def test_flash_vjp_grads_match_naive(sw, hq, hkv):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-4)
 
 
+@pytest.mark.slow
 def test_flash_vjp_whole_model_grads():
     """End-to-end: training grads with flash_vjp == grads without."""
     from repro.models import init_params, loss_fn, random_batch

@@ -1,0 +1,328 @@
+"""Time-indexed placement tests: constant-PlanSchedule bit-for-bit parity
+with the static engine and fleet paths, the slot -> plan-row gather,
+migration-byte parity with distributed.elastic on a hand-checked two-slot
+switch, migration background load in the fleet queues, the backlog-driven
+re-placement controller (hysteresis + migration gate) and the replan
+scenario registry."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, DevicePlacementPlan, LinkConfig,
+                        MoEWorkload, PlacementPlan, PlanSchedule,
+                        as_schedule, evaluate_plans, evaluate_schedules,
+                        migration_between, multi_expert_plan,
+                        rand_intra_cg_plan, sample_topology, slot_of_time,
+                        spacemoe_plan)
+from repro.distributed import migration
+from repro.traffic import (SCENARIOS, FleetSim, QueueConfig, ReplanConfig,
+                           backlog_penalty_s, build_replan_schedule,
+                           get_scenario, replan_traffic, run_scenario,
+                           sample_requests)
+
+CFG = ConstellationConfig.scaled(8, 12, n_slots=10, survival_prob=1.0)
+WL = MoEWorkload.llama_moe_3p5b()
+COMP = ComputeConfig()
+
+
+def _world(seed=0, n_layers=4, n_experts=4, top_k=2):
+    con = Constellation(CFG)
+    topo = sample_topology(con, LinkConfig(), np.random.default_rng(seed))
+    activ = ActivationModel.zipf(n_layers, n_experts, top_k, seed=1)
+    return con, topo, activ
+
+
+def _plans(con, topo, activ, seed=7):
+    return [spacemoe_plan(con, topo, activ),
+            rand_intra_cg_plan(con.cfg, activ.n_layers, activ.n_experts,
+                               np.random.default_rng(seed))]
+
+
+# --------------------------------------------------------------------- #
+# PlanSchedule basics + the slot -> plan-row gather
+# --------------------------------------------------------------------- #
+
+
+def test_plan_schedule_validation_and_helpers():
+    con, topo, activ = _world()
+    a, b = _plans(con, topo, activ)
+    s = PlanSchedule(plans=[a, b], slot_plan=[0, 0, 1, 1, 0], name="x")
+    assert s.n_slots == 5 and s.n_layers == 4 and s.n_experts == 4
+    assert not s.is_constant
+    np.testing.assert_array_equal(s.switch_slots(), [2, 4])
+    assert s.plan_at(2) is b and s.plan_at(4) is a
+    assert PlanSchedule.constant(a, 7).is_constant
+    assert as_schedule(a, topo.n_slots).n_slots == topo.n_slots
+    assert as_schedule(s, 5) is s
+    with pytest.raises(ValueError):
+        as_schedule(s, 9)                      # wrong slot count
+    with pytest.raises(ValueError):
+        PlanSchedule(plans=[a], slot_plan=[0, 1])   # index out of range
+    with pytest.raises(ValueError):
+        PlanSchedule(plans=[], slot_plan=[0])
+    np.testing.assert_array_equal(slot_of_time(np.array([0.0, 29.9, 30.0,
+                                                         301.0]), 30.0, 10),
+                                  [0, 0, 1, 0])
+
+
+def test_constant_schedule_matches_evaluate_plans_bitwise():
+    """The tentpole parity: a constant PlanSchedule through the
+    slot -> plan-row gather kernel reproduces the static engine path
+    bit-for-bit, for every plan kind and with staleness on."""
+    con, topo, activ = _world()
+    plans = _plans(con, topo, activ) + [multi_expert_plan(con, topo, activ, 2)]
+    static = evaluate_plans(plans, topo, activ, WL, COMP,
+                            np.random.default_rng(5), n_tokens=300, eta=0.8,
+                            route_staleness=2, reroute_penalty_s=0.01)
+    sched = evaluate_schedules(plans, topo, activ, WL, COMP,
+                               np.random.default_rng(5), n_tokens=300,
+                               eta=0.8, route_staleness=2,
+                               reroute_penalty_s=0.01)
+    for a, b in zip(static, sched):
+        np.testing.assert_array_equal(a.token_latency_s, b.token_latency_s)
+        np.testing.assert_array_equal(a.layer_latency_s, b.layer_latency_s)
+
+
+def test_schedule_gather_selects_the_slots_plan():
+    """With every token pinned to slot n, a switching schedule must
+    equal the static evaluation of exactly plan_at(n) — the gather is
+    the plan sequence, not a blend."""
+    con, topo, activ = _world()
+    a, b = _plans(con, topo, activ)
+    sched = PlanSchedule(plans=[a, b],
+                         slot_plan=np.arange(topo.n_slots) % 2, name="alt")
+    draws = np.stack([activ.sample(layer, np.random.default_rng(3), 64)
+                      for layer in range(activ.n_layers)])
+    for slot in (0, 1, 5):
+        slots = np.full(64, slot, dtype=np.int64)
+        got = evaluate_schedules([sched], topo, activ, WL, COMP,
+                                 np.random.default_rng(0), n_tokens=64,
+                                 slots=slots, draws=draws)[0]
+        want = evaluate_plans([sched.plan_at(slot)], topo, activ, WL, COMP,
+                              np.random.default_rng(0), n_tokens=64,
+                              slots=slots, draws=draws)[0]
+        np.testing.assert_array_equal(got.token_latency_s,
+                                      want.token_latency_s)
+
+
+def test_constant_schedule_fleet_parity_bitwise():
+    """FleetSim given a plain plan and the same plan wrapped as a
+    constant PlanSchedule must agree bit-for-bit, loaded and zero-load."""
+    con, topo, activ = _world()
+    a, b = _plans(con, topo, activ)
+    req = sample_requests(np.random.default_rng(2), rate_rps=2.0,
+                          horizon_s=30.0, n_stations=1, prompt_median=4,
+                          prompt_max=16, decode_mean=4, decode_max=8)
+    qcfg = QueueConfig(dt_s=0.05, tail_s=30.0)
+    plain = FleetSim([a, b], topo, activ, WL, COMP, req,
+                     np.random.default_rng(5), qcfg=qcfg)
+    wrapped = FleetSim([PlanSchedule.constant(a, topo.n_slots),
+                        PlanSchedule.constant(b, topo.n_slots)],
+                       topo, activ, WL, COMP, req,
+                       np.random.default_rng(5), qcfg=qcfg)
+    for zero_load in (True, False):
+        r0 = plain.run(zero_load=zero_load)
+        r1 = wrapped.run(zero_load=zero_load)
+        for p0, p1 in zip(r0.plans, r1.plans):
+            np.testing.assert_array_equal(p0.served, p1.served)
+            np.testing.assert_array_equal(p0.ttft_s, p1.ttft_s)
+            np.testing.assert_array_equal(p0.e2e_s, p1.e2e_s)
+            np.testing.assert_array_equal(p0.token_total_s, p1.token_total_s)
+            assert p1.migration_bytes == 0.0
+
+
+# --------------------------------------------------------------------- #
+# Migration accounting
+# --------------------------------------------------------------------- #
+
+
+def test_migration_bytes_match_distributed_elastic_two_slot_switch():
+    """Hand-checked two-slot switch: experts 0 and 1 swap satellites.
+    The schedule-level byte accounting must equal distributed.elastic's
+    device-ring Migration for the equivalent permutation."""
+    bytes_per_expert = 3.5e6
+    sats = np.array([10, 20, 30, 40])
+    old = PlacementPlan(gateways=np.array([5]),
+                        expert_sats=sats[None, :], name="old")
+    new = PlacementPlan(gateways=np.array([5]),
+                        expert_sats=sats[np.array([1, 0, 2, 3])][None, :],
+                        name="new")
+    edge = migration_between(old, new, bytes_per_expert)
+    assert edge.n_moved == 2
+    np.testing.assert_array_equal(edge.experts, [0, 1])
+    np.testing.assert_array_equal(edge.old_sats, [10, 20])
+    np.testing.assert_array_equal(edge.new_sats, [20, 10])
+
+    # The same switch on the device ring: expert e on device e, then
+    # experts 0/1 swap devices.
+    identity = DevicePlacementPlan(expert_perm=np.arange(4),
+                                   device_cost_s=np.zeros(4),
+                                   experts_per_device=1, origin=0)
+    swapped = DevicePlacementPlan(expert_perm=np.array([1, 0, 2, 3]),
+                                  device_cost_s=np.zeros(4),
+                                  experts_per_device=1, origin=0)
+    mig = migration(identity, swapped, bytes_per_expert)
+    assert set(mig.moved_experts) == set(edge.experts)
+    assert mig.bytes_moved == edge.bytes_moved == 2 * bytes_per_expert
+
+    # Wall-clock walk: [old, new, old] over period 10 s crosses two
+    # switching boundaries in 25 s (t=10 and t=20).
+    sched = PlanSchedule(plans=[old, new], slot_plan=[0, 1, 0], name="s")
+    edges = sched.migrations_over(25.0, 10.0, bytes_per_expert)
+    assert [t for t, _ in edges] == [10.0, 20.0]
+    assert all(e.bytes_moved == 2 * bytes_per_expert for _, e in edges)
+    assert sched.total_migration_bytes(bytes_per_expert) \
+        == 2 * 2 * bytes_per_expert      # both in-sequence switches
+
+
+def test_fleet_migration_background_load_occupies_destination_queues():
+    """A switching schedule's migration bytes must show up as reported
+    migration_bytes and as extra work on the destination satellites
+    (inflating waits relative to the migration-free run)."""
+    con, topo, activ = _world()
+    a, b = _plans(con, topo, activ)
+    sched = PlanSchedule(plans=[a, b],
+                         slot_plan=(np.arange(topo.n_slots) // 1) % 2,
+                         name="alt")
+    req = sample_requests(np.random.default_rng(2), rate_rps=2.0,
+                          horizon_s=60.0, n_stations=1, prompt_median=4,
+                          prompt_max=16, decode_mean=4, decode_max=8)
+    moved = migration_between(a, b, 1.0).n_moved
+    qcfg = QueueConfig(dt_s=0.05, tail_s=30.0, slot_period_s=20.0,
+                       migration_bytes_per_expert=1e6,
+                       migration_rate_gbps=10.0)
+    sim = FleetSim([sched], topo, activ, WL, COMP, req,
+                   np.random.default_rng(5), qcfg=qcfg)
+    res = sim.run()
+    n_bounds = len(sched.migrations_over(sim.n_bins * qcfg.dt_s, 20.0, 1e6))
+    assert n_bounds > 0
+    assert res.plans[0].migration_bytes == n_bounds * moved * 1e6
+    # A slower migration link deposits more seconds of background work.
+    slow = FleetSim([sched], topo, activ, WL, COMP, req,
+                    np.random.default_rng(5),
+                    qcfg=dataclasses.replace(qcfg, migration_rate_gbps=1e-3))
+    assert slow._mig_work.sum() > sim._mig_work.sum()
+
+
+# --------------------------------------------------------------------- #
+# Re-placement controller
+# --------------------------------------------------------------------- #
+
+
+def test_replan_config_validation():
+    with pytest.raises(ValueError):
+        ReplanConfig(mode="nope")
+    with pytest.raises(ValueError):
+        ReplanConfig(period_slots=0)
+    with pytest.raises(ValueError):
+        ReplanConfig(hysteresis=-0.1)
+    with pytest.raises(ValueError):
+        ReplanConfig(n_tokens=0)
+    with pytest.raises(ValueError):
+        ReplanConfig(controller_iterations=0)
+
+
+def test_backlog_penalty_is_the_critical_path():
+    plan = PlacementPlan(gateways=np.array([0, 3]),
+                         expert_sats=np.array([[1, 2], [4, 5]]))
+    b = np.array([1.0, 0.5, 2.0, 0.25, 0.0, 4.0])
+    # gateways 0 + 3, plus per-layer worst expert (2.0 and 4.0)
+    assert backlog_penalty_s(plan, b) == pytest.approx(1.0 + 0.25 + 2.0 + 4.0)
+
+
+def test_replan_off_holds_the_t0_best_plan():
+    con, topo, activ = _world()
+    plans = _plans(con, topo, activ)
+    rep = build_replan_schedule(
+        plans, topo, activ, WL, COMP, np.random.default_rng(0),
+        ReplanConfig(mode="off"), horizon_s=200.0, slot_period_s=30.0)
+    assert rep.schedule.is_constant
+    assert rep.n_switches == 0 and rep.total_migration_bytes == 0.0
+
+
+def test_backlog_drives_switch_and_migration_gate_blocks_it():
+    """Drowning the incumbent's satellites in synthetic backlog must
+    force a switch; pricing migration prohibitively must block the same
+    switch (the gate)."""
+    con, topo, activ = _world()
+    plans = _plans(con, topo, activ)
+    n_sats = CFG.n_sats
+
+    def drown_incumbent(_k, _t, current):
+        b = np.zeros(n_sats)
+        cur = plans[max(current, 0)]
+        b[np.asarray(cur.gateways)] = 100.0
+        b[np.asarray(cur.expert_sats).ravel()] = 100.0
+        return b
+
+    kw = dict(horizon_s=100.0, slot_period_s=30.0, backlog_at=drown_incumbent)
+    free = build_replan_schedule(
+        plans, topo, activ, WL, COMP, np.random.default_rng(0),
+        ReplanConfig(mode="backlog", migration_weight_s_per_mb=0.0), **kw)
+    assert free.n_switches > 0
+    gated = build_replan_schedule(
+        plans, topo, activ, WL, COMP, np.random.default_rng(0),
+        ReplanConfig(mode="backlog", migration_weight_s_per_mb=1e9), **kw)
+    assert gated.n_switches == 0
+
+
+def test_replan_traffic_rows_and_report():
+    """The closed loop returns statics + the schedule row, with the
+    report's migration bytes consistent with the fleet's accounting."""
+    con, topo, activ = _world()
+    plans = _plans(con, topo, activ)
+    req = sample_requests(np.random.default_rng(2), rate_rps=3.0,
+                          horizon_s=60.0, n_stations=1, prompt_median=4,
+                          prompt_max=16, decode_mean=4, decode_max=8)
+    out = replan_traffic(plans, topo, activ, WL, COMP, req,
+                         np.random.default_rng(4),
+                         ReplanConfig(mode="backlog"),
+                         QueueConfig(dt_s=0.05, tail_s=30.0,
+                                     slot_period_s=20.0, buffer_s=3.0))
+    names = [p.plan_name for p in out.result.plans]
+    assert names[:2] == [p.name for p in plans]
+    assert names[-1] == "replan/backlog"
+    assert out.replanned.plan_name == "replan/backlog"
+    assert out.best_static().plan_name in names[:2]
+    # Switches the horizon crosses are what the fleet bills for.
+    crossed = out.report.schedule.migrations_over(
+        out.sim.n_bins * 0.05, 20.0, 1e6)
+    assert out.replanned.migration_bytes \
+        == pytest.approx(sum(e.bytes_moved for _, e in crossed))
+
+
+# --------------------------------------------------------------------- #
+# Scenario registry plumbing
+# --------------------------------------------------------------------- #
+
+
+def test_replan_scenarios_registered():
+    for name in ("regional-hotspot-replan", "failure-storm-replan"):
+        sc = get_scenario(name)
+        assert sc.replan is not None and sc.replan.mode == "backlog"
+        assert sc.slot_period_s is not None \
+            and sc.slot_period_s < sc.horizon_s       # boundaries inside
+    assert set(SCENARIOS) >= {"regional-hotspot-replan",
+                              "failure-storm-replan"}
+
+
+@pytest.mark.slow
+def test_replan_scenario_end_to_end_storm():
+    """failure-storm-replan: both phases produce a replan row; the post
+    phase re-places among the degraded plans."""
+    con, topo, activ = _world()
+    plans = _plans(con, topo, activ)
+    sc = dataclasses.replace(
+        get_scenario("failure-storm-replan"), horizon_s=60.0, tail_s=30.0,
+        failure_at_s=30.0, slot_period_s=15.0, decode_mean=4, decode_max=8,
+        prompt_median=4, prompt_max=16)
+    out = run_scenario(sc, plans, topo, activ, WL, COMP,
+                       np.random.default_rng(4), constellation=con,
+                       rate_scale=3.0)
+    assert out.replan is not None and out.post_replan is not None
+    assert out.result.by_name("replan/backlog") is not None
+    assert out.post_failure.by_name("replan/backlog") is not None
+    post_names = {p.plan_name for p in out.post_failure.plans}
+    assert any(n.endswith("+storm") for n in post_names)
