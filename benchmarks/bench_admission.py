@@ -14,7 +14,10 @@ regimes on the same world, plans and random draws:
 Each run contributes one (goodput, p99 TTFT, shed/drop) frontier point
 per plan; the JSON summary (``BENCH_admission.json`` in CI) holds the
 full frontier so the controller's dominance over the static cap is
-tracked across PRs.
+tracked across PRs.  Both sweeps share one engine pass per regime: the
+KV cap is host post-processing (per-budget runs reuse the compiled
+fused fixed point), and the AIMD target sweep is one ``run_many``
+launch batched over the target axis.
 
     PYTHONPATH=src python -m benchmarks.run --fast --only admission
 """
@@ -84,21 +87,32 @@ def run(fast: bool = True, json_path: str | None = None,
         return FleetSim(plans, topo, activ, wl, comp, requests,
                         np.random.default_rng(23), qcfg=qcfg, ground=ground)
 
+    # One simulator per admission regime, one engine pass each.  The
+    # static sweep calls run(kv_slots=...) per budget — the cap is host
+    # post-processing, so every budget reuses the compiled fused fixed
+    # point — and the AIMD target sweep is a single run_many launch over
+    # the target axis.
+    sim_static = make({})
+    sim_aimd = make({"kv_slots": 0, "admission": AdmissionConfig()})
+
     # Zero-load reference anchors the target scales.
-    base = make({}).run(zero_load=True)
+    base = sim_static.run(zero_load=True, kv_slots=0)
     ttft0_p99 = max(p.quantile("ttft", 0.99) for p in base.plans)
 
     rows: list[dict] = []
     with Timer() as t_static:
+        # The cap is host post-processing, so per-budget runs replay a
+        # cached compile — only the (cheap) launch itself repeats.
         for kv in KV_BUDGETS:
-            res = make({"kv_slots": kv}).run()
+            res = sim_static.run(kv_slots=kv)
             rows += [_frontier_row("static", float(kv), p)
                      for p in res.plans]
+    targets = np.asarray(TARGET_SCALES) * ttft0_p99
     with Timer() as t_aimd:
-        for scale in TARGET_SCALES:
-            acfg = AdmissionConfig(ttft_target_s=scale * ttft0_p99)
-            res = make({"kv_slots": 0, "admission": acfg}).run()
-            rows += [_frontier_row("aimd", round(scale * ttft0_p99, 3), p)
+        every = np.ones((len(targets), requests.n_requests), dtype=bool)
+        for target, res in zip(targets, sim_aimd.run_many(
+                every, ttft_targets=targets)):
+            rows += [_frontier_row("aimd", round(float(target), 3), p)
                      for p in res.plans]
 
     out = {

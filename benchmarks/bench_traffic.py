@@ -16,6 +16,7 @@ the best plan's zero-load latency, <=5% drops) and a KV-slot budget.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -30,7 +31,11 @@ from repro.traffic import (SCENARIOS, SLO, build_ground_segment, format_table,
 from .common import PAPER_COMPUTE, Timer, emit
 
 
+@functools.lru_cache(maxsize=None)
 def _world(fast: bool, seed: int = 0):
+    # Memoized: bench_admission and bench_fleet reuse the same world, so
+    # a multi-bench smoke run builds the constellation/topology/ground
+    # segment once.  Treat the returned objects as read-only.
     if fast:
         ccfg = ConstellationConfig.scaled(12, 16, n_slots=12)
         n_layers = 8

@@ -2,6 +2,8 @@
 (Sec. VII-A) and a fast variant for CI-style runs."""
 from __future__ import annotations
 
+import dataclasses
+import functools
 import time
 
 import numpy as np
@@ -23,18 +25,30 @@ DATASETS = ["OpenBookQA", "PIQA", "ARC-E", "ARC-C", "WinoGrande", "BoolQ",
             "SciQ", "HellaSwag"]
 
 
-def paper_world(seed: int = 0, n_slots: int | None = None,
-                cfg: ConstellationConfig | None = None):
-    """(constellation, topology, activation, workload, compute)."""
-    ccfg = cfg or PAPER_CONSTELLATION
-    if n_slots is not None:
-        import dataclasses
-        ccfg = dataclasses.replace(ccfg, n_slots=n_slots)
+@functools.lru_cache(maxsize=4)
+def _paper_world_cached(seed: int, n_slots: int | None,
+                        cfg: ConstellationConfig):
+    ccfg = cfg if n_slots is None \
+        else dataclasses.replace(cfg, n_slots=n_slots)
     con = Constellation(ccfg)
     topo = sample_topology(con, PAPER_LINK, np.random.default_rng(seed))
     activ = ActivationModel.zipf(N_LAYERS, N_EXPERTS, TOP_K, seed=seed)
     wl = MoEWorkload.llama_moe_3p5b()
     return con, topo, activ, wl, PAPER_COMPUTE
+
+
+def paper_world(seed: int = 0, n_slots: int | None = None,
+                cfg: ConstellationConfig | None = None):
+    """(constellation, topology, activation, workload, compute).
+
+    Memoized on (seed, n_slots, cfg) — ConstellationConfig is a frozen
+    dataclass, so identical worlds across a multi-bench smoke run share
+    one constellation + topology build.  The cache is small (4) so
+    parameter-sweep benches that build many distinct worlds don't pin
+    them all for the process lifetime.  Treat the returned objects as
+    read-only.
+    """
+    return _paper_world_cached(seed, n_slots, cfg or PAPER_CONSTELLATION)
 
 
 class Timer:

@@ -29,12 +29,33 @@ def main() -> None:
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="write structured results (benches that return "
                          "dicts) to this JSON file")
+    ap.add_argument("--profile", action="store_true",
+                    help="per-bench wall-time + first-call jit-compile "
+                         "time columns (stdout and the --json-out "
+                         "payload under '_profile')")
     args = ap.parse_args()
 
+    compile_s = {"total": 0.0}
+    if args.profile:
+        # Sum jax's own compile-event durations (trace + lowering +
+        # backend compile); the per-bench delta is the first-call
+        # compilation cost that steady-state reruns would not pay.
+        try:
+            import jax
+
+            def _on_event(key: str, value: float, **kw) -> None:
+                if key.startswith("/jax/core/compile"):
+                    compile_s["total"] += value
+
+            jax.monitoring.register_event_duration_secs_listener(_on_event)
+        except Exception as e:                      # pragma: no cover
+            print(f"# profile: no jax compile events ({e})",
+                  file=sys.stderr)
+
     from . import (bench_admission, bench_engine, bench_fig6, bench_fig7,
-                   bench_kernels, bench_linkstate, bench_multi_expert,
-                   bench_placement, bench_replan, bench_roofline,
-                   bench_table2, bench_traffic)
+                   bench_fleet, bench_kernels, bench_linkstate,
+                   bench_multi_expert, bench_placement, bench_replan,
+                   bench_roofline, bench_table2, bench_traffic)
 
     n_tok = 120 if args.fast else 400
     suite = {
@@ -48,6 +69,8 @@ def main() -> None:
                       lambda: bench_admission.run(fast=args.fast)),
         "replan": (bench_replan,
                    lambda: bench_replan.run(fast=args.fast)),
+        "fleet": (bench_fleet,
+                  lambda: bench_fleet.run(fast=args.fast)),
         "table2": (bench_table2, lambda: bench_table2.run(
             n_tokens=n_tok, n_slots=60 if args.fast else None)),
         "fig6": (bench_fig6,
@@ -76,13 +99,24 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     structured: dict = {}
+    profile: dict = {}
     for name in selected:
         if name not in suite:
             print(f"unknown bench {name!r} (see --list)", file=sys.stderr)
             raise SystemExit(2)
+        t_bench, c_bench = time.time(), compile_s["total"]
         result = suite[name][1]()
+        if args.profile:
+            wall = time.time() - t_bench
+            comp = compile_s["total"] - c_bench
+            profile[name] = {"wall_s": round(wall, 3),
+                             "compile_s": round(comp, 3)}
+            print(f"profile/{name},{wall * 1e6:.3f},"
+                  f"compile_s={comp:.3f};steady_s={wall - comp:.3f}")
         if isinstance(result, dict):
             structured[name] = result
+    if profile:
+        structured["_profile"] = profile
     print(f"# total {time.time()-t0:.1f}s")
     if args.json_out:
         with open(args.json_out, "w") as f:

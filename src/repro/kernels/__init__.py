@@ -1,5 +1,6 @@
 """Pallas TPU kernels: moe_gmm (grouped expert matmul), decode_attn
-(GQA flash-decode).  ops.py = jit wrappers, ref.py = jnp oracles."""
+(GQA flash-decode), deposit (fleet-sim scatter-add work binning).
+ops.py = jit wrappers, ref.py = jnp oracles."""
 from . import ops, ref
 
 __all__ = ["ops", "ref"]

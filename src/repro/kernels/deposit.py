@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: scatter-add work deposit (the fleet-sim hot bin).
+
+The fused fleet simulator bins millions of chunked-prefill token
+deposits into the dense ``(plans * stations, time-bins)`` work tensor on
+every fixed-point iteration.  A scatter is MXU-hostile, so the kernel
+uses the standard one-hot-matmul trick: for each block of chunks and
+each output time-tile, build the (chunk, row) and (chunk, bin-in-tile)
+one-hot matrices and accumulate ``onehot_rows.T @ (vals * onehot_bins)``
+— a dense (bc, S) x (bc, bt) contraction the MXU eats, with the full
+row axis resident in a VMEM scratch accumulator.
+
+Tiling: grid (rows/br, T/bt, C/bc) with the chunk axis innermost, so a
+VMEM scratch (br, bt) accumulates over chunk blocks and flushes once per
+(row-tile, time-tile).  Chunks outside a tile contribute zero rows in
+the one-hots (no masking pass needed), and chunk padding points at
+column ``n_cols_pad`` which no tile covers.  The row tiling bounds VMEM
+at ``br * bt`` regardless of the fleet size (the fused fleet simulator
+deposits into F * rows planes that can reach tens of thousands of rows).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _deposit_kernel(rows_ref, cols_ref, vals_ref, o_ref, acc_ref, *,
+                    n_chunk_blocks: int):
+    """One (row-tile, time-tile, chunk-block) grid step."""
+    r = pl.program_id(0)
+    t = pl.program_id(1)
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rows = rows_ref[0]                                   # (bc,) int32
+    cols = cols_ref[0]
+    vals = vals_ref[0]
+    bc = rows.shape[0]
+    br, bt = acc_ref.shape
+    dtype = acc_ref.dtype
+    # Chunks outside this (row, time) tile match no one-hot lane: zero
+    # contribution, no separate masking pass.
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (bc, br), 1)
+    oh_rows = ((rows[:, None] - r * br) == iota_r).astype(dtype)
+    iota_t = jax.lax.broadcasted_iota(jnp.int32, (bc, bt), 1)
+    oh_cols = ((cols[:, None] - t * bt) == iota_t).astype(dtype)
+    acc_ref[...] += jnp.dot(oh_rows.T, vals[:, None] * oh_cols,
+                            preferred_element_type=dtype)
+
+    @pl.when(c == n_chunk_blocks - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pad_to(x: jnp.ndarray, mult: int, fill) -> jnp.ndarray:
+    pad = (-x.shape[0]) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full(pad, fill, dtype=x.dtype)])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_rows", "n_cols", "block_r", "block_c", "block_t",
+                     "interpret"),
+)
+def deposit(
+    rows: jnp.ndarray,            # (C,) int, in [0, n_rows)
+    cols: jnp.ndarray,            # (C,) int, in [0, n_cols)
+    vals: jnp.ndarray,            # (C,) float
+    n_rows: int,
+    n_cols: int,
+    block_r: int = 512,
+    block_c: int = 512,
+    block_t: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Dense scatter-add: out[rows[i], cols[i]] += vals[i].
+
+    Returns (n_rows, n_cols) in vals.dtype.
+    """
+    if rows.shape != cols.shape or rows.shape != vals.shape:
+        raise ValueError(
+            f"shape mismatch {rows.shape} / {cols.shape} / {vals.shape}")
+    if rows.shape[0] == 0:
+        # Zero chunk blocks would leave the output buffer unwritten.
+        return jnp.zeros((n_rows, n_cols), dtype=vals.dtype)
+    br = min(block_r, n_rows)
+    n_rows_pad = -(-n_rows // br) * br
+    bt = min(block_t, n_cols)
+    n_cols_pad = -(-n_cols // bt) * bt
+    bc = min(block_c, max(8, rows.shape[0]))
+    # Padding chunks target column n_cols_pad (outside every tile) with
+    # zero weight, so they deposit nothing.
+    rows_p = _pad_to(rows.astype(jnp.int32), bc, 0)
+    cols_p = _pad_to(cols.astype(jnp.int32), bc, n_cols_pad)
+    vals_p = _pad_to(vals, bc, 0)
+    n_blocks = rows_p.shape[0] // bc
+    grid = (n_rows_pad // br, n_cols_pad // bt, n_blocks)
+
+    out = pl.pallas_call(
+        functools.partial(_deposit_kernel, n_chunk_blocks=n_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc), lambda r, t, c: (c, 0)),
+            pl.BlockSpec((1, bc), lambda r, t, c: (c, 0)),
+            pl.BlockSpec((1, bc), lambda r, t, c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bt), lambda r, t, c: (r, t)),
+        out_shape=jax.ShapeDtypeStruct((n_rows_pad, n_cols_pad),
+                                       vals.dtype),
+        scratch_shapes=[pltpu.VMEM((br, bt), vals.dtype)],
+        interpret=interpret,
+    )(rows_p.reshape(n_blocks, bc), cols_p.reshape(n_blocks, bc),
+      vals_p.reshape(n_blocks, bc))
+    return out[:n_rows, :n_cols]

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from .decode_attn import decode_attention as _decode_attention
+from .deposit import deposit as _deposit
 from .moe_gmm import gmm as _gmm
 
 
@@ -37,6 +38,17 @@ def expert_ffn_pallas(params: dict, xs: jnp.ndarray, compute_dtype,
     gate = jax.nn.silu(gmm(xs, wg, interpret=interpret))
     up = gmm(xs, wu, interpret=interpret)
     return gmm(gate * up, wd, interpret=interpret)
+
+
+def deposit(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+            n_rows: int, n_cols: int, *, block_r: int = 512,
+            block_c: int = 512, block_t: int = 256,
+            interpret: bool | None = None) -> jnp.ndarray:
+    """Scatter-add work deposit: (n_rows, n_cols) dense from COO triples."""
+    if interpret is None:
+        interpret = not on_tpu()
+    return _deposit(rows, cols, vals, n_rows, n_cols, block_r=block_r,
+                    block_c=block_c, block_t=block_t, interpret=interpret)
 
 
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

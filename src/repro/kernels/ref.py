@@ -5,6 +5,25 @@ import jax
 import jax.numpy as jnp
 
 
+def deposit_ref(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
+                n_rows: int, n_cols: int) -> jnp.ndarray:
+    """Scatter-add oracle: out[rows[i], cols[i]] += vals[i].
+
+    The jnp oracle the Pallas kernel must match exactly (the fused
+    fleet simulator's off-TPU deposits use the same flat-index
+    scatter-add inline).
+    """
+    idx = jnp.int32 if n_rows * n_cols <= jnp.iinfo(jnp.int32).max \
+        else jnp.int64
+    flat = rows.astype(idx) * n_cols + cols.astype(idx)
+    if n_rows * n_cols > jnp.iinfo(flat.dtype).max:
+        raise ValueError(
+            f"deposit target {n_rows}x{n_cols} overflows {flat.dtype} "
+            "flat indices (enable jax x64)")
+    out = jnp.zeros(n_rows * n_cols, dtype=vals.dtype).at[flat].add(vals)
+    return out.reshape(n_rows, n_cols)
+
+
 def gmm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """x: (E, C, K), w: (E, K, N) -> (E, C, N), f32 accumulation."""
     out = jnp.einsum("eck,ekn->ecn", x, w,

@@ -258,16 +258,21 @@ def saturation_sweep(
     single uniform draw per request makes the thinned sets nested, so a
     plan's pass/fail curve is evaluated on monotone workloads and
     "sustained" is the largest tested rate whose run met the SLO.
+
+    The whole sweep executes as **one compile + one device launch**: the
+    nested masks ride the vmapped fraction axis of
+    :meth:`~repro.traffic.queueing.FleetSim.run_many`, so adding rates
+    costs batched device work, not extra fixed-point round-trips.
     """
     if fractions is None:
         fractions = np.array([0.125, 0.25, 0.5, 0.75, 1.0])
     fractions = np.sort(np.asarray(fractions, dtype=np.float64))
     u = rng.random(sim.requests.n_requests)
+    masks = u[None, :] < fractions[:, None]
 
     results, rates = [], []
     met: dict[str, list[bool]] = {}
-    for f in fractions:
-        res = sim.run(active=u < f)
+    for res in sim.run_many(masks):
         results.append(res)
         rates.append(res.plans[0].offered_rps if res.plans[0].n_active
                      else 0.0)

@@ -52,6 +52,30 @@ Two admission regimes guard KV-cache memory and the latency SLO:
 station indices, chunk layout) so a saturation sweep replays only the
 binning + scan + gather per tested rate — no Python loop over requests
 or tokens anywhere on the hot path.
+
+Two execution paths share that precompute:
+
+* the **fused device path** (``run`` / ``run_many``) — the whole
+  schedule -> bin -> scan -> gather fixed point is one jitted
+  ``lax.fori_loop`` (:func:`_fused_core`): the dense work tensor is
+  built on device by a scatter-add deposit
+  (:mod:`repro.kernels.deposit` on TPU, its jnp reference elsewhere),
+  lives time-major, and never crosses the host boundary between
+  iterations.  ``run_many`` vmaps the same core over a
+  thinning-fraction (or admission-target) axis, so an entire saturation
+  sweep is one compile + one launch.  The core is module-level and
+  takes every per-simulator tensor as an argument, so fleet runs with
+  equal shapes — every ``run_many`` rate, every re-placement
+  decide/evaluate round — reuse one compile cache entry.  Dtype policy
+  mirrors the host path exactly: schedules/bins/deposits in float64
+  (``jax.experimental.enable_x64`` scoped to these launches), the
+  backlog scan in float32 — the downcast ``run_legacy``'s jitted scans
+  have always applied — so the two paths agree to the last bit in
+  practice;
+* the **legacy host path** (``run_legacy``) — the original NumPy
+  fixed-point loop, kept verbatim as the authoritative semantic anchor.
+  ``tests/test_fleet_perf.py`` pins fused<->legacy parity on identical
+  served/shed sets and rtol <= 1e-5 latency quantiles.
 """
 from __future__ import annotations
 
@@ -60,9 +84,11 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64 as _x64
 
 from repro.core import (ScheduleBatch, evaluate_schedules,
                         schedule_ingress_offsets)
+from repro.kernels import ops as _kernel_ops
 from repro.core.activation import ActivationModel
 from repro.core.latency import ComputeConfig, TopologySample
 from repro.core.schedule import as_schedule, slot_of_time
@@ -240,6 +266,311 @@ def _station_quantile(values: np.ndarray, ok: np.ndarray,
 
 
 # --------------------------------------------------------------------- #
+# The fused device fixed point
+# --------------------------------------------------------------------- #
+
+#: Incremented once per trace of :func:`_fused_core` — the compilation
+#: counter ``tests/test_fleet_perf.py`` pins (a whole rate sweep through
+#: ``run_many`` must cost exactly one trace).
+FUSED_TRACE_COUNT = 0
+
+#: The compacted chunk table is padded to a multiple of this, so sweeps
+#: with similar activity reuse the fused kernel's compile cache.
+_CHUNK_BLOCK = 8192
+
+
+def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
+                n_iter, n_bins, n_rows, adm_on, use_pallas, want_wait):
+    """Single-launch fleet fixed point (the device half of ``FleetSim.run``).
+
+    Rolls the legacy schedule -> bin -> scan -> gather iteration into one
+    ``lax.fori_loop`` over device-resident precomputes, batched over an
+    explicit sweep axis F, so the dense work tensor never crosses the
+    host boundary between iterations.  Pure module-level function: every
+    per-simulator tensor arrives via ``consts`` (the pytree built by
+    :meth:`FleetSim._device_tables`), so fleet runs with equal shapes
+    share one jit cache entry.
+
+    Two compactions keep the device arrays proportional to *offered*
+    work rather than to the constellation:
+
+    * **row compaction** — queue rows are the (plan, satellite) pairs
+      that can ever receive a deposit, observation or gather
+      (``FleetSim._build_row_map``), not all P x V pairs; zero-work
+      stations contribute exactly zero in both paths, so dropping them
+      is exact;
+    * **chunk compaction** — ``chunks`` holds only the (sweep entry,
+      chunk) pairs whose request is active (built host-side per launch
+      from the masks, padded to a stable block size), so a thinned rate
+      sweep deposits only what it offers.
+
+    Layout/dtype policy (pinned by the parity tests): schedules, bins
+    and deposits compute in float64 exactly like the host path; the work
+    tensor lives **time-major** ``(T, F, rows)`` so the scan consumes it
+    with no transposes; the backlog scan itself runs in float32 — the
+    same downcast the legacy path's jitted scans have always applied —
+    and emits *only* the wait trace (overload flags are recovered at the
+    gather points from ``wait + work > cap``, bit-identical to the
+    legacy ``dropped > 0``).
+
+    The first fixed-point iteration is **peeled**: its schedule is the
+    zero-wait schedule, known at construction, so its offered-work plane
+    ``work0`` arrives as a launch input (one host ``np.bincount`` over
+    the compacted chunks — not a per-iteration transfer) and the device
+    spends its scatter budget only on the congestion-corrected
+    iterations 2..n.
+
+    Args:
+        consts: Device-resident precompute pytree (see
+            :meth:`FleetSim._device_tables` for the keys).
+        chunks: Compacted deposit table — ``src`` (gather index into the
+            F-flattened [layer_arr | exp_arr] pair), ``offs`` (chunk
+            offset in bins), ``work`` (seconds), ``fprow`` (target row
+            in the (F * rows) plane), and under admission ``fpr`` (index
+            into the (F, P, R) shed mask).  Entries are grouped by row
+            (static sort), so the scatter walks the plane row-major.
+        work0: (F, rows, T) float32 iteration-1 offered work (migration
+            background load already added).
+        work0_sum: (F, rows) float64 per-row sum of iteration-1 work
+            (utilization reporting when ``n_iter == 1``).
+        ttft_target: (F,) margin-scaled TTFT targets (admission only).
+        tpot_target: (F,) margin-scaled TPOT targets (admission only).
+        n_iter: Static — schedule<->queue fixed-point iterations.
+        n_bins: Static — T, the time-bin count.
+        n_rows: Static — compacted queue-row count.
+        adm_on: Static — run the AIMD admission regime.
+        use_pallas: Static — deposit via the Pallas kernel (TPU; f32
+            accumulation) instead of the jnp scatter-add reference.
+        want_wait: Static — carry and return the final backlog trace
+            (the re-placement controller's observation).
+
+    Returns:
+        Dict of outputs with a leading F axis: ``ttft``/``e2e``
+        (F, P, R), ``tok_total`` (F, P, M), ``tok_over`` (F, P, M) bool,
+        ``shed``/``retries`` (F, P, R), ``work_sum`` (F, rows) and — iff
+        ``want_wait`` — ``wait`` (T, F, rows) float32.
+    """
+    global FUSED_TRACE_COUNT
+    FUSED_TRACE_COUNT += 1
+    q = consts
+    first_tok, tok_req = q["first_tok"], q["tok_req"]
+    F = ttft_target.shape[0]
+    R = first_tok.shape[0]
+    P, M, L = q["eff_layer"].shape
+    T, SR = n_bins, n_rows
+    dt = q["dt"]
+    cap32, dt32 = q["cap32"], q["dt32"]
+    f32, f64 = jnp.float32, jnp.float64
+
+    def to_bins(times):
+        finite = jnp.isfinite(times)
+        b = jnp.clip((jnp.where(finite, times, 0.0) / dt)
+                     .astype(jnp.int64), 0, T - 1)
+        return jnp.where(finite, b, 0), finite
+
+    def schedule(gw_wait, ex_max, start_pref):
+        # jnp port of FleetSim._schedule + ._chain (identical math),
+        # batched over the leading F axis.
+        lay_cost = q["eff_layer"][None] + gw_wait + ex_max
+        tok_total = q["tok_base"][None] + gw_wait.sum(3) + ex_max.sum(3)
+        dec = tok_total[:, :, R:]
+        cs = jnp.cumsum(dec, axis=2)
+        excl = cs - dec
+        base = excl[:, :, first_tok][:, :, tok_req]
+        c0 = start_pref + tok_total[:, :, :R]
+        start_dec = c0[:, :, tok_req] + (excl - base)
+        start_all = jnp.concatenate([start_pref, start_dec], axis=2)
+        layer_arr = start_all[..., None] \
+            + (jnp.cumsum(lay_cost, axis=3) - lay_cost)
+        exp_arr = layer_arr + gw_wait + q["gw_service"][None, None, :, None]
+        return layer_arr, exp_arr, tok_total, cs - base
+
+    def bin_work(layer_arr, exp_arr, shed):
+        # jnp port of FleetSim._bin_work: every active chunk reads its
+        # event's arrival time straight from the F-flattened
+        # [layer_arr | exp_arr] pair via the precomputed gather index,
+        # then scatter-adds the row-major (F * rows, T) plane in f64
+        # (chunks are statically row-grouped, so consecutive updates
+        # stay within one row's cache-resident T-span).
+        flat_t = jnp.concatenate([layer_arr.reshape(F, -1),
+                                  exp_arr.reshape(F, -1)],
+                                 axis=1).reshape(-1)
+        b_ch, fin = to_bins(flat_t[chunks["src"]])
+        bins = jnp.minimum(b_ch + chunks["offs"], T - 1)
+        vals = chunks["work"] * fin
+        if adm_on:
+            # Shed requests stop depositing (the activity compaction
+            # already removed thinned-out requests).
+            vals = vals * ~shed.reshape(-1)[chunks["fpr"]]
+        if use_pallas:
+            # TPU: one-hot-matmul deposit kernel (f32 accumulation —
+            # TPUs have no f64; CPU CI parity runs the reference path).
+            plane = _kernel_ops.deposit(
+                chunks["fprow"], bins.astype(jnp.int32),
+                vals.astype(f32), F * SR, T).astype(f64)
+        else:
+            # int64 flat index: F * rows * T can exceed 2^31 on large
+            # worlds/sweeps (x64 is enabled for every fused launch).
+            flat = chunks["fprow"].astype(jnp.int64) * T + bins
+            plane = jnp.zeros(F * SR * T).at[flat].add(
+                vals, mode="promise_in_bounds")
+        work = plane.reshape(F, SR, T)
+        if "mig_dense" in q:
+            work = work + q["mig_dense"][None]
+        return work
+
+    def fleet_scan(work32):
+        # The _fleet_queue_scan backlog recursion, time-major and
+        # wait-only (f32, exactly the legacy downcast).
+        def step(b, w_t):
+            wait = b
+            b = jnp.maximum(jnp.minimum(b + w_t, cap32) - dt32, 0.0)
+            return b, wait
+        _, wait = jax.lax.scan(step, jnp.zeros((F, SR), f32), work32)
+        return wait                                       # (T, F, SR)
+
+    def adm_scan(work32):
+        # The admission_queue_scan recursion (bit-identical backlog and
+        # AIMD cell), time-major over compacted rows, emitting wait +
+        # the admit trace.
+        tt32 = ttft_target.astype(f32)[:, None, None]     # (F, 1, 1)
+        tp32 = tpot_target.astype(f32)[:, None]           # (F, 1)
+        n_layers = q["gw_rows_bin"].shape[2]
+
+        def step(carry, xs):
+            backlog, admit, win = carry
+            w_t, is_ctrl, gw_t, exp_t = xs
+            wait = backlog
+            backlog = jnp.maximum(
+                jnp.minimum(backlog + w_t, cap32) - dt32, 0.0)
+            gw = backlog[:, gw_t].sum(axis=2)                    # (F, P)
+            exp = backlog[:, exp_t] \
+                .reshape(F, P, n_layers, -1).max(axis=3).sum(axis=2)
+            win = jnp.maximum(win, gw + exp)
+            over = ((q["ttft0"][None] + win[..., None]) > tt32) \
+                | ((q["tpot0"][None] + win) > tp32)[..., None]   # (F,P,G)
+            stepped = jnp.where(
+                over,
+                jnp.maximum(admit * q["decrease"], q["admit_min"]),
+                jnp.minimum(admit + q["increase"], 1.0))
+            admit_next = jnp.where(is_ctrl, stepped, admit)
+            win_next = jnp.where(is_ctrl, 0.0, win)
+            return (backlog, admit_next, win_next), (wait, admit)
+
+        n_gw = q["ttft0"].shape[1]
+        carry0 = (jnp.zeros((F, SR), f32), jnp.ones((F, P, n_gw), f32),
+                  jnp.zeros((F, P), f32))
+        _, (wait, admit) = jax.lax.scan(
+            step, carry0,
+            (work32, q["ctrl"], q["gw_rows_bin"], q["exp_rows_bin"]))
+        return wait, admit                 # (T, F, SR), (T, F, P, G)
+
+    def gather(wait_t, work32, gw_b, gw_fin, ex_b, ex_fin):
+        # jnp port of FleetSim._gather: wait read from the time-major
+        # trace, work from the row-major plane; overload =
+        # wait + work > cap is the legacy dropped > 0 flag.
+        f_idx = jnp.arange(F)[:, None, None, None]
+        gw_rows = q["gw_rows"][None]                  # (1, P, M, L)
+        ex_rows = q["ex_rows"][None]                  # (1, P, M, L, K)
+        w_g = wait_t[gw_b, f_idx, gw_rows]
+        gw_wait = jnp.where(gw_fin, w_g, 0.0).astype(f64)
+        gw_over = gw_fin & ((w_g + work32[f_idx, gw_rows, gw_b]) > cap32)
+        ex_b5, ex_f5 = ex_b[..., None], ex_fin[..., None]
+        f_idx5 = f_idx[..., None]
+        w_e = wait_t[ex_b5, f_idx5, ex_rows]
+        ex_wait = jnp.where(ex_f5, w_e, 0.0).astype(f64)
+        ex_over = ex_f5 & ((w_e + work32[f_idx5, ex_rows, ex_b5]) > cap32)
+        return gw_wait, ex_wait.max(axis=4), gw_over, ex_over.any(axis=4)
+
+    def finish_iter(work32, work_sum, gw_b, gw_fin, ex_b, ex_fin, c):
+        # Scan + admission resolve + gather for one iteration whose
+        # offered work (f32, row-major (F, SR, T)) is already binned;
+        # only the scan input is transposed to time-major.
+        work32_t = jnp.moveaxis(work32, 2, 0)             # (T, F, SR)
+        if adm_on:
+            wait_t, admit = adm_scan(work32_t)
+            # Monotone outer iteration (see run_legacy): the admit trace
+            # accumulates as a running minimum so the shed set only grows.
+            admit_floor = jnp.minimum(c["admit_floor"], admit)
+            adm = jnp.transpose(
+                admit_floor[q["att_bin"], :, :, q["att_station"]],
+                (2, 3, 0, 1))                             # (F, P, A, R)
+            ok = (q["adm_u"][None, None] < adm) & q["att_feasible"][None]
+            shed = ~ok.any(axis=2)                        # (F, P, R)
+            retries = jnp.where(shed, 0, jnp.argmax(ok, axis=2))
+            ingress_extra = jnp.take_along_axis(
+                jnp.broadcast_to(q["att_extra"][None],
+                                 (F,) + q["att_extra"].shape),
+                retries[:, :, None, :], axis=2)[:, :, 0, :]
+        else:
+            wait_t = fleet_scan(work32_t)
+            shed, retries = c["shed"], c["retries"]
+            admit_floor = c["admit_floor"]
+            ingress_extra = c["ingress_extra"]
+        gw_wait, ex_max, gw_over, ex_over = gather(
+            wait_t, work32, gw_b, gw_fin, ex_b, ex_fin)
+        nxt = dict(gw_wait=gw_wait, ex_max=ex_max, gw_over=gw_over,
+                   ex_over=ex_over, shed=shed, retries=retries,
+                   admit_floor=admit_floor, ingress_extra=ingress_extra,
+                   work_sum=work_sum)
+        if want_wait:
+            nxt["wait"] = wait_t
+        return nxt
+
+    def body(_, c):
+        start_pref = q["arrival_s"][None, None, :] + c["ingress_extra"]
+        layer_arr, exp_arr, _, _ = schedule(c["gw_wait"], c["ex_max"],
+                                            start_pref)
+        work = bin_work(layer_arr, exp_arr, c["shed"])    # (F, SR, T)
+        gw_b, gw_fin = to_bins(layer_arr)
+        ex_b, ex_fin = to_bins(exp_arr)
+        return finish_iter(work.astype(f32), work.sum(axis=2),
+                           gw_b, gw_fin, ex_b, ex_fin, c)
+
+    n_gw = q["ttft0"].shape[1] if adm_on else 1
+    carry = dict(
+        gw_wait=jnp.zeros((F, P, M, L)), ex_max=jnp.zeros((F, P, M, L)),
+        gw_over=jnp.zeros((F, P, M, L), bool),
+        ex_over=jnp.zeros((F, P, M, L), bool),
+        shed=jnp.zeros((F, P, R), bool),
+        retries=jnp.zeros((F, P, R), jnp.int64),
+        admit_floor=jnp.ones((T, F, P, n_gw), jnp.float32),
+        ingress_extra=jnp.broadcast_to(q["ingress_extra0"][None],
+                                       (F, P, R)) + 0.0,
+        work_sum=jnp.zeros((F, SR)),
+    )
+    if want_wait:
+        carry["wait"] = jnp.zeros((T, F, SR), f32)
+    # Peeled iteration 1: the zero-wait schedule is static, so its
+    # offered work arrives pre-binned (host np.bincount) and its gather
+    # bins are construction-time constants.
+    carry = finish_iter(work0, work0_sum,
+                        q["gw_b0"][None], q["gw_fin0"][None],
+                        q["ex_b0"][None], q["ex_fin0"][None], carry)
+    c = jax.lax.fori_loop(0, n_iter - 1, body, carry)
+    # Fold the final gather into the schedule once more (see run_legacy).
+    start_pref = q["arrival_s"][None, None, :] + c["ingress_extra"]
+    _, _, tok_total, seg_incl = schedule(c["gw_wait"], c["ex_max"],
+                                         start_pref)
+    ttft = c["ingress_extra"] + tok_total[:, :, :R]
+    out = dict(ttft=ttft, e2e=ttft + seg_incl[:, :, q["last_tok"]],
+               tok_total=tok_total,
+               tok_over=c["gw_over"].any(axis=3) | c["ex_over"].any(axis=3),
+               shed=c["shed"], retries=c["retries"],
+               work_sum=c["work_sum"])
+    if want_wait:
+        out["wait"] = c["wait"]
+    return out
+
+
+#: The jitted fused fixed point.  Statics: (n_iter, n_bins, n_rows,
+#: adm_on, use_pallas, want_wait); everything else rides the pytrees, so
+#: any fleet run with equal shapes — every rate of a sweep, every
+#: re-placement decide/evaluate round — hits one compile cache entry.
+_fused_exec = jax.jit(_fused_core, static_argnums=(6, 7, 8, 9, 10, 11))
+
+
+# --------------------------------------------------------------------- #
 # The fleet simulator
 # --------------------------------------------------------------------- #
 
@@ -293,6 +624,7 @@ class FleetSim:
         eta: float = 1.0,
         include_lm_head: bool = True,
         batch: ScheduleBatch | None = None,
+        min_bins: int = 0,
     ):
         """Build the simulator and run every rate-independent precompute.
 
@@ -318,6 +650,10 @@ class FleetSim:
             include_lm_head: Account lm-head service on the last gateway.
             batch: Optional prebuilt :class:`~repro.core.ScheduleBatch`
                 to reuse the deduped Dijkstra table across simulators.
+            min_bins: Floor on the time-bin count T.  The re-placement
+                loop pins consecutive decide/evaluate rounds to one T so
+                every round's fleet run reuses the fused fixed point's
+                compile cache (a longer natural horizon still wins).
         """
         self.plans = list(plans)
         self.schedules = [as_schedule(p, topo.n_slots) for p in self.plans]
@@ -502,13 +838,41 @@ class FleetSim:
             ev_req[None, :], ev_work.shape).ravel()[self._rep]
         self._n_events = ev_work.size
 
+        # Fused-path gather indices: each chunk reads its event's arrival
+        # time from the flattened [layer_arr | exp_arr] pair, so the
+        # device fixed point rebuilds no event concatenations.  The block
+        # order mirrors the ev_* concatenation above exactly.
+        p_i = np.arange(P)[:, None, None]
+        m_i = np.arange(M)[None, :, None]
+        l_i = np.arange(L)[None, None, :]
+        gw_src = (p_i * M + m_i) * L + l_i                        # (P, M, L)
+        exp_src = P * M * L + gw_src                              # exp_arr
+        ev_src = np.concatenate([
+            gw_src.reshape(P, -1),
+            np.broadcast_to(exp_src[:, R:, :, None],
+                            (P, N, L, K)).reshape(P, -1),
+            np.broadcast_to(exp_src[:, :R, :, None],
+                            (P, R, L, n_exp)).reshape(P, -1),
+        ], axis=1).ravel()
+        self._chunk_src = ev_src[self._rep]
+        self._chunk_row = self.ev_chunk_plan * self.n_stations \
+            + self.ev_chunk_station
+        self._chunk_pr = self.ev_chunk_plan * R + self.ev_chunk_req
+        #: Lazily-built device-resident precompute (see _device_tables).
+        self._dev: dict | None = None
+        #: Deposit implementation: "auto" (Pallas on TPU, jnp scatter-add
+        #: reference elsewhere), "ref", or "pallas".
+        self.deposit_impl = "auto"
+
         # --- time bins (fixed across runs so the scan compiles once) ------
         start_dec0, _, c00 = self._chain(self.tok_base, self.start_pref)
         end0 = start_dec0 + self.tok_base[:, R:]
         horizon = max(float(requests.arrival_s.max()),
                       float(np.where(np.isfinite(end0), end0, 0.0).max()),
                       float(np.where(np.isfinite(c00), c00, 0.0).max()))
-        self.n_bins = int(np.ceil((horizon + qcfg.tail_s) / qcfg.dt_s)) + 1
+        self.n_bins = max(
+            int(np.ceil((horizon + qcfg.tail_s) / qcfg.dt_s)) + 1,
+            int(min_bins))
         if self.n_bins > 2_000_000:
             raise ValueError(
                 f"{self.n_bins} time bins — raise dt_s or shrink the horizon")
@@ -521,6 +885,10 @@ class FleetSim:
         self.admission_on = acfg is not None and acfg.policy == "aimd"
         if self.admission_on:
             self._build_admission_tables(acfg, ground, slot_r, rng)
+
+        # --- fused-path row compaction + static tables --------------------
+        self._build_row_map()
+        self._build_fused_tables()
 
         # Filled by ``run``: (plan, satellite, bin) backlog of the last
         # fleet scan (the re-placement controller's observation).
@@ -684,6 +1052,91 @@ class FleetSim:
 
     # ----------------------------------------------------------------- #
 
+    def _build_row_map(self) -> None:
+        """Compact the (plan, satellite) queue rows the fused path keeps
+        dense.
+
+        Only rows that can ever receive a deposit (chunk targets,
+        migration destinations) or be read (wait gathers, the admission
+        law's per-bin station maps) matter; every other station carries
+        exactly zero backlog in both paths, so dropping it from the
+        device tensors is exact.  The map scales the fused kernel with
+        the *plans'* footprint instead of the constellation size.
+        """
+        P, S, T = self.n_plans, self.n_stations, self.n_bins
+        p_idx = np.arange(P)[:, None, None]
+        gw_rows = p_idx * S + self.gather_gw_station              # (P,M,L)
+        ex_rows = p_idx[..., None] * S + self.gather_exp_station
+        used = [self._chunk_row, gw_rows.ravel(), ex_rows.ravel()]
+        if self._mig_flat.size:
+            used.append(self._mig_flat // T)
+        if self.admission_on:
+            pr = np.arange(P, dtype=np.int64)[None, :, None] * S
+            used.append((pr + self._adm_gw_idx).ravel())
+            used.append((pr + self._adm_exp_idx).ravel())
+        rows = np.unique(np.concatenate(used))
+        inv = np.full(P * S, -1, dtype=np.int64)
+        inv[rows] = np.arange(rows.size)
+        self._active_rows = rows
+        self._row_inv = inv
+        self.n_rows = int(rows.size)
+        self._chunk_rowc = inv[self._chunk_row].astype(np.int32)
+        self._gw_rowc = inv[gw_rows]                              # (P,M,L)
+        self._ex_rowc = inv[ex_rows]                              # (P,M,L,K)
+        if self.admission_on:
+            self._adm_gw_rowc = inv[pr + self._adm_gw_idx] \
+                .astype(np.int32)                                 # (T,P,L)
+            self._adm_exp_rowc = inv[pr + self._adm_exp_idx] \
+                .astype(np.int32)                                 # (T,P,LI)
+
+    def _expand_rows(self, arr: np.ndarray) -> np.ndarray:
+        """Scatter a compact-row array (..., n_rows) back to (..., P, S)."""
+        full = np.zeros(arr.shape[:-1] + (self.n_plans * self.n_stations,),
+                        dtype=arr.dtype)
+        full[..., self._active_rows] = arr
+        return full.reshape(arr.shape[:-1]
+                            + (self.n_plans, self.n_stations))
+
+    def _build_fused_tables(self) -> None:
+        """Static precompute for the fused path's peeled first iteration
+        and row-grouped deposits.
+
+        The first fixed-point iteration always runs on the zero-wait
+        schedule, so its event times — hence its chunk bins and gather
+        bins — are construction-time constants; ``_launch`` turns them
+        into the iteration-1 work plane with one host ``np.bincount``.
+        The chunk tables are also re-ordered by compact row (stable
+        sort), so the device scatter of later iterations walks the
+        (row, T) plane row-major instead of hopping across it.
+        """
+        P, M, L = self.n_plans, self.n_tokens, self.n_layers
+        z = np.zeros((P, M, L))
+        layer0, exp0, *_ = self._schedule(z, z, self.start_pref)
+        self._gw_b0, self._gw_fin0 = self._to_bins(layer0)
+        self._ex_b0, self._ex_fin0 = self._to_bins(exp0)
+        base0, fin0 = self._to_bins(self._event_times(layer0, exp0))
+        bins0 = np.minimum(base0[self._rep] + self._offs, self.n_bins - 1)
+        perm = np.argsort(self._chunk_rowc, kind="stable")
+        self._f_src = self._chunk_src[perm]
+        self._f_offs = self._offs[perm]
+        self._f_work = self.ev_chunk_work[perm]
+        self._f_rowc = self._chunk_rowc[perm]
+        self._f_pr = self._chunk_pr[perm]
+        self._f_req = self.ev_chunk_req[perm]
+        self._f_bins0 = bins0[perm]
+        self._f_fin0 = fin0[self._rep][perm]
+        if self._mig_flat.size:
+            flat = self._row_inv[self._mig_flat // self.n_bins] \
+                * self.n_bins + self._mig_flat % self.n_bins
+            self._mig_rm = np.bincount(
+                flat, weights=self._mig_work,
+                minlength=self.n_rows * self.n_bins
+            ).reshape(self.n_rows, self.n_bins)
+        else:
+            self._mig_rm = None
+
+    # ----------------------------------------------------------------- #
+
     def _chain(self, tok_total: np.ndarray, start_pref: np.ndarray):
         """Autoregressive chaining: (decode token starts (P, N), their
         per-request inclusive cumsums (P, N), prefill completion (P, R))."""
@@ -717,12 +1170,11 @@ class FleetSim:
                     .astype(np.int64), 0, self.n_bins - 1), 0)
         return b, finite
 
-    def _bin_work(self, layer_arr, exp_arr, active2d):
-        """Offered work (P, S, T) for the current schedule + per-plan
-        request-activity mask ``active2d`` (P, R)."""
+    def _event_times(self, layer_arr: np.ndarray,
+                     exp_arr: np.ndarray) -> np.ndarray:
+        """(P*E,) arrival time of every queue event under a schedule."""
         P, R = self.n_plans, self.n_requests
-        S, T = self.n_stations, self.n_bins
-        ev_time = np.concatenate([
+        return np.concatenate([
             layer_arr.reshape(P, -1),
             np.broadcast_to(
                 exp_arr[:, R:, :, None],
@@ -732,7 +1184,14 @@ class FleetSim:
                 exp_arr[:, :R, :, None],
                 (P, R, self.n_layers, self.activation.n_experts))
             .reshape(P, -1),
-        ], axis=1).ravel()                                        # (P*E,)
+        ], axis=1).ravel()
+
+    def _bin_work(self, layer_arr, exp_arr, active2d):
+        """Offered work (P, S, T) for the current schedule + per-plan
+        request-activity mask ``active2d`` (P, R)."""
+        P = self.n_plans
+        S, T = self.n_stations, self.n_bins
+        ev_time = self._event_times(layer_arr, exp_arr)           # (P*E,)
         base_bin, finite = self._to_bins(ev_time)
         bins = np.minimum(base_bin[self._rep] + self._offs, T - 1)
         w = self.ev_chunk_work * finite[self._rep] \
@@ -776,20 +1235,246 @@ class FleetSim:
 
     # ----------------------------------------------------------------- #
 
+    def _device_tables(self) -> dict:
+        """Build (once, lazily) the device-resident precompute pytree the
+        fused fixed point consumes.
+
+        Everything rate-independent is staged to the device in float64
+        (x64 scoped to the transfer): the zero-load schedule tensors, the
+        chunk layout + gather indices, the densified migration background
+        load, and — when the AIMD controller is on — the admission scan
+        tables and retry attempt tables.
+        """
+        if self._dev is not None:
+            return self._dev
+        qcfg = self.qcfg
+        with _x64():
+            d = dict(
+                dt=jnp.asarray(float(qcfg.dt_s)),
+                cap32=jnp.asarray(float(qcfg.buffer_s), dtype=jnp.float32),
+                dt32=jnp.asarray(float(qcfg.dt_s), dtype=jnp.float32),
+                eff_layer=jnp.asarray(self.eff_layer),
+                tok_base=jnp.asarray(self.tok_base),
+                gw_service=jnp.asarray(self.gw_service),
+                arrival_s=jnp.asarray(self.requests.arrival_s),
+                ingress_extra0=jnp.asarray(self.ingress_extra),
+                first_tok=jnp.asarray(self.first_tok),
+                tok_req=jnp.asarray(self.tok_req),
+                last_tok=jnp.asarray(
+                    self.first_tok + self.requests.decode_len - 1),
+                gw_rows=jnp.asarray(self._gw_rowc),
+                ex_rows=jnp.asarray(self._ex_rowc),
+                gw_b0=jnp.asarray(self._gw_b0),
+                gw_fin0=jnp.asarray(self._gw_fin0),
+                ex_b0=jnp.asarray(self._ex_b0),
+                ex_fin0=jnp.asarray(self._ex_fin0),
+            )
+            if self._mig_rm is not None:
+                d["mig_dense"] = jnp.asarray(self._mig_rm)    # (rows, T)
+            if self.admission_on:
+                acfg = qcfg.admission
+                f32 = np.float32
+                d.update(
+                    ttft0=jnp.asarray(self._adm_ttft0.astype(f32)),
+                    tpot0=jnp.asarray(self._adm_tpot0.astype(f32)),
+                    ctrl=jnp.asarray(control_bin_flags(
+                        self.n_bins, qcfg.dt_s, acfg.interval_s)),
+                    gw_rows_bin=jnp.asarray(self._adm_gw_rowc),
+                    exp_rows_bin=jnp.asarray(self._adm_exp_rowc),
+                    increase=jnp.asarray(f32(acfg.increase)),
+                    decrease=jnp.asarray(f32(acfg.decrease)),
+                    admit_min=jnp.asarray(f32(acfg.admit_min)),
+                    att_bin=jnp.asarray(self._att_bin),
+                    att_station=jnp.asarray(self._att_station),
+                    att_feasible=jnp.asarray(
+                        np.moveaxis(self._att_feasible, 1, 0)),
+                    att_extra=jnp.asarray(
+                        np.moveaxis(self._att_extra, 0, 1)),
+                    adm_u=jnp.asarray(self._adm_u),
+                )
+        self._dev = d
+        return d
+
+    def _use_pallas(self) -> bool:
+        """Resolve the deposit implementation (see ``deposit_impl``)."""
+        if self.deposit_impl == "auto":
+            return _kernel_ops.on_tpu()
+        return self.deposit_impl == "pallas"
+
+    def _launch(self, masks: np.ndarray, ttft_targets, tpot_targets,
+                want_wait: bool) -> dict:
+        """One fused device launch over the leading sweep axis F.
+
+        The request-activity masks are folded into a host-built compacted
+        chunk table (only active chunks are deposited; padded to
+        ``_CHUNK_BLOCK`` so repeated sweeps of the same shape reuse the
+        compile cache) — the device sees offered work, not the envelope.
+
+        Args:
+            masks: (F, R) bool request-activity masks.
+            ttft_targets: Optional (F,) raw TTFT targets (margin applied
+                here); None uses the construction-time config.
+            tpot_targets: Same for TPOT.
+            want_wait: Return the (T, F, rows) backlog trace.
+
+        Returns:
+            The :func:`_fused_core` output dict as host arrays, each
+            with a leading F axis (``wait`` stays time-major compact).
+        """
+        acfg = self.qcfg.admission
+        F = masks.shape[0]
+        if self.admission_on:
+            m = acfg.target_margin
+            tt = (np.full(F, m * acfg.ttft_target_s) if ttft_targets is None
+                  else m * np.asarray(ttft_targets, dtype=np.float64))
+            tp = (np.full(F, m * acfg.tpot_target_s) if tpot_targets is None
+                  else m * np.asarray(tpot_targets, dtype=np.float64))
+        else:
+            tt = np.zeros(F)
+            tp = np.zeros(F)
+
+        # Host-side chunk compaction: keep (f, chunk) pairs whose
+        # request is active, in the static row-grouped order.  Padding
+        # rides along with zero work.
+        P, R = self.n_plans, self.n_requests
+        T, SR = self.n_bins, self.n_rows
+        f_id, cid = np.nonzero(masks[:, self._f_req])
+        n = cid.size
+        n_pad = max(-(-n // _CHUNK_BLOCK), 1) * _CHUNK_BLOCK
+        pml2 = 2 * P * self.n_tokens * self.n_layers
+        src = np.zeros(n_pad, dtype=np.int64)
+        src[:n] = f_id * pml2 + self._f_src[cid]
+        offs = np.zeros(n_pad, dtype=np.int64)
+        offs[:n] = self._f_offs[cid]
+        work = np.zeros(n_pad)
+        work[:n] = self._f_work[cid]
+        fprow = np.zeros(n_pad, dtype=np.int32)
+        fprow[:n] = f_id.astype(np.int32) * SR + self._f_rowc[cid]
+        chunks = dict(src=src, offs=offs, work=work, fprow=fprow)
+        if self.admission_on:
+            fpr = np.zeros(n_pad, dtype=np.int64)
+            fpr[:n] = f_id * (P * R) + self._f_pr[cid]
+            chunks["fpr"] = fpr
+
+        # Iteration-1 offered work: the zero-wait schedule's bins are
+        # static, so one host bincount over the active chunks builds the
+        # peeled iteration's plane (a launch input, not a per-iteration
+        # transfer).
+        flat0 = (f_id * SR + self._f_rowc[cid]).astype(np.int64) * T \
+            + self._f_bins0[cid]
+        plane0 = np.bincount(
+            flat0, weights=self._f_work[cid] * self._f_fin0[cid],
+            minlength=F * SR * T).reshape(F, SR, T)
+        if self._mig_rm is not None:
+            plane0 += self._mig_rm[None]
+        work0_sum = plane0.sum(axis=2)                        # (F, SR)
+        with _x64():
+            out = _fused_exec(
+                self._device_tables(),
+                {k: jnp.asarray(v) for k, v in chunks.items()},
+                jnp.asarray(plane0.astype(np.float32)),
+                jnp.asarray(work0_sum),
+                jnp.asarray(tt), jnp.asarray(tp),
+                max(1, self.qcfg.iterations), self.n_bins, self.n_rows,
+                self.admission_on, self._use_pallas(), want_wait)
+            return {k: np.asarray(v) for k, v in out.items()}
+
     def run(self, active: np.ndarray | None = None,
-            zero_load: bool = False) -> TrafficResult:
+            zero_load: bool = False,
+            kv_slots: int | None = None) -> TrafficResult:
         """Simulate with an optional per-request activity mask (Poisson
         thinning for rate sweeps) and return per-plan traffic metrics.
 
-        ``zero_load`` skips the queue scan entirely (all waits zero):
-        the infinite-capacity reference whose latencies are exactly the
-        engine's — the natural anchor for relative-headroom SLOs.  The
-        admission controller (if configured) is also bypassed at zero
-        load.
+        The fixed point executes as **one fused device launch** (see
+        :func:`_fused_core`); :meth:`run_legacy` is the host-path anchor
+        it is pinned against.  ``zero_load`` delegates to the host path
+        (the queue scan is skipped entirely there, so the zero-load
+        reference stays bitwise equal to the engine).
 
         Args:
             active: Optional (R,) bool participation mask (default: all).
             zero_load: Skip queueing and admission entirely.
+            kv_slots: Optional override of the static KV admission cap
+                (the cap is host post-processing, so budget sweeps reuse
+                one device launch shape).
+
+        Returns:
+            A :class:`~repro.traffic.metrics.TrafficResult` with one
+            :class:`~repro.traffic.metrics.PlanTraffic` per plan.
+        """
+        if zero_load:
+            return self.run_legacy(active, zero_load=True,
+                                   kv_slots=kv_slots)
+        if active is None:
+            active = np.ones(self.n_requests, dtype=bool)
+        active = np.asarray(active, dtype=bool)
+        out = self._launch(active[None, :], None, None, want_wait=True)
+        # Exposed for the re-placement controller: the live
+        # (plan, satellite, bin) backlog of the last fleet scan,
+        # expanded from compact rows back to every satellite.
+        wait = out.pop("wait")                       # (T, 1, rows)
+        self.last_wait = np.moveaxis(
+            self._expand_rows(wait[:, 0, :]), 0, 2)  # (P, S, T)
+        out = {k: v[0] for k, v in out.items()}
+        out["work_sum"] = self._expand_rows(out["work_sum"])
+        return self._finalize(active, out, self.admission_on, kv_slots)
+
+    def run_many(self, active: np.ndarray, *,
+                 ttft_targets: np.ndarray | None = None,
+                 tpot_targets: np.ndarray | None = None,
+                 kv_slots: int | None = None) -> list[TrafficResult]:
+        """Run a whole sweep as one compile + one device launch.
+
+        The F sweep entries ride a vmapped leading axis of the fused
+        fixed point: a saturation sweep batches thinning masks, the
+        admission-frontier benchmark batches latency targets — either
+        way the fused kernel is traced once (``FUSED_TRACE_COUNT``) and
+        the per-entry results come back from a single launch.
+
+        Args:
+            active: (F, R) bool participation masks (one row per sweep
+                entry; rows may repeat when only targets vary).
+            ttft_targets: Optional (F,) TTFT targets overriding the
+                construction-time admission config (AIMD runs only).
+            tpot_targets: Optional (F,) TPOT targets, same contract.
+            kv_slots: Optional static-cap override (host post-processing).
+
+        Returns:
+            One :class:`~repro.traffic.metrics.TrafficResult` per sweep
+            entry, in order.
+        """
+        masks = np.asarray(active, dtype=bool)
+        if masks.ndim != 2 or masks.shape[1] != self.n_requests:
+            raise ValueError(f"active must be (F, {self.n_requests})")
+        if (ttft_targets is not None or tpot_targets is not None) \
+                and not self.admission_on:
+            raise ValueError(
+                "latency-target sweeps need an AIMD admission config")
+        out = self._launch(masks, ttft_targets, tpot_targets,
+                           want_wait=False)
+        out["work_sum"] = self._expand_rows(out["work_sum"])
+        return [
+            self._finalize(masks[f], {k: v[f] for k, v in out.items()},
+                           self.admission_on, kv_slots)
+            for f in range(masks.shape[0])
+        ]
+
+    def run_legacy(self, active: np.ndarray | None = None,
+                   zero_load: bool = False,
+                   kv_slots: int | None = None) -> TrafficResult:
+        """Host-path reference fixed point (the pre-fusion ``run``).
+
+        Iterates schedule -> bin -> scan -> gather with the schedule,
+        binning and gather steps on the host and only the backlog scan
+        on device (whose inputs downcast to float32, as they always
+        have — the fused path reproduces exactly that downcast) — the
+        authoritative semantic anchor the fused path is parity-pinned
+        against in ``tests/test_fleet_perf.py``.
+
+        Args:
+            active: Optional (R,) bool participation mask (default: all).
+            zero_load: Skip queueing and admission entirely.
+            kv_slots: Optional override of the static KV admission cap.
 
         Returns:
             A :class:`~repro.traffic.metrics.TrafficResult` with one
@@ -868,44 +1553,74 @@ class FleetSim:
         layer_arr, exp_arr, tok_total, seg_incl, c0 = \
             self._schedule(gw_wait, ex_max, start_pref)
 
-        # --- request metrics -----------------------------------------------
         last_tok = self.first_tok + req.decode_len - 1
         ttft = ingress_extra + tok_total[:, :R]                   # (P, R)
-        e2e = ttft + seg_incl[:, last_tok]                        # (P, R)
+        out = dict(
+            ttft=ttft, e2e=ttft + seg_incl[:, last_tok],
+            tok_total=tok_total,
+            tok_over=gw_over.any(axis=2) | ex_over.any(axis=2),
+            shed=shed, retries=retries, work_sum=work.sum(axis=2))
+        return self._finalize(active, out, adm_on, kv_slots)
 
-        tok_over = gw_over.any(axis=2) | ex_over.any(axis=2)      # (P, M)
-        fail_tok = self.nan_tok | tok_over
+    def _finalize(self, active: np.ndarray, out: dict, adm_on: bool,
+                  kv_slots: int | None = None) -> TrafficResult:
+        """Host post-processing shared by every execution path.
+
+        Turns one run's raw outcome tensors (``ttft``/``e2e`` (P, R),
+        ``tok_total`` (P, M), ``tok_over`` (P, M), ``shed``/``retries``
+        (P, R), ``work_sum`` (P, S)) into per-plan
+        :class:`~repro.traffic.metrics.PlanTraffic` rows: delivery
+        failure aggregation, the static KV admission cap, spans,
+        utilization and the latency quantiles' NaN masking.
+        """
+        qcfg, req = self.qcfg, self.requests
+        P, R = self.n_plans, self.n_requests
+        kv = qcfg.kv_slots if kv_slots is None else kv_slots
+        ttft, e2e = out["ttft"], out["e2e"]
+        tok_total, shed, retries = out["tok_total"], out["shed"], \
+            out["retries"]
+
+        fail_tok = self.nan_tok | out["tok_over"]
         failed = fail_tok[:, :R] \
             | _segment_any(fail_tok[:, R:], self.tok_req, R)      # (P, R)
         if adm_on:
             # Shed requests are accounted separately (not involuntary
             # drops); admitted requests entered via a feasible attempt.
-            failed |= shed
+            failed = failed | shed
         else:
-            failed |= self.fail_ingress
+            failed = failed | self.fail_ingress
 
         # KV admission cap: reject arrivals that would exceed the
         # in-flight budget (first-order: in-flight counted over all
         # offered requests).  The adaptive controller replaces this cap.
         admitted = np.ones((P, R), dtype=bool)
-        if qcfg.kv_slots > 0 and not adm_on:
+        if kv > 0 and not adm_on:
             comp = req.arrival_s[None, :] + np.nan_to_num(
                 e2e, nan=np.inf, posinf=np.inf)
             comp = np.where(active[None, :], comp, -np.inf)
             n_inactive = int((~active).sum())
             arrived = np.cumsum(active)                           # (R,)
-            for p in range(P):                                    # P is small
-                done = np.searchsorted(np.sort(comp[p]), req.arrival_s,
-                                       side="right") - n_inactive
-                admitted[p] = (arrived - done) <= qcfg.kv_slots
-        failed |= ~admitted
+            # Batched searchsorted: one stable argsort per plan ranks
+            # the sorted completion row against the (already sorted)
+            # arrivals; completions sort before equal arrivals (stable,
+            # first half), reproducing searchsorted side="right".
+            keys = np.concatenate([
+                np.sort(comp, axis=1),
+                np.broadcast_to(req.arrival_s[None, :], (P, R))], axis=1)
+            order = np.argsort(keys, axis=1, kind="stable")
+            pos = np.empty_like(order)
+            np.put_along_axis(pos, order, np.arange(2 * R)[None, :],
+                              axis=1)
+            done = pos[:, R:] - np.arange(R)[None, :] - n_inactive
+            admitted = (arrived[None, :] - done) <= kv
+        failed = failed | ~admitted
 
         served = active[None, :] & ~failed                        # (P, R)
         span = max(float(req.arrival_s[active].max()
                          - req.arrival_s[active].min()), qcfg.dt_s) \
             if active.any() else qcfg.dt_s
         # Offered utilization over the arrival window (> 1 = overload).
-        util = work.sum(axis=2) / span                            # (P, S)
+        util = out["work_sum"] / span                             # (P, S)
 
         plans_out = []
         for p in range(P):

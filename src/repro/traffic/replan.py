@@ -361,11 +361,18 @@ def replan_traffic(
             horizon_s=decision_span_s, slot_period_s=qcfg.slot_period_s,
             backlog_at=backlog_at if rcfg.mode == "backlog" else None)
 
+    # Pin every decide<->observe round to one time-bin count: equal
+    # shapes mean each round's fleet run reuses the fused fixed point's
+    # compile cache (a genuinely longer horizon still wins and retraces).
+    eval_bins = {"n_bins": 0}
+
     def evaluate(schedule):
         sim = FleetSim(list(candidates) + [schedule], topo, activation,
                        workload, compute, requests,
                        np.random.default_rng(seed), qcfg=qcfg,
-                       ground=ground, **sim_kwargs)
+                       ground=ground, min_bins=eval_bins["n_bins"],
+                       **sim_kwargs)
+        eval_bins["n_bins"] = sim.n_bins
         return sim, sim.run()
 
     report = build(lambda _k, t_s, cur:
