@@ -52,10 +52,11 @@ def main() -> None:
             print(f"# profile: no jax compile events ({e})",
                   file=sys.stderr)
 
-    from . import (bench_admission, bench_engine, bench_fig6, bench_fig7,
-                   bench_fleet, bench_kernels, bench_linkstate,
-                   bench_multi_expert, bench_placement, bench_replan,
-                   bench_roofline, bench_table2, bench_traffic)
+    from . import (bench_admission, bench_calibration, bench_engine,
+                   bench_fig6, bench_fig7, bench_fleet, bench_kernels,
+                   bench_linkstate, bench_multi_expert, bench_placement,
+                   bench_replan, bench_roofline, bench_table2,
+                   bench_traffic)
 
     n_tok = 120 if args.fast else 400
     suite = {
@@ -84,6 +85,8 @@ def main() -> None:
         "linkstate": (bench_linkstate, lambda: bench_linkstate.run(
             n_tokens=80 if args.fast else 250)),
         "roofline": (bench_roofline, bench_roofline.run),
+        "calibration": (bench_calibration,
+                        lambda: bench_calibration.run(fast=args.fast)),
     }
     if args.list:
         # One line per bench: name + the module docstring's summary line.
@@ -119,6 +122,11 @@ def main() -> None:
         structured["_profile"] = profile
     print(f"# total {time.time()-t0:.1f}s")
     if args.json_out:
+        # Resolved service-model provenance: jax/backend the numbers were
+        # produced on plus the content hash of every calibration table
+        # loaded during the run, so CI diffs compare like with like.
+        from repro.core import calibration
+        structured["_provenance"] = calibration.provenance()
         with open(args.json_out, "w") as f:
             json.dump(structured, f, indent=2)
         print(f"# wrote {args.json_out}")

@@ -11,7 +11,8 @@ so the documented code path cannot silently rot.
 import numpy as np
 from repro.core import (ActivationModel, ComputeConfig, Constellation,
                         ConstellationConfig, LinkConfig, MoEWorkload,
-                        baseline_plans, rank_plans, sample_topology)
+                        ServiceModel, baseline_plans, load_table,
+                        rank_plans, sample_topology)
 
 cfg = ConstellationConfig.scaled(12, 16, n_slots=10)  # CI-sized world
 con = Constellation(cfg)
@@ -24,4 +25,16 @@ ranked = rank_plans(plans, topo, activ, MoEWorkload.llama_moe_3p5b(),
 for plan, result in ranked:
     print(f"{plan.name:16s} mean={result.mean_s*1e3:7.2f} ms "
           f"p99={result.p99_s*1e3:7.2f} ms drop={result.drop_rate:.3f}")
+
+# Calibrated mode: swap the analytic FLOP constants for the committed
+# kernel-measured service table (omit service_model= for bit-identical
+# analytic results).
+table = load_table("llama-moe-3.5b")
+svc = ServiceModel.calibrated(table.workload_obj(), ComputeConfig(), table)
+calibrated = rank_plans(plans, topo, activ, table.workload_obj(),
+                        ComputeConfig(), np.random.default_rng(0),
+                        n_tokens=200, service_model=svc)
+best_plan, best = calibrated[0]
+print(f"calibrated[{table.table_hash}] best={best_plan.name} "
+      f"mean={best.mean_s:.3f} s")
 # --8<-- [end:snippet]

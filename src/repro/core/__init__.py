@@ -9,6 +9,8 @@ from .activation import (ActivationModel, activation_probs,
                          activation_probs_jax, esp, esp_jax,
                          esp_prefix_table, esp_prefix_table_jax, sample_topk,
                          sample_topk_jax, subset_pmf)
+from .calibration import (ServiceModel, ServiceTable, calibrate, load_table,
+                          resolve_service_model, save_table, verify_table)
 from .constellation import (EARTH_RADIUS_M, SPEED_OF_LIGHT, Constellation,
                             ConstellationConfig)
 from .device_placement import (DevicePlacementPlan, TorusSpec,
@@ -56,4 +58,6 @@ __all__ = [
     "SimResult", "simulate_token_generation",
     "simulate_token_generation_legacy",
     "MoEWorkload",
+    "ServiceModel", "ServiceTable", "calibrate", "load_table",
+    "resolve_service_model", "save_table", "verify_table",
 ]

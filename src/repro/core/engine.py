@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .activation import ActivationModel, sample_topk_jax
+from .calibration import ServiceModel, resolve_service_model
 from .latency import (ComputeConfig, TopologySample, node_masks_from_sets,
                       source_distance_table)
 from .placement import MultiExpertPlan, PlacementPlan
@@ -371,14 +372,21 @@ def ingress_offsets(batch: "PlanBatch", slots: np.ndarray,
     return batch.dist[slots[None, :], g0[:, None], ingress_sats[None, :]]
 
 
-@functools.partial(jax.jit, static_argnames=("stale",))
+@functools.partial(jax.jit, static_argnames=("stale", "calibrated"))
 def _evaluate_batch(dist, g_idx, expert_sats, slots, stale_slots, draws,
                     t_gateway, t_expert, t_head, eta, penalty,
-                    stale: bool):
+                    expert_sec, inv_speed, stale: bool,
+                    calibrated: bool = False):
     """(token_latency (P, T), layer_latency (P, T, L)) for a PlanBatch.
 
     dist: (N_T, G, V); g_idx: (P, L); expert_sats: (P, L, I);
     slots/stale_slots: (T,); draws: (L, T, K); eta: (P,).
+
+    With ``calibrated`` the scalar ``t_expert`` is replaced by the
+    per-expert table ``expert_sec`` (I,) scaled by the hosting
+    satellite's ``inv_speed`` (V,) — the kernel-calibrated Eq. 43 service
+    term.  The flag is static so the analytic trace is byte-identical to
+    the pre-calibration kernel (the dummy arrays are dead code).
     """
     def _one_plan(g_row, sats_li, eta_p):
         g_next = jnp.roll(g_row, -1)      # ring wrap for the last layer
@@ -392,7 +400,11 @@ def _evaluate_batch(dist, g_idx, expert_sats, slots, stale_slots, draws,
                                penalty, stale)
             # Eq. 43 contention: q = activated experts sharing the satellite.
             q = contention_counts(sats)
-            t_exp = (q.astype(dist.dtype) / eta_p) * t_expert
+            if calibrated:
+                unit = expert_sec[draws_l] * inv_speed[sats]      # (T, K)
+                t_exp = (q.astype(dist.dtype) / eta_p) * unit
+            else:
+                t_exp = (q.astype(dist.dtype) / eta_p) * t_expert
             lay = t_gateway + (d_out + t_exp + d_in).max(axis=1)
             return None, lay
 
@@ -408,11 +420,12 @@ def _evaluate_batch(dist, g_idx, expert_sats, slots, stale_slots, draws,
     return token_lat, layer_lat
 
 
-@functools.partial(jax.jit, static_argnames=("stale",))
+@functools.partial(jax.jit, static_argnames=("stale", "calibrated"))
 def _evaluate_schedule_batch(dist, g_idx, expert_sats, eta, plan_row,
                              slots, stale_slots, draws,
                              t_gateway, t_expert, t_head, penalty,
-                             stale: bool):
+                             expert_sec, inv_speed, stale: bool,
+                             calibrated: bool = False):
     """(token_latency (Q, T), layer_latency (Q, T, L)) for a ScheduleBatch.
 
     Identical arithmetic to :func:`_evaluate_batch` except the plan is a
@@ -421,6 +434,8 @@ def _evaluate_schedule_batch(dist, g_idx, expert_sats, eta, plan_row,
     and eta are gathered per token.  With a constant schedule every
     gather returns the static plan's values and the result is bit-for-bit
     the static kernel's (the parity ``tests/test_schedule.py`` pins).
+    ``calibrated``/``expert_sec``/``inv_speed`` behave exactly as in
+    :func:`_evaluate_batch`.
 
     dist: (N_T, G, V); g_idx: (P, L); expert_sats: (P, L, I); eta: (P,);
     plan_row: (Q, N_T); slots/stale_slots: (T,); draws: (L, T, K).
@@ -441,7 +456,11 @@ def _evaluate_schedule_batch(dist, g_idx, expert_sats, eta, plan_row,
             d_in = hop_latency(dist, slots, stale_slots, g_n[:, None],
                                sats, penalty, stale)
             q = contention_counts(sats)
-            t_exp = (q.astype(dist.dtype) / eta_tok[:, None]) * t_expert
+            if calibrated:
+                unit = expert_sec[draws_l] * inv_speed[sats]      # (T, K)
+                t_exp = (q.astype(dist.dtype) / eta_tok[:, None]) * unit
+            else:
+                t_exp = (q.astype(dist.dtype) / eta_tok[:, None]) * t_expert
             lay = t_gateway + (d_out + t_exp + d_in).max(axis=1)
             return None, lay
 
@@ -468,6 +487,27 @@ def _sample_draws_jax(weights, key, n_tokens: int, top_k: int):
 # --------------------------------------------------------------------- #
 # Public sweep API
 # --------------------------------------------------------------------- #
+
+
+def _service_terms(svc: ServiceModel, topo, ctx_len, include_lm_head):
+    """Service constants + calibrated arrays for one engine pass.
+
+    Analytic mode reproduces the legacy scalars exactly (same float ops
+    as ``compute.latency_s(workload.*_flops)``); the dummy (1,) arrays it
+    ships are dead code under the static ``calibrated=False`` trace.
+    """
+    t_gateway = svc.gateway_s(ctx_len)
+    t_head = svc.head_s if include_lm_head else 0.0
+    if svc.per_satellite:
+        t_expert = 0.0
+        expert_sec = jnp.asarray(svc.expert_s(), dtype=jnp.float32)
+        inv_speed = jnp.asarray(svc.inv_speed(topo.n_sats),
+                                dtype=jnp.float32)
+    else:
+        t_expert = svc.expert_scalar
+        expert_sec = jnp.zeros((1,), jnp.float32)
+        inv_speed = jnp.ones((1,), jnp.float32)
+    return t_gateway, t_expert, t_head, expert_sec, inv_speed
 
 
 def _resolve_slots_draws(topo, activation, rng, n_tokens, slots, draws,
@@ -523,6 +563,7 @@ def evaluate_plans(
     sample_backend: str = "host",
     slots: np.ndarray | None = None,
     draws: np.ndarray | None = None,
+    service_model: ServiceModel | str | None = None,
 ) -> list[SimResult]:
     """Monte-Carlo E2E latency for a sweep of P plans, one engine pass.
 
@@ -548,6 +589,12 @@ def evaluate_plans(
     draws, so a caller that also needs them (queue-load binning) can
     sample once and share.  The legacy random stream is only reproduced
     when both are None.
+
+    ``service_model`` selects the Eq. 43 service-time source: ``None`` /
+    ``"analytic"`` keeps the FLOP-count constants (bit-identical to the
+    pre-calibration engine), a calibrated
+    :class:`~repro.core.calibration.ServiceModel` activates per-expert,
+    per-satellite kernel-calibrated service times.
     """
     plans = list(plans)
     if batch is None:
@@ -567,9 +614,9 @@ def evaluate_plans(
                                         slots, draws, sample_backend)
     stale_slots = (slots - route_staleness) % topo.n_slots
 
-    t_gateway = compute.latency_s(workload.gateway_flops(ctx_len))
-    t_expert = compute.latency_s(workload.expert_flops)
-    t_head = compute.latency_s(workload.lm_head_flops) if include_lm_head else 0.0
+    svc = resolve_service_model(service_model, workload, compute)
+    t_gateway, t_expert, t_head, expert_sec, inv_speed = _service_terms(
+        svc, topo, ctx_len, include_lm_head)
 
     dist_d, g_idx_d, sats_d, eta_d = batch.device_arrays()
     token_lat, layer_lat = _evaluate_batch(
@@ -579,7 +626,9 @@ def evaluate_plans(
         jnp.asarray(draws, dtype=jnp.int32),
         t_gateway, t_expert, t_head, eta_d,
         reroute_penalty_s,
+        expert_sec, inv_speed,
         stale=route_staleness != 0,
+        calibrated=svc.per_satellite,
     )
     token_lat = np.asarray(token_lat, dtype=np.float64)
     layer_lat = np.asarray(layer_lat, dtype=np.float64)
@@ -608,6 +657,7 @@ def evaluate_schedules(
     sample_backend: str = "host",
     slots: np.ndarray | None = None,
     draws: np.ndarray | None = None,
+    service_model: ServiceModel | str | None = None,
 ) -> list[SimResult]:
     """Monte-Carlo E2E latency for a sweep of Q time-indexed schedules.
 
@@ -621,7 +671,9 @@ def evaluate_schedules(
     ``tests/test_schedule.py``).
 
     Sampling semantics (``slots`` / ``draws`` pinning, the legacy random
-    stream, ``sample_backend``) are exactly ``evaluate_plans``'s.
+    stream, ``sample_backend``) are exactly ``evaluate_plans``'s, as is
+    the ``service_model`` switch (analytic bit-parity / calibrated
+    per-satellite service).
     """
     schedules = [as_schedule(s, topo.n_slots) for s in schedules]
     if batch is None:
@@ -642,10 +694,9 @@ def evaluate_schedules(
                                         slots, draws, sample_backend)
     stale_slots = (slots - route_staleness) % topo.n_slots
 
-    t_gateway = compute.latency_s(workload.gateway_flops(ctx_len))
-    t_expert = compute.latency_s(workload.expert_flops)
-    t_head = compute.latency_s(workload.lm_head_flops) if include_lm_head \
-        else 0.0
+    svc = resolve_service_model(service_model, workload, compute)
+    t_gateway, t_expert, t_head, expert_sec, inv_speed = _service_terms(
+        svc, topo, ctx_len, include_lm_head)
 
     dist_d, g_idx_d, sats_d, eta_d = batch.base.device_arrays()
     token_lat, layer_lat = _evaluate_schedule_batch(
@@ -655,7 +706,9 @@ def evaluate_schedules(
         jnp.asarray(draws, dtype=jnp.int32),
         t_gateway, t_expert, t_head,
         reroute_penalty_s,
+        expert_sec, inv_speed,
         stale=route_staleness != 0,
+        calibrated=svc.per_satellite,
     )
     token_lat = np.asarray(token_lat, dtype=np.float64)
     layer_lat = np.asarray(layer_lat, dtype=np.float64)

@@ -6,6 +6,8 @@ on TPU the compiled Mosaic kernels run.
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 
@@ -16,6 +18,23 @@ from .moe_gmm import gmm as _gmm
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def timed_call(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Best-of-``iters`` blocked wall time of ``fn(*args)``, seconds.
+
+    The measurement primitive behind ``repro.core.calibration`` and the
+    kernel benchmarks: warmup calls absorb compilation, then each timed
+    call blocks on the result so async dispatch cannot hide the work.
+    """
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def gmm(x: jnp.ndarray, w: jnp.ndarray, *, block_c: int = 128,

@@ -207,6 +207,26 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     return record
 
 
+def calibrate_hook(record: dict) -> None:
+    """Fold a compiled cell's roofline terms into the arch's committed
+    service-time calibration table (repro.core.calibration), if one
+    exists.  The attached per-chip FLOPs/bytes cross-check the table's
+    analytic energy accounting against the real compiled HLO."""
+    if record.get("status") != "ok" or "roofline" not in record:
+        return
+    from repro.core import calibration as cal
+    name = record["arch"]
+    try:
+        table = cal.load_table(name)
+    except FileNotFoundError:
+        print(f"[calibrate] no committed service table for {name}; run "
+              "benchmarks/bench_calibration.py --refresh first")
+        return
+    table = cal.attach_dryrun(table, record)
+    path = cal.save_table(table)
+    print(f"[calibrate] attached {record['shape']} roofline to {path}")
+
+
 def _write(path: str, record: dict) -> None:
     os.makedirs(os.path.dirname(path), exist_ok=True)
     tmp = path + ".tmp"
@@ -228,6 +248,9 @@ def main() -> None:
     ap.add_argument("--set", nargs="*", default=[], dest="overrides",
                     help="ModelConfig overrides k=v (perf variants)")
     ap.add_argument("--tag", default="", help="artifact suffix for variants")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="attach each OK cell's roofline terms to the "
+                         "arch's committed service-time calibration table")
     args = ap.parse_args()
     overrides = _parse_overrides(args.overrides)
 
@@ -249,6 +272,8 @@ def main() -> None:
                 rec = run_cell(arch, shape_name, multi_pod, args.out,
                                force=args.force, overrides=overrides,
                                tag=args.tag)
+                if args.calibrate:
+                    calibrate_hook(rec)
                 n_fail += rec.get("status") == "fail"
     print(f"done; {n_fail} failures")
     raise SystemExit(1 if n_fail else 0)

@@ -90,6 +90,7 @@ from repro.core import (ScheduleBatch, evaluate_schedules,
                         schedule_ingress_offsets)
 from repro.kernels import ops as _kernel_ops
 from repro.core.activation import ActivationModel
+from repro.core.calibration import resolve_service_model
 from repro.core.latency import ComputeConfig, TopologySample
 from repro.core.schedule import as_schedule, slot_of_time
 from repro.core.workload import MoEWorkload
@@ -625,6 +626,7 @@ class FleetSim:
         include_lm_head: bool = True,
         batch: ScheduleBatch | None = None,
         min_bins: int = 0,
+        service_model=None,
     ):
         """Build the simulator and run every rate-independent precompute.
 
@@ -654,6 +656,14 @@ class FleetSim:
                 loop pins consecutive decide/evaluate rounds to one T so
                 every round's fleet run reuses the fused fixed point's
                 compile cache (a longer natural horizon still wins).
+            service_model: Eq. 43 service-time source — ``None`` /
+                ``"analytic"`` keeps the FLOP-count constants
+                (bit-identical to the pre-calibration simulator), a
+                calibrated :class:`~repro.core.calibration.ServiceModel`
+                activates kernel-calibrated per-expert / per-satellite
+                service and batch-size-dependent decode gateway rates
+                (weight reads amortized over the estimated in-flight
+                decode batch, read off the decode-attention roofline).
         """
         self.plans = list(plans)
         self.schedules = [as_schedule(p, topo.n_slots) for p in self.plans]
@@ -704,13 +714,16 @@ class FleetSim:
             self.fail_ingress, 0.0, ing_off)                      # (P, R)
 
         # --- engine pass: base (zero-load) per-token latencies -------------
+        svc = resolve_service_model(service_model, workload, compute)
+        self.service_model = svc
         draws = np.stack([activation.sample(layer, rng, M)
                           for layer in range(L)])                 # (L, M, K)
         self.draws = draws
         self.engine_results = evaluate_schedules(
             self.schedules, topo, activation, workload, compute, rng,
             n_tokens=M, ctx_len=ctx_len, include_lm_head=include_lm_head,
-            eta=eta, batch=batch, slots=self.slots, draws=draws)
+            eta=eta, batch=batch, slots=self.slots, draws=draws,
+            service_model=svc)
         token_lat = np.stack(
             [r.token_latency_s for r in self.engine_results])     # (P, M)
         layer_lat = np.stack(
@@ -723,10 +736,9 @@ class FleetSim:
         token_lat = np.where(self.nan_tok, 0.0, token_lat)
         layer_lat = np.where(np.isfinite(layer_lat), layer_lat, 0.0)
 
-        t_gateway = compute.latency_s(workload.gateway_flops(ctx_len))
-        t_expert = compute.latency_s(workload.expert_flops)
-        t_head = (compute.latency_s(workload.lm_head_flops)
-                  if include_lm_head else 0.0)
+        t_gateway = svc.gateway_s(ctx_len)
+        t_expert = svc.expert_scalar
+        t_head = svc.head_s if include_lm_head else 0.0
         self.t_gateway, self.t_expert = t_gateway, t_expert
 
         # --- zero-load per-layer costs -------------------------------------
@@ -738,10 +750,34 @@ class FleetSim:
         extra_layer = (requests.prompt_len - 1).astype(np.float64) \
             * incr_layer                                          # (R,)
 
-        self.gw_service = np.concatenate([
-            requests.prompt_len.astype(np.float64) * t_gateway,
-            np.full(N, t_gateway),
-        ])                                                        # (M,)
+        if svc.per_satellite:
+            # Batch-amortized gateway service (calibrated mode): estimate
+            # each request's in-flight decode concurrency from the sorted
+            # arrivals and the zero-load token latency, then read the
+            # per-token decode service off the decode-attention roofline
+            # at that batch size; a prefill amortizes the gateway weight
+            # reads over its own prompt batch.
+            dec_lat = np.where(self.nan_tok[:, R:], np.nan, token_lat[:, R:])
+            with np.errstate(invalid="ignore"):
+                mean_tok = float(np.nanmean(dec_lat)) if N else 0.0
+            if not np.isfinite(mean_tok) or mean_tok <= 0.0:
+                mean_tok = L * t_gateway
+            dur = requests.decode_len.astype(np.float64) * mean_tok
+            arr = requests.arrival_s.astype(np.float64)
+            started = np.searchsorted(arr, arr, side="right")
+            ended = np.searchsorted(np.sort(arr + dur), arr, side="right")
+            conc = np.maximum(started - ended, 1)                 # (R,)
+            self.decode_batch_est = conc
+            pre_gw = requests.prompt_len.astype(np.float64) \
+                * svc.gateway_s(ctx_len, batch=requests.prompt_len)
+            dec_gw = svc.gateway_s(ctx_len, batch=conc)[tok_req]
+            self.gw_service = np.concatenate([pre_gw, dec_gw])    # (M,)
+        else:
+            self.decode_batch_est = None
+            self.gw_service = np.concatenate([
+                requests.prompt_len.astype(np.float64) * t_gateway,
+                np.full(N, t_gateway),
+            ])                                                    # (M,)
         self.eff_layer = layer_lat.copy()                         # (P, M, L)
         self.eff_layer[:, :R, :] += extra_layer[None, :, None]
         self.tok_base = token_lat.copy()                          # (P, M)
@@ -780,19 +816,37 @@ class FleetSim:
         exp_sat_tok = np.take_along_axis(
             sats_tok, draws_mlk[None], axis=3)                    # (P,M,L,K)
         dec_exp_station = exp_sat_tok[:, R:]                      # (P,N,L,K)
-        dec_exp_work = np.broadcast_to(
-            (t_expert / eta_tok[:, R:])[..., None, None],
-            dec_exp_station.shape)
-
-        # Prefill expert work: the whole prompt hits every expert of the
-        # layer in proportion to its activation probability (fluid split
-        # of the batch), deposited at the prefill token's expert visit.
         probs = activation.all_probs()                            # (L, I)
-        pre_exp_station = sats_tok[:, :R]                         # (P,R,L,I)
-        pre_exp_work = np.broadcast_to(
-            requests.prompt_len[None, :, None, None]
-            * probs[None, None, :, :] * t_expert
-            / eta_tok[:, :R, None, None], (P, R, L, n_exp))
+        if svc.per_satellite:
+            # Calibrated deposits: each drawn expert's own service
+            # seconds, scaled by the hosting satellite's speed — the
+            # queue-theoretic face of the calibrated Eq. 43 term.
+            exp_sec = np.asarray(svc.expert_s(), dtype=np.float64)  # (I,)
+            inv_sp = np.asarray(svc.inv_speed(topo.n_sats),
+                                dtype=np.float64)                 # (V,)
+            dec_exp_work = (exp_sec[draws_mlk[R:]][None]
+                            * inv_sp[dec_exp_station]
+                            / eta_tok[:, R:, None, None])
+            pre_exp_station = sats_tok[:, :R]                     # (P,R,L,I)
+            pre_exp_work = (requests.prompt_len[None, :, None, None]
+                            * probs[None, None, :, :]
+                            * exp_sec[None, None, None, :]
+                            * inv_sp[pre_exp_station]
+                            / eta_tok[:, :R, None, None])
+        else:
+            dec_exp_work = np.broadcast_to(
+                (t_expert / eta_tok[:, R:])[..., None, None],
+                dec_exp_station.shape)
+
+            # Prefill expert work: the whole prompt hits every expert of
+            # the layer in proportion to its activation probability
+            # (fluid split of the batch), deposited at the prefill
+            # token's expert visit.
+            pre_exp_station = sats_tok[:, :R]                     # (P,R,L,I)
+            pre_exp_work = np.broadcast_to(
+                requests.prompt_len[None, :, None, None]
+                * probs[None, None, :, :] * t_expert
+                / eta_tok[:, :R, None, None], (P, R, L, n_exp))
 
         ev_station = np.concatenate([
             gw_station.reshape(P, -1),

@@ -1,0 +1,178 @@
+"""Bench-regression gate: diff fresh BENCH_*.json against committed baselines.
+
+CI runs each benchmark smoke with ``--json-out`` and then::
+
+    python tools/check_bench.py BENCH_traffic.json BENCH_fleet.json ...
+
+Every metric present in the committed baseline
+(``benchmarks/baselines/<name>.json``) must still be present in the fresh
+artifact and match within tolerance; a missing metric or an
+out-of-tolerance numeric deviation fails the job.  *Extra* keys in the
+fresh artifact are fine (new metrics don't need a baseline update to
+land, but removing or breaking one does).
+
+What gets compared
+------------------
+Structural and statistical metrics only.  Keys whose path contains a
+:data:`SKIP_SUBSTRINGS` fragment are ignored — wall-clock timings,
+compile times, speedups, provenance (jax version, table hashes, host
+rates) all vary machine to machine and are tracked as artifacts, not
+gated.  Numeric leaves compare with a combined bound::
+
+    |fresh - base| <= atol + rtol * |base|
+
+using the loosest (rtol, atol) of the :data:`TOLERANCES` entries whose
+substring matches the key path, else :data:`DEFAULT_TOL`.  Booleans and
+strings must be equal; ``pass``/``parity_ok`` style flags therefore gate
+exactly.
+
+Updating baselines
+------------------
+Intentional metric changes re-pin with::
+
+    python tools/check_bench.py --update BENCH_traffic.json ...
+
+which copies the fresh artifacts over the committed baselines (commit the
+diff).  Baselines were generated with the exact CI smoke flags (see
+.github/workflows/ci.yml) — regenerate with the same flags or the gate
+will flag spurious shape differences.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import shutil
+import sys
+from pathlib import Path
+
+BASELINE_DIR = Path(__file__).resolve().parent.parent / "benchmarks" / "baselines"
+
+#: Key-path fragments excluded from the diff (machine-dependent numbers).
+SKIP_SUBSTRINGS = (
+    "us_per_call", "wall", "compile", "_profile", "speed", "provenance",
+    "jax", "table_hash", "host", "measured", "predicted", "ratio",
+    "build_s", "sweep_s", "steady_s", "first_s", "stages", "elapsed",
+    "ttft", "e2e", "tpot", "wait", "latency", "_ms", "seconds",
+)
+
+#: (substring, rtol, atol) — loosest match wins; order is irrelevant.
+TOLERANCES = (
+    ("goodput", 0.05, 1e-6),
+    ("rate", 0.05, 1e-6),
+    ("frontier", 0.05, 1e-6),
+    ("loss", 0.05, 1e-9),
+)
+
+#: Fallback for numeric leaves no TOLERANCES entry matches.
+DEFAULT_TOL = (0.01, 1e-9)
+
+
+def _skip(path: str) -> bool:
+    low = path.lower()
+    return any(s in low for s in SKIP_SUBSTRINGS)
+
+
+def _tol_for(path: str) -> tuple[float, float]:
+    low = path.lower()
+    rtol, atol = DEFAULT_TOL
+    for sub, r, a in TOLERANCES:
+        if sub in low:
+            rtol, atol = max(rtol, r), max(atol, a)
+    return rtol, atol
+
+
+def _close(fresh: float, base: float, rtol: float, atol: float) -> bool:
+    if math.isnan(base) or math.isnan(fresh):
+        return math.isnan(base) == math.isnan(fresh)
+    if math.isinf(base) or math.isinf(fresh):
+        return fresh == base
+    return abs(fresh - base) <= atol + rtol * abs(base)
+
+
+def diff(fresh, base, path: str = "") -> list[str]:
+    """Recursive baseline-vs-fresh comparison; returns problem strings."""
+    if _skip(path):
+        return []
+    problems: list[str] = []
+    if isinstance(base, dict):
+        if not isinstance(fresh, dict):
+            return [f"{path}: baseline is an object, fresh is "
+                    f"{type(fresh).__name__}"]
+        for key, bval in base.items():
+            sub = f"{path}.{key}" if path else key
+            if _skip(sub):
+                continue
+            if key not in fresh:
+                problems.append(f"{sub}: metric missing from fresh artifact")
+                continue
+            problems += diff(fresh[key], bval, sub)
+    elif isinstance(base, list):
+        if not isinstance(fresh, list):
+            return [f"{path}: baseline is a list, fresh is "
+                    f"{type(fresh).__name__}"]
+        if len(fresh) != len(base):
+            return [f"{path}: length {len(fresh)} != baseline {len(base)}"]
+        for i, (fv, bv) in enumerate(zip(fresh, base)):
+            problems += diff(fv, bv, f"{path}[{i}]")
+    elif isinstance(base, bool) or isinstance(fresh, bool):
+        if fresh is not base:
+            problems.append(f"{path}: {fresh} != baseline {base}")
+    elif isinstance(base, (int, float)) and isinstance(fresh, (int, float)):
+        rtol, atol = _tol_for(path)
+        if not _close(float(fresh), float(base), rtol, atol):
+            problems.append(
+                f"{path}: {fresh} deviates from baseline {base} "
+                f"(rtol={rtol}, atol={atol})")
+    else:
+        if fresh != base:
+            problems.append(f"{path}: {fresh!r} != baseline {base!r}")
+    return problems
+
+
+def check_file(fresh_path: Path, baseline_dir: Path,
+               update: bool = False) -> list[str]:
+    """Gate one artifact; with ``update`` re-pin the baseline instead."""
+    base_path = baseline_dir / fresh_path.name
+    if update:
+        baseline_dir.mkdir(parents=True, exist_ok=True)
+        shutil.copyfile(fresh_path, base_path)
+        print(f"[update] {base_path}")
+        return []
+    if not base_path.exists():
+        return [f"{fresh_path.name}: no committed baseline at {base_path} "
+                "(run with --update and commit it)"]
+    fresh = json.loads(fresh_path.read_text())
+    base = json.loads(base_path.read_text())
+    return [f"{fresh_path.name}: {p}"
+            for p in diff(fresh, base, path="")]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifacts", nargs="+", metavar="BENCH.json",
+                    help="fresh --json-out artifacts to gate")
+    ap.add_argument("--baseline-dir", default=str(BASELINE_DIR))
+    ap.add_argument("--update", action="store_true",
+                    help="re-pin the baselines from the fresh artifacts")
+    args = ap.parse_args()
+
+    baseline_dir = Path(args.baseline_dir)
+    problems: list[str] = []
+    for name in args.artifacts:
+        path = Path(name)
+        if not path.exists():
+            problems.append(f"{name}: fresh artifact not found")
+            continue
+        problems += check_file(path, baseline_dir, update=args.update)
+    if problems:
+        for p in problems:
+            print(f"[REGRESSION] {p}", file=sys.stderr)
+        raise SystemExit(1)
+    if not args.update:
+        print(f"check_bench: {len(args.artifacts)} artifact(s) within "
+              "tolerance of committed baselines")
+
+
+if __name__ == "__main__":
+    main()
