@@ -18,6 +18,19 @@ import sys
 import time
 
 
+def _peak_rss_mb() -> float:
+    """Peak resident set size of this process, MB (0.0 if unavailable)."""
+    try:
+        import resource
+        rss_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        # Linux reports kilobytes, macOS bytes.
+        if sys.platform == "darwin":                  # pragma: no cover
+            rss_kb /= 1024.0
+        return round(rss_kb / 1024.0, 1)
+    except Exception:                                 # pragma: no cover
+        return 0.0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
@@ -30,9 +43,10 @@ def main() -> None:
                     help="write structured results (benches that return "
                          "dicts) to this JSON file")
     ap.add_argument("--profile", action="store_true",
-                    help="per-bench wall-time + first-call jit-compile "
-                         "time columns (stdout and the --json-out "
-                         "payload under '_profile')")
+                    help="adds the first-call jit-compile time column to "
+                         "the always-recorded per-bench wall time and "
+                         "peak RSS (stdout and the --json-out payload "
+                         "under '_profile')")
     args = ap.parse_args()
 
     compile_s = {"total": 0.0}
@@ -54,9 +68,9 @@ def main() -> None:
 
     from . import (bench_admission, bench_calibration, bench_engine,
                    bench_fig6, bench_fig7, bench_fleet, bench_kernels,
-                   bench_linkstate, bench_multi_expert, bench_placement,
-                   bench_replan, bench_roofline, bench_table2,
-                   bench_traffic)
+                   bench_linkstate, bench_multi_expert, bench_obs,
+                   bench_placement, bench_replan, bench_roofline,
+                   bench_table2, bench_traffic)
 
     n_tok = 120 if args.fast else 400
     suite = {
@@ -87,6 +101,7 @@ def main() -> None:
         "roofline": (bench_roofline, bench_roofline.run),
         "calibration": (bench_calibration,
                         lambda: bench_calibration.run(fast=args.fast)),
+        "obs": (bench_obs, lambda: bench_obs.run(fast=args.fast)),
     }
     if args.list:
         # One line per bench: name + the module docstring's summary line.
@@ -109,24 +124,30 @@ def main() -> None:
             raise SystemExit(2)
         t_bench, c_bench = time.time(), compile_s["total"]
         result = suite[name][1]()
+        # Wall time and peak RSS are recorded for every bench
+        # unconditionally — a --profile run that sees no jax compile
+        # events still ships a non-empty profile payload.
+        wall = time.time() - t_bench
+        profile[name] = {"wall_s": round(wall, 3),
+                         "peak_rss_mb": _peak_rss_mb()}
         if args.profile:
-            wall = time.time() - t_bench
             comp = compile_s["total"] - c_bench
-            profile[name] = {"wall_s": round(wall, 3),
-                             "compile_s": round(comp, 3)}
+            profile[name]["compile_s"] = round(comp, 3)
             print(f"profile/{name},{wall * 1e6:.3f},"
                   f"compile_s={comp:.3f};steady_s={wall - comp:.3f}")
         if isinstance(result, dict):
             structured[name] = result
-    if profile:
-        structured["_profile"] = profile
+    structured["_profile"] = profile
     print(f"# total {time.time()-t0:.1f}s")
     if args.json_out:
         # Resolved service-model provenance: jax/backend the numbers were
         # produced on plus the content hash of every calibration table
-        # loaded during the run, so CI diffs compare like with like.
+        # loaded during the run — and the per-bench profile (wall, peak
+        # RSS, compile time when measured) — so CI diffs compare like
+        # with like and every artifact carries its own cost record.
         from repro.core import calibration
-        structured["_provenance"] = calibration.provenance()
+        structured["_provenance"] = dict(calibration.provenance(),
+                                         profile=profile)
         with open(args.json_out, "w") as f:
             json.dump(structured, f, indent=2)
         print(f"# wrote {args.json_out}")

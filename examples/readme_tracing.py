@@ -1,0 +1,45 @@
+"""The README "Tracing a run" snippet, executable.
+
+This file IS the python snippet shown in README.md (§ Tracing a run):
+`tools/check_docs.py` asserts the two stay byte-identical (between the
+SNIPPET markers), executes this module, and validates the trace it
+writes with `tools/check_trace.py`, so the documented observability
+path cannot silently rot.
+
+    PYTHONPATH=src python examples/readme_tracing.py
+"""
+# --8<-- [start:snippet]
+import numpy as np
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        rand_intra_cg_plan, sample_topology, spacemoe_plan)
+from repro.obs import (ProbeConfig, build_flight_log, summarize_timeseries,
+                       write_trace)
+from repro.traffic import FleetSim, QueueConfig, sample_requests
+from repro.traffic.metrics import format_table
+
+con = Constellation(ConstellationConfig.scaled(8, 12, n_slots=10))
+rng = np.random.default_rng(0)
+topo = sample_topology(con, LinkConfig(), rng)
+activ = ActivationModel.zipf(n_layers=4, n_experts=4, top_k=2)
+plans = [spacemoe_plan(con, topo, activ),
+         rand_intra_cg_plan(con.cfg, 4, 4, np.random.default_rng(7))]
+req = sample_requests(np.random.default_rng(8), rate_rps=2.0,
+                      horizon_s=40.0, n_stations=1, prompt_median=4,
+                      prompt_max=16, decode_mean=4, decode_max=8)
+
+# probes= is a static flag: omit it (None) and the launch is bitwise
+# identical to the probe-free kernel; set it and the fused fixed point
+# writes on-device telemetry rings during its final iteration.
+sim = FleetSim(plans, topo, activ, MoEWorkload.llama_moe_3p5b(),
+               ComputeConfig(), req, np.random.default_rng(5),
+               qcfg=QueueConfig(dt_s=0.05, tail_s=30.0),
+               probes=ProbeConfig())
+res = sim.run()                        # one fused launch, probes ride along
+
+log = build_flight_log(sim, res, scenario="smoke")
+trace = write_trace("trace_smoke.json", log)   # open at ui.perfetto.dev
+print(format_table(summarize_timeseries(sim.last_probes, n_windows=4)))
+print(f"{len(trace['traceEvents'])} trace events, "
+      f"{len(log.served())} served requests traced")
+# --8<-- [end:snippet]

@@ -372,6 +372,67 @@ def ingress_offsets(batch: "PlanBatch", slots: np.ndarray,
     return batch.dist[slots[None, :], g0[:, None], ingress_sats[None, :]]
 
 
+def eq43_layer_terms(batch: "ScheduleBatch", sched: int, slots: np.ndarray,
+                     draws: np.ndarray, t_gateway: float,
+                     t_expert: float = 0.0,
+                     expert_sec: np.ndarray | None = None,
+                     inv_speed: np.ndarray | None = None) -> dict:
+    """Per-(token, layer, branch) decomposition of the Eq. 43 layer cost.
+
+    Host-side numpy mirror of :func:`_evaluate_schedule_batch`'s inner
+    indexing (current-slot paths, i.e. ``stale=False``), kept separate so
+    the flight recorder (:func:`repro.obs.recorder.eq43_breakdown`) can
+    attribute a token's zero-load layer latency to its constituent
+    terms — outbound hop, expert service under colocation contention,
+    return hop — without re-tracing the jitted kernel.
+
+    Args:
+        batch: The :class:`~repro.core.schedule.ScheduleBatch` the run
+            evaluated (``base.dist`` (N_T, G, V), ``plan_row`` (Q, N_T)).
+        sched: Schedule row q to decompose.
+        slots: (T,) topology slot per token.
+        draws: (L, T, K) expert draws (the engine's sampled top-K).
+        t_gateway: Gateway service seconds per layer.
+        t_expert: Analytic per-expert service seconds (used when the
+            calibrated tables below are absent).
+        expert_sec: Optional (I,) calibrated per-expert service seconds.
+        inv_speed: Optional (V,) per-satellite inverse speed factors
+            (both given => the calibrated Eq. 43 service term).
+
+    Returns:
+        Dict of arrays: ``d_out``/``d_in``/``t_exp`` (T, L, K) seconds,
+        ``q`` (T, L, K) colocation counts, ``sats`` (T, L, K) serving
+        satellites, and ``layer_s`` (T, L) — ``t_gateway + max_K(d_out +
+        t_exp + d_in)`` with unreachable branches as NaN, matching the
+        kernel's ``layer_latency_s`` exactly.
+    """
+    base = batch.base
+    slots = np.asarray(slots)
+    rows = np.asarray(batch.plan_row)[int(sched), slots]        # (T,)
+    g_tok = np.asarray(base.g_idx)[rows]                        # (T, L)
+    g_next = np.roll(g_tok, -1, axis=1)   # ring wrap for the last layer
+    eta_tok = np.asarray(base.eta)[rows]                        # (T,)
+    draws_tlk = np.moveaxis(np.asarray(draws), 0, 1)            # (T, L, K)
+    sats = np.take_along_axis(np.asarray(base.expert_sats)[rows],
+                              draws_tlk, axis=2)                # (T, L, K)
+    dist = np.asarray(base.dist)
+    s3 = slots[:, None, None]
+    d_out = dist[s3, g_tok[:, :, None], sats]
+    d_in = dist[s3, g_next[:, :, None], sats]
+    q = contention_counts(sats)
+    if expert_sec is not None and inv_speed is not None:
+        unit = np.asarray(expert_sec)[draws_tlk] \
+            * np.asarray(inv_speed)[sats]
+    else:
+        unit = t_expert
+    t_exp = (np.asarray(q, dtype=dist.dtype)
+             / eta_tok[:, None, None]) * unit
+    layer = t_gateway + (d_out + t_exp + d_in).max(axis=2)      # (T, L)
+    layer = np.where(np.isfinite(layer), layer, np.nan)
+    return dict(d_out=d_out, d_in=d_in, q=q, t_exp=t_exp, sats=sats,
+                layer_s=layer)
+
+
 @functools.partial(jax.jit, static_argnames=("stale", "calibrated"))
 def _evaluate_batch(dist, g_idx, expert_sats, slots, stale_slots, draws,
                     t_gateway, t_expert, t_head, eta, penalty,

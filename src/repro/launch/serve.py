@@ -128,6 +128,16 @@ def main(argv=None) -> dict:
                          "topology slot, 'backlog' additionally inflates "
                          "scores with the live per-satellite backlog "
                          "(adds a replan/<mode> row to the table)")
+    ap.add_argument("--rate-scale", type=float, default=1.0,
+                    help="multiply the --traffic scenario's arrival "
+                         "rates (overload knob for admission/replan "
+                         "demos and the CI trace smoke)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="with --traffic: run the fleet simulation with "
+                         "on-device probes and export the flight "
+                         "recorder as Chrome/Perfetto trace-event JSON "
+                         "(open at ui.perfetto.dev); also prints the "
+                         "windowed fleet-telemetry table")
     ap.add_argument("--fail-device", type=int, default=-1,
                     help="elastic demo: fail this EP device and re-plan")
     args = ap.parse_args(argv)
@@ -259,9 +269,14 @@ def main(argv=None) -> dict:
             ground = build_ground_segment(
                 con, LinkConfig(token_dim=cfg.d_model),
                 min_elevation_deg=10.0)
+            sim_kwargs = {}
+            if args.trace:
+                from repro.obs import ProbeConfig
+                sim_kwargs["probes"] = ProbeConfig()
             res = run_scenario(sc, sweep, topo, activ, wl, comp,
                                np.random.default_rng(4), ground=ground,
-                               constellation=con)
+                               constellation=con,
+                               rate_scale=args.rate_scale, **sim_kwargs)
             rows = res.result.table(sc.slo, scenario=sc.name)
             if res.post_failure is not None:
                 rows += res.post_failure.table(
@@ -278,6 +293,24 @@ def main(argv=None) -> dict:
                       f"over {len(rep.decisions)} decision(s)")
                 out[tag] = {"switches": rep.n_switches,
                             "migration_bytes": rep.total_migration_bytes}
+            if args.trace:
+                from repro.obs import (build_flight_log,
+                                       summarize_timeseries, write_trace)
+                log = build_flight_log(res.sim, res.result,
+                                       replan=res.replan,
+                                       scenario=sc.name)
+                trace = write_trace(args.trace, log)
+                tw = summarize_timeseries(res.sim.last_probes,
+                                          plan=log.plan)
+                if tw:
+                    print(format_table(tw, prefix="[telemetry] "))
+                print(f"[trace] {len(trace['traceEvents'])} events "
+                      f"({len(log.requests)} requests, "
+                      f"{len(log.events)} control instants) -> "
+                      f"{args.trace}")
+                out["trace"] = {"path": args.trace,
+                                "n_events": len(trace["traceEvents"]),
+                                "n_control_events": len(log.events)}
     return out
 
 

@@ -1,0 +1,36 @@
+"""repro.obs — flight recorder & telemetry for the fleet simulator.
+
+Three layers (see ``docs/architecture.md`` § Observability):
+
+* :mod:`.probes` — on-device probe ring buffers the fused fleet kernel
+  writes via ``dynamic_update_slice`` under a *static* ``probes=`` flag
+  (``None`` keeps the trace bit-identical to the probe-free kernel);
+* :mod:`.recorder` — host-side request flight recorder + control-plane
+  event assembly (:func:`build_flight_log`), and the
+  :func:`summarize_timeseries` rows that feed
+  :func:`repro.traffic.metrics.format_table`;
+* :mod:`.export` / :mod:`.schema` — Chrome trace-event / Perfetto JSON
+  exporter and the schema gate ``tools/check_trace.py`` runs in CI.
+
+Typical use::
+
+    sim = FleetSim(..., probes=ProbeConfig())
+    res = sim.run()
+    log = build_flight_log(sim, res, scenario="smoke")
+    write_trace("out.json", log)          # open in ui.perfetto.dev
+"""
+from .export import chrome_trace, write_trace
+from .probes import ProbeConfig, ProbeRecord, ring_bins
+from .recorder import (ControlEvent, FlightLog, RequestRecord,
+                       aimd_events, build_flight_log, eq43_breakdown,
+                       replan_events, summarize_timeseries)
+from .schema import SCHEMA_VERSION, count_events, validate_trace
+
+__all__ = [
+    "ProbeConfig", "ProbeRecord", "ring_bins",
+    "ControlEvent", "FlightLog", "RequestRecord",
+    "aimd_events", "build_flight_log", "eq43_breakdown", "replan_events",
+    "summarize_timeseries",
+    "chrome_trace", "write_trace",
+    "SCHEMA_VERSION", "count_events", "validate_trace",
+]

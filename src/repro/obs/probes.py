@@ -1,0 +1,224 @@
+"""On-device probe ring buffers for the fused fleet fixed point.
+
+The probes-on path of :func:`repro.traffic.queueing._fused_core` writes
+preallocated, donated ring buffers via ``jax.lax.dynamic_update_slice``
+from inside the backlog/admission scans — one write per time bin, into
+the slot ``(bin // stride) % capacity`` (bins the stride skips write a
+sentinel scratch slot, so the scan step stays branch-free and the
+probes-on trace adds no control flow).  Only the peeled **final**
+fixed-point iteration records — the converged schedule the reported
+latencies come from — so a launch pays the ring-write cost once, not
+once per iteration.
+
+The flag is static (the ``service_model=None`` pattern): ``probes=None``
+leaves the traced computation byte-identical to the probe-free kernel,
+and the probed launch compiles as its own cache entry with the buffers
+donated (donation is a TPU/GPU fast path; CPU declines it harmlessly).
+
+Host side, :meth:`ProbeRecord.from_launch` unwraps the rings — the
+slot -> bin mapping is recomputed deterministically (:func:`ring_bins`),
+no device bookkeeping — and expands the compacted (plan, satellite)
+queue rows back to the full fleet.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+#: Ring-buffer channels recorded per (sweep entry, queue row) per bin.
+ROW_CHANNELS = ("backlog", "util", "drops")
+#: Extra channels recorded under AIMD admission.
+ADMISSION_CHANNELS = ("qhat", "admit", "win")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeConfig:
+    """On-device telemetry probe parameters (static per launch).
+
+    Attributes:
+        capacity: Ring slots preallocated on device.  When the horizon
+            has more recorded bins than slots the ring wraps and only
+            the last ``capacity`` recorded bins survive.
+        stride: Record every ``stride``-th time bin; ``None`` derives
+            the smallest stride that makes one horizon fit the ring
+            (``ceil(n_bins / capacity)``) — whole-run coverage at
+            bounded device memory.
+    """
+
+    capacity: int = 256
+    stride: int | None = None
+
+    def __post_init__(self):
+        """Validate the probe parameters."""
+        if self.capacity < 1:
+            raise ValueError("probe capacity must be >= 1")
+        if self.stride is not None and self.stride < 1:
+            raise ValueError("probe stride must be >= 1 (or None)")
+
+    def resolve(self, n_bins: int) -> tuple[int, int]:
+        """The static ``(capacity, stride)`` pair for an ``n_bins``-bin
+        horizon (the hashable object the fused kernel keys its compile
+        cache on)."""
+        stride = self.stride if self.stride is not None \
+            else max(1, -(-int(n_bins) // self.capacity))
+        return int(self.capacity), int(stride)
+
+
+def make_buffers(capacity: int, n_sweep: int, n_rows: int,
+                 admit_shape: tuple[int, int] | None) -> dict:
+    """Zeroed host-side ring buffers for one probed launch.
+
+    One extra slot (index ``capacity``) is the sentinel scratch target
+    for non-recorded bins.  No ``bin`` channel exists on device: the
+    deterministic scan covers every bin in order, so the slot -> bin
+    mapping is a pure function of ``(n_bins, capacity, stride)`` —
+    :func:`ring_bins` recomputes it host-side for free.
+
+    Args:
+        capacity: Ring slots (the extra sentinel slot is added here).
+        n_sweep: Leading sweep axis F of the launch.
+        n_rows: Compacted (plan, satellite) queue-row count.
+        admit_shape: ``(n_plans, n_gateways)`` to also allocate the AIMD
+            channels; ``None`` for uncontrolled runs.
+
+    Returns:
+        Dict of numpy arrays, the donated pytree of the probed launch.
+    """
+    c1 = int(capacity) + 1
+    # The row channels share one stacked buffer (axis 1 ordered as
+    # ROW_CHANNELS) so the scan step pays one ring write for all three;
+    # same for the two (F, P) AIMD channels (axis 1 = qhat, win).
+    bufs = {
+        "rows": np.zeros((c1, len(ROW_CHANNELS), n_sweep, n_rows),
+                         dtype=np.float32),
+    }
+    if admit_shape is not None:
+        n_plans, n_gw = admit_shape
+        bufs["aimd"] = np.zeros((c1, 2, n_sweep, n_plans),
+                                dtype=np.float32)
+        bufs["admit"] = np.zeros((c1, n_sweep, n_plans, n_gw),
+                                 dtype=np.float32)
+    return bufs
+
+
+def ring_bins(n_bins: int, capacity: int,
+              stride: int) -> tuple[np.ndarray, np.ndarray]:
+    """(slots, bins) the ring holds after one full scan of ``n_bins``.
+
+    The scan visits every bin in order and records each ``stride``-th
+    one into slot ``(bin // stride) % capacity``, so slot ``s`` ends up
+    holding the *last* recorded index congruent to ``s`` — no device
+    bookkeeping needed.  Both arrays come back sorted by bin
+    (ascending); ``slots`` indexes the ring axis of the raw buffers.
+    """
+    n_rec = -(-int(n_bins) // int(stride))         # recorded indices
+    used = min(n_rec, int(capacity))
+    slots = np.arange(used)
+    k_last = slots + capacity * ((n_rec - 1 - slots) // capacity)
+    bins = k_last * stride
+    order = np.argsort(bins, kind="stable")
+    return slots[order], bins[order]
+
+
+@dataclasses.dataclass
+class ProbeRecord:
+    """One probed launch's telemetry, unwrapped to host arrays.
+
+    B recorded bins (ascending), F sweep entries, P plans, S satellites,
+    M engine tokens, L layers, G gateways.
+
+    Attributes:
+        dt_s: Seconds per time bin.
+        capacity: Ring capacity the launch ran with.
+        stride: Bin stride the launch recorded at.
+        bins: (B,) recorded bin indices, ascending.
+        backlog_s: (B, F, P, S) per-satellite queue backlog (seconds of
+            work) at each recorded bin's start.
+        util_s: (B, F, P, S) work deposited into the queue during the
+            recorded bin (seconds; divide by ``dt_s`` for utilization).
+        drops_s: (B, F, P, S) seconds of work beyond the buffer cap in
+            the recorded bin (overflow pressure).
+        qhat_s: (B, F, P) AIMD critical-path backlog estimate (gateway
+            chain + per-layer worst expert); None without admission.
+        admit: (B, F, P, G) per-gateway admit probability after the
+            bin's control action; None without admission.
+        win_s: (B, F, P) the controller's running window-max qhat;
+            None without admission.
+        gw_wait_s: (F, P, M, L) final-iteration gateway queue wait per
+            token and layer (the queueing half of the Eq. 43 layer
+            breakdown the flight recorder reports).
+        ex_wait_s: (F, P, M, L) final-iteration worst expert-branch
+            queue wait per token and layer.
+    """
+
+    dt_s: float
+    capacity: int
+    stride: int
+    bins: np.ndarray
+    backlog_s: np.ndarray
+    util_s: np.ndarray
+    drops_s: np.ndarray
+    qhat_s: np.ndarray | None = None
+    admit: np.ndarray | None = None
+    win_s: np.ndarray | None = None
+    gw_wait_s: np.ndarray | None = None
+    ex_wait_s: np.ndarray | None = None
+
+    @property
+    def n_recorded(self) -> int:
+        """Number of recorded bins that survived the ring (B)."""
+        return int(self.bins.size)
+
+    @property
+    def t_s(self) -> np.ndarray:
+        """(B,) wall-clock seconds of each recorded bin's start."""
+        return self.bins.astype(np.float64) * self.dt_s
+
+    @property
+    def admission_on(self) -> bool:
+        """True iff the AIMD channels were recorded."""
+        return self.qhat_s is not None
+
+    @classmethod
+    def from_launch(cls, raw: dict, gw_wait: np.ndarray | None,
+                    ex_wait: np.ndarray | None, dt_s: float,
+                    capacity: int, stride: int, n_bins: int,
+                    expand_rows) -> "ProbeRecord":
+        """Unwrap one launch's ring buffers.
+
+        Args:
+            raw: The ``probes`` output pytree (host arrays, sentinel
+                slot still attached).
+            gw_wait: (F, P, M, L) final gateway waits (or None).
+            ex_wait: (F, P, M, L) final expert waits (or None).
+            dt_s: Seconds per bin.
+            capacity: Ring capacity of the launch.
+            stride: Recording stride of the launch.
+            n_bins: Bin count T of the launch's horizon (fixes the
+                slot -> bin mapping, see :func:`ring_bins`).
+            expand_rows: ``FleetSim._expand_rows`` — scatters the
+                compact-row last axis back to (..., P, S).
+        """
+        slots, bins = ring_bins(n_bins, capacity, stride)
+
+        def unwrap(arr, expand):
+            arr = np.asarray(arr)[slots]
+            return expand_rows(arr) if expand else arr
+
+        rows = {name: unwrap(raw["rows"][:, i], True)
+                for i, name in enumerate(ROW_CHANNELS)}
+        extra = {}
+        if "aimd" in raw:
+            extra = dict(qhat_s=unwrap(raw["aimd"][:, 0], False),
+                         win_s=unwrap(raw["aimd"][:, 1], False),
+                         admit=unwrap(raw["admit"], False))
+        return cls(
+            dt_s=float(dt_s), capacity=int(capacity), stride=int(stride),
+            bins=bins,
+            backlog_s=rows["backlog"],
+            util_s=rows["util"],
+            drops_s=rows["drops"],
+            gw_wait_s=None if gw_wait is None else np.asarray(gw_wait),
+            ex_wait_s=None if ex_wait is None else np.asarray(ex_wait),
+            **extra)

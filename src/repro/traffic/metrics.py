@@ -122,12 +122,18 @@ class PlanTraffic:
     @property
     def goodput_tok_s(self) -> float:
         """Decode tokens/s delivered by served requests over the span —
-        the goodput-under-control figure the admission frontier plots."""
+        the goodput-under-control figure the admission frontier plots
+        (0.0 when the plan served nothing or the span is degenerate)."""
+        if self.span_s <= 0.0:
+            return 0.0
         return float(self.decode_len[self.served].sum() / self.span_s)
 
     @property
     def offered_rps(self) -> float:
-        """Offered request rate (active requests over the arrival span)."""
+        """Offered request rate (active requests over the arrival span;
+        0.0 on a degenerate span)."""
+        if self.span_s <= 0.0:
+            return 0.0
         return self.n_active / self.span_s
 
     def quantile(self, which: str, q: float) -> float:
@@ -138,10 +144,13 @@ class PlanTraffic:
             q: Quantile in [0, 1].
 
         Returns:
-            The quantile in seconds (NaN when nothing was served).
+            The quantile in seconds (NaN when nothing was served, or
+            when every served latency is non-finite — e.g. the TPOT of
+            zero-decode requests).
         """
         arr = {"ttft": self.ttft_s, "tpot": self.tpot_s,
                "e2e": self.e2e_s}[which][self.served]
+        arr = arr[np.isfinite(arr)]
         return float(np.quantile(arr, q)) if len(arr) else float("nan")
 
     def meets(self, slo: SLO) -> bool:
@@ -168,7 +177,8 @@ class PlanTraffic:
             "tpot_p50_s": round(self.quantile("tpot", 0.5), 3),
             "tpot_p99_s": round(self.quantile("tpot", 0.99), 3),
             "e2e_p99_s": round(self.quantile("e2e", 0.99), 3),
-            "max_util": round(float(self.station_util.max()), 3),
+            "max_util": round(float(self.station_util.max())
+                              if self.station_util.size else 0.0, 3),
             "migration_mb": round(self.migration_bytes / 1e6, 3),
         }
         if slo is not None:

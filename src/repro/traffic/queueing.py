@@ -80,6 +80,7 @@ Two execution paths share that precompute:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -88,6 +89,7 @@ from jax.experimental import enable_x64 as _x64
 
 from repro.core import (ScheduleBatch, evaluate_schedules,
                         schedule_ingress_offsets)
+from repro.obs.probes import ProbeConfig, ProbeRecord, make_buffers
 from repro.kernels import ops as _kernel_ops
 from repro.core.activation import ActivationModel
 from repro.core.calibration import resolve_service_model
@@ -281,7 +283,8 @@ _CHUNK_BLOCK = 8192
 
 
 def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
-                n_iter, n_bins, n_rows, adm_on, use_pallas, want_wait):
+                pbuf, n_iter, n_bins, n_rows, adm_on, use_pallas,
+                want_wait, probes):
     """Single-launch fleet fixed point (the device half of ``FleetSim.run``).
 
     Rolls the legacy schedule -> bin -> scan -> gather iteration into one
@@ -344,12 +347,27 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
             accumulation) instead of the jnp scatter-add reference.
         want_wait: Static — carry and return the final backlog trace
             (the re-placement controller's observation).
+        pbuf: Probe ring buffers (:func:`repro.obs.probes.make_buffers`
+            pytree; donated by the probed jit wrapper) — an empty dict
+            when ``probes`` is None.
+        probes: Static — ``None`` (the probe-free kernel, byte-identical
+            to the pre-observability trace) or the resolved
+            ``(capacity, stride)`` pair of a
+            :class:`~repro.obs.probes.ProbeConfig`.  When set, the
+            backlog/admission scans ring-write per-bin fleet state into
+            ``pbuf`` via ``dynamic_update_slice`` (each fixed-point
+            iteration rewrites the same slots, so the final iteration
+            wins) and the output dict gains ``probes`` (the written
+            buffers) plus ``probe_gw_wait``/``probe_ex_wait``
+            (F, P, M, L) — the final per-token per-layer queue waits the
+            flight recorder splices into the Eq. 43 breakdown.
 
     Returns:
         Dict of outputs with a leading F axis: ``ttft``/``e2e``
         (F, P, R), ``tok_total`` (F, P, M), ``tok_over`` (F, P, M) bool,
-        ``shed``/``retries`` (F, P, R), ``work_sum`` (F, rows) and — iff
-        ``want_wait`` — ``wait`` (T, F, rows) float32.
+        ``shed``/``retries`` (F, P, R), ``work_sum`` (F, rows), iff
+        ``want_wait`` — ``wait`` (T, F, rows) float32 — and iff
+        ``probes`` the probe outputs described above.
     """
     global FUSED_TRACE_COUNT
     FUSED_TRACE_COUNT += 1
@@ -368,6 +386,29 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
         b = jnp.clip((jnp.where(finite, times, 0.0) / dt)
                      .astype(jnp.int64), 0, T - 1)
         return jnp.where(finite, b, 0), finite
+
+    if probes is not None:
+        p_cap, p_stride = probes
+
+    def probe_write(bufs, t, wait, w_t, drop, qhat=None, admit=None,
+                    win=None):
+        # Ring write via dynamic_update_slice: bin t lands in slot
+        # (t // stride) % capacity; bins the stride skips write the
+        # sentinel scratch slot (index capacity), so the scan step is
+        # branch-free and XLA keeps the buffers aliased in the carry.
+        rec = (t % p_stride) == 0
+        slot = jnp.where(rec, (t // p_stride) % p_cap, p_cap)
+        out = dict(bufs)
+        out["rows"] = jax.lax.dynamic_update_slice(
+            bufs["rows"], jnp.stack([wait, w_t, drop])[None],
+            (slot, 0, 0, 0))
+        if qhat is not None:
+            out["aimd"] = jax.lax.dynamic_update_slice(
+                bufs["aimd"], jnp.stack([qhat, win])[None],
+                (slot, 0, 0, 0))
+            out["admit"] = jax.lax.dynamic_update_slice(
+                bufs["admit"], admit[None], (slot, 0, 0, 0))
+        return out
 
     def schedule(gw_wait, ex_max, start_pref):
         # jnp port of FleetSim._schedule + ._chain (identical math),
@@ -420,30 +461,51 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
             work = work + q["mig_dense"][None]
         return work
 
-    def fleet_scan(work32):
+    def fleet_scan(work32, bufs=None):
         # The _fleet_queue_scan backlog recursion, time-major and
-        # wait-only (f32, exactly the legacy downcast).
-        def step(b, w_t):
-            wait = b
-            b = jnp.maximum(jnp.minimum(b + w_t, cap32) - dt32, 0.0)
-            return b, wait
-        _, wait = jax.lax.scan(step, jnp.zeros((F, SR), f32), work32)
-        return wait                                       # (T, F, SR)
+        # wait-only (f32, exactly the legacy downcast).  With ring
+        # buffers passed (the probed final iteration only), the scan
+        # carry additionally threads them and every stride-th bin
+        # records (backlog, offered work, dropped) — the bufs-free
+        # branch below is byte-identical to the legacy scan.
+        if bufs is None:
+            def step(b, w_t):
+                wait = b
+                b = jnp.maximum(jnp.minimum(b + w_t, cap32) - dt32, 0.0)
+                return b, wait
+            _, wait = jax.lax.scan(step, jnp.zeros((F, SR), f32), work32)
+            return wait                                   # (T, F, SR)
 
-    def adm_scan(work32):
+        def step(carry, xs):
+            b, pb = carry
+            w_t, t = xs
+            wait = b
+            offered = b + w_t
+            drop = jnp.maximum(offered - cap32, 0.0)
+            pb = probe_write(pb, t, wait, w_t, drop)
+            b = jnp.maximum(jnp.minimum(offered, cap32) - dt32, 0.0)
+            return (b, pb), wait
+        (_, bufs), wait = jax.lax.scan(
+            step, (jnp.zeros((F, SR), f32), bufs),
+            (work32, jnp.arange(T)))
+        return wait, bufs
+
+    def adm_scan(work32, bufs=None):
         # The admission_queue_scan recursion (bit-identical backlog and
         # AIMD cell), time-major over compacted rows, emitting wait +
-        # the admit trace.
+        # the admit trace.  With ring buffers passed (the probed final
+        # iteration only), the carry also threads them, recording the
+        # fleet channels plus the AIMD cell state (backlog estimate
+        # qhat, per-gateway admit, window peak); the bufs-free branch
+        # is byte-identical to the legacy scan.
         tt32 = ttft_target.astype(f32)[:, None, None]     # (F, 1, 1)
         tp32 = tpot_target.astype(f32)[:, None]           # (F, 1)
         n_layers = q["gw_rows_bin"].shape[2]
 
-        def step(carry, xs):
-            backlog, admit, win = carry
-            w_t, is_ctrl, gw_t, exp_t = xs
+        def cell(backlog, admit, win, w_t, is_ctrl, gw_t, exp_t):
             wait = backlog
-            backlog = jnp.maximum(
-                jnp.minimum(backlog + w_t, cap32) - dt32, 0.0)
+            offered = backlog + w_t
+            backlog = jnp.maximum(jnp.minimum(offered, cap32) - dt32, 0.0)
             gw = backlog[:, gw_t].sum(axis=2)                    # (F, P)
             exp = backlog[:, exp_t] \
                 .reshape(F, P, n_layers, -1).max(axis=3).sum(axis=2)
@@ -456,15 +518,37 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
                 jnp.minimum(admit + q["increase"], 1.0))
             admit_next = jnp.where(is_ctrl, stepped, admit)
             win_next = jnp.where(is_ctrl, 0.0, win)
-            return (backlog, admit_next, win_next), (wait, admit)
+            return backlog, admit_next, win_next, wait, offered, gw + exp
 
         n_gw = q["ttft0"].shape[1]
         carry0 = (jnp.zeros((F, SR), f32), jnp.ones((F, P, n_gw), f32),
                   jnp.zeros((F, P), f32))
-        _, (wait, admit) = jax.lax.scan(
-            step, carry0,
-            (work32, q["ctrl"], q["gw_rows_bin"], q["exp_rows_bin"]))
-        return wait, admit                 # (T, F, SR), (T, F, P, G)
+        if bufs is None:
+            def step(carry, xs):
+                backlog, admit, win = carry
+                w_t, is_ctrl, gw_t, exp_t = xs
+                backlog, admit_next, win_next, wait, _, _ = cell(
+                    backlog, admit, win, w_t, is_ctrl, gw_t, exp_t)
+                return (backlog, admit_next, win_next), (wait, admit)
+            _, (wait, admit) = jax.lax.scan(
+                step, carry0,
+                (work32, q["ctrl"], q["gw_rows_bin"], q["exp_rows_bin"]))
+            return wait, admit             # (T, F, SR), (T, F, P, G)
+
+        def step(carry, xs):
+            backlog, admit, win, pb = carry
+            w_t, is_ctrl, gw_t, exp_t, t = xs
+            backlog, admit_next, win_next, wait, offered, qhat = cell(
+                backlog, admit, win, w_t, is_ctrl, gw_t, exp_t)
+            drop = jnp.maximum(offered - cap32, 0.0)
+            pb = probe_write(pb, t, wait, w_t, drop, qhat=qhat,
+                             admit=admit_next, win=win_next)
+            return (backlog, admit_next, win_next, pb), (wait, admit)
+        (_, _, _, bufs), (wait, admit) = jax.lax.scan(
+            step, carry0 + (bufs,),
+            (work32, q["ctrl"], q["gw_rows_bin"], q["exp_rows_bin"],
+             jnp.arange(T)))
+        return wait, admit, bufs
 
     def gather(wait_t, work32, gw_b, gw_fin, ex_b, ex_fin):
         # jnp port of FleetSim._gather: wait read from the time-major
@@ -483,13 +567,21 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
         ex_over = ex_f5 & ((w_e + work32[f_idx5, ex_rows, ex_b5]) > cap32)
         return gw_wait, ex_wait.max(axis=4), gw_over, ex_over.any(axis=4)
 
-    def finish_iter(work32, work_sum, gw_b, gw_fin, ex_b, ex_fin, c):
+    def finish_iter(work32, work_sum, gw_b, gw_fin, ex_b, ex_fin, c,
+                    record=False):
         # Scan + admission resolve + gather for one iteration whose
         # offered work (f32, row-major (F, SR, T)) is already binned;
-        # only the scan input is transposed to time-major.
+        # only the scan input is transposed to time-major.  ``record``
+        # (static) threads the probe rings through this iteration's
+        # scan — set on the peeled *final* iteration only, so the probe
+        # cost is paid once per launch, not once per iteration.
         work32_t = jnp.moveaxis(work32, 2, 0)             # (T, F, SR)
+        pb = c.get("probes")
         if adm_on:
-            wait_t, admit = adm_scan(work32_t)
+            if not record:
+                wait_t, admit = adm_scan(work32_t)
+            else:
+                wait_t, admit, pb = adm_scan(work32_t, pb)
             # Monotone outer iteration (see run_legacy): the admit trace
             # accumulates as a running minimum so the shed set only grows.
             admit_floor = jnp.minimum(c["admit_floor"], admit)
@@ -504,7 +596,10 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
                                  (F,) + q["att_extra"].shape),
                 retries[:, :, None, :], axis=2)[:, :, 0, :]
         else:
-            wait_t = fleet_scan(work32_t)
+            if not record:
+                wait_t = fleet_scan(work32_t)
+            else:
+                wait_t, pb = fleet_scan(work32_t, pb)
             shed, retries = c["shed"], c["retries"]
             admit_floor = c["admit_floor"]
             ingress_extra = c["ingress_extra"]
@@ -516,9 +611,11 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
                    work_sum=work_sum)
         if want_wait:
             nxt["wait"] = wait_t
+        if record:
+            nxt["probes"] = pb
         return nxt
 
-    def body(_, c):
+    def body(_, c, record=False):
         start_pref = q["arrival_s"][None, None, :] + c["ingress_extra"]
         layer_arr, exp_arr, _, _ = schedule(c["gw_wait"], c["ex_max"],
                                             start_pref)
@@ -526,7 +623,7 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
         gw_b, gw_fin = to_bins(layer_arr)
         ex_b, ex_fin = to_bins(exp_arr)
         return finish_iter(work.astype(f32), work.sum(axis=2),
-                           gw_b, gw_fin, ex_b, ex_fin, c)
+                           gw_b, gw_fin, ex_b, ex_fin, c, record=record)
 
     n_gw = q["ttft0"].shape[1] if adm_on else 1
     carry = dict(
@@ -544,11 +641,27 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
         carry["wait"] = jnp.zeros((T, F, SR), f32)
     # Peeled iteration 1: the zero-wait schedule is static, so its
     # offered work arrives pre-binned (host np.bincount) and its gather
-    # bins are construction-time constants.
-    carry = finish_iter(work0, work0_sum,
+    # bins are construction-time constants.  With probes on, the *last*
+    # iteration is peeled too (its probe-recording scan is traced
+    # separately), so ring writes happen exactly once per launch.
+    if probes is None:
+        carry = finish_iter(work0, work0_sum,
+                            q["gw_b0"][None], q["gw_fin0"][None],
+                            q["ex_b0"][None], q["ex_fin0"][None], carry)
+        c = jax.lax.fori_loop(0, n_iter - 1, body, carry)
+    elif n_iter == 1:
+        carry["probes"] = pbuf
+        c = finish_iter(work0, work0_sum,
                         q["gw_b0"][None], q["gw_fin0"][None],
-                        q["ex_b0"][None], q["ex_fin0"][None], carry)
-    c = jax.lax.fori_loop(0, n_iter - 1, body, carry)
+                        q["ex_b0"][None], q["ex_fin0"][None], carry,
+                        record=True)
+    else:
+        carry = finish_iter(work0, work0_sum,
+                            q["gw_b0"][None], q["gw_fin0"][None],
+                            q["ex_b0"][None], q["ex_fin0"][None], carry)
+        c = jax.lax.fori_loop(0, n_iter - 2, body, carry)
+        c["probes"] = pbuf
+        c = body(0, c, record=True)
     # Fold the final gather into the schedule once more (see run_legacy).
     start_pref = q["arrival_s"][None, None, :] + c["ingress_extra"]
     _, _, tok_total, seg_incl = schedule(c["gw_wait"], c["ex_max"],
@@ -561,14 +674,29 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
                work_sum=c["work_sum"])
     if want_wait:
         out["wait"] = c["wait"]
+    if probes is not None:
+        out["probes"] = c["probes"]
+        out["probe_gw_wait"] = c["gw_wait"]
+        out["probe_ex_wait"] = c["ex_max"]
     return out
 
 
 #: The jitted fused fixed point.  Statics: (n_iter, n_bins, n_rows,
-#: adm_on, use_pallas, want_wait); everything else rides the pytrees, so
-#: any fleet run with equal shapes — every rate of a sweep, every
-#: re-placement decide/evaluate round — hits one compile cache entry.
-_fused_exec = jax.jit(_fused_core, static_argnums=(6, 7, 8, 9, 10, 11))
+#: adm_on, use_pallas, want_wait, probes); everything else rides the
+#: pytrees, so any fleet run with equal shapes — every rate of a sweep,
+#: every re-placement decide/evaluate round — hits one compile cache
+#: entry.  Probe-free launches pass ``probes=None`` and an empty pbuf
+#: pytree, so their traced computation is byte-identical to the legacy
+#: kernel.
+_fused_exec = jax.jit(_fused_core,
+                      static_argnums=(7, 8, 9, 10, 11, 12, 13))
+
+#: Probed variant: identical statics, but the probe ring buffers
+#: (positional arg 6) are donated so XLA updates them in place instead
+#: of copying the rings once per scan step.
+_fused_exec_probed = jax.jit(_fused_core,
+                             static_argnums=(7, 8, 9, 10, 11, 12, 13),
+                             donate_argnums=(6,))
 
 
 # --------------------------------------------------------------------- #
@@ -627,6 +755,7 @@ class FleetSim:
         batch: ScheduleBatch | None = None,
         min_bins: int = 0,
         service_model=None,
+        probes: ProbeConfig | None = None,
     ):
         """Build the simulator and run every rate-independent precompute.
 
@@ -664,6 +793,14 @@ class FleetSim:
                 service and batch-size-dependent decode gateway rates
                 (weight reads amortized over the estimated in-flight
                 decode batch, read off the decode-attention roofline).
+            probes: Optional :class:`~repro.obs.probes.ProbeConfig`.
+                When set, every launch writes on-device telemetry rings
+                (per-bin backlog / offered work / drops per satellite,
+                plus the AIMD cell state under admission) that land in
+                :attr:`last_probes` as a
+                :class:`~repro.obs.probes.ProbeRecord`.  ``None`` (the
+                default) keeps the fused kernel's traced computation
+                bit-identical to the probe-free simulator.
         """
         self.plans = list(plans)
         self.schedules = [as_schedule(p, topo.n_slots) for p in self.plans]
@@ -947,6 +1084,9 @@ class FleetSim:
         # Filled by ``run``: (plan, satellite, bin) backlog of the last
         # fleet scan (the re-placement controller's observation).
         self.last_wait: np.ndarray | None = None
+        # Telemetry: filled by every launch when ``probes`` is set.
+        self.probes = probes
+        self.last_probes: "ProbeRecord | None" = None
 
     # ----------------------------------------------------------------- #
 
@@ -1422,16 +1562,45 @@ class FleetSim:
         if self._mig_rm is not None:
             plane0 += self._mig_rm[None]
         work0_sum = plane0.sum(axis=2)                        # (F, SR)
-        with _x64():
-            out = _fused_exec(
+
+        # Telemetry rings: static (capacity, stride) pair + donated
+        # zeroed buffers.  probes=None launches pass an empty pytree and
+        # trace exactly the legacy kernel.
+        if self.probes is not None:
+            p_cap, p_stride = self.probes.resolve(self.n_bins)
+            static_probes = (p_cap, p_stride)
+            n_gw = self._adm_ttft0.shape[1] if self.admission_on else 0
+            pbuf = {k: jnp.asarray(v) for k, v in make_buffers(
+                p_cap, F, SR,
+                (P, n_gw) if self.admission_on else None).items()}
+            exec_fn = _fused_exec_probed
+        else:
+            static_probes = None
+            pbuf = {}
+            exec_fn = _fused_exec
+        with _x64(), warnings.catch_warnings():
+            # CPU jit declines buffer donation with a UserWarning; the
+            # request is still the right thing on TPU/GPU.
+            warnings.filterwarnings("ignore", message=".*[Dd]onat")
+            out = exec_fn(
                 self._device_tables(),
                 {k: jnp.asarray(v) for k, v in chunks.items()},
                 jnp.asarray(plane0.astype(np.float32)),
                 jnp.asarray(work0_sum),
-                jnp.asarray(tt), jnp.asarray(tp),
+                jnp.asarray(tt), jnp.asarray(tp), pbuf,
                 max(1, self.qcfg.iterations), self.n_bins, self.n_rows,
-                self.admission_on, self._use_pallas(), want_wait)
-            return {k: np.asarray(v) for k, v in out.items()}
+                self.admission_on, self._use_pallas(), want_wait,
+                static_probes)
+            out = {k: jax.tree_util.tree_map(np.asarray, v)
+                   for k, v in out.items()}
+        if self.probes is not None:
+            # Probe outputs have their own leading axes — ingest and pop
+            # them here so run/run_many's per-F slicing stays untouched.
+            self.last_probes = ProbeRecord.from_launch(
+                out.pop("probes"), out.pop("probe_gw_wait"),
+                out.pop("probe_ex_wait"), self.qcfg.dt_s, p_cap, p_stride,
+                self.n_bins, self._expand_rows)
+        return out
 
     def run(self, active: np.ndarray | None = None,
             zero_load: bool = False,

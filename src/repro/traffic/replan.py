@@ -131,6 +131,10 @@ class ReplanDecision:
     scores: np.ndarray         # (C,) backlog-inflated predicted cost
     migration_bytes: float     # bytes the switch moved (0.0 if held)
 
+    def t_s(self, slot_period_s: float) -> float:
+        """Wall-clock seconds of this decision's boundary."""
+        return float(self.boundary) * float(slot_period_s)
+
 
 @dataclasses.dataclass
 class ReplanReport:
@@ -156,6 +160,14 @@ class ReplanReport:
         differ when the simulated horizon outruns the decision walk.
         """
         return float(sum(d.migration_bytes for d in self.decisions))
+
+    def events(self, slot_period_s: float) -> list:
+        """The decision trajectory as flight-recorder control events
+        (one :class:`~repro.obs.recorder.ControlEvent` instant per
+        boundary; switches carry their migration byte flow) — the hook
+        ``serve.py --trace`` and the exporter consume."""
+        from repro.obs.recorder import replan_events
+        return replan_events(self, slot_period_s)
 
 
 def backlog_penalty_s(plan, sat_backlog: np.ndarray) -> float:

@@ -1,0 +1,169 @@
+"""Metrics-surface guards: zero-served and degenerate-span edge cases
+of :class:`PlanTraffic` (NaN-safe quantiles, zero goodput, empty
+station-util), stable ``row()`` columns with NaN rendering and SLO-miss
+marking, and ``format_table`` column/width behavior."""
+import math
+
+import numpy as np
+
+from repro.traffic.metrics import SLO, PlanTraffic, format_table
+
+
+def _plan(n=6, served_mask=None, span_s=10.0, station_util=None,
+          shed=None, retries=None):
+    """A hand-built PlanTraffic row with controllable degeneracies."""
+    served = np.zeros(n, dtype=bool) if served_mask is None \
+        else np.asarray(served_mask, dtype=bool)
+    lat = np.where(served, 1.0 + np.arange(n, dtype=np.float64), np.nan)
+    return PlanTraffic(
+        plan_name="toy",
+        active=np.ones(n, dtype=bool),
+        served=served,
+        ttft_s=lat,
+        tpot_s=lat / 10.0,
+        e2e_s=lat * 2.0,
+        decode_len=np.full(n, 5, dtype=np.int64),
+        station_util=np.array([0.25, 0.5]) if station_util is None
+        else np.asarray(station_util, dtype=np.float64),
+        span_s=span_s,
+        token_total_s=lat,
+        shed=shed,
+        retries=retries,
+    )
+
+
+# --------------------------------------------------------------------- #
+# Zero-served / degenerate edge cases
+# --------------------------------------------------------------------- #
+
+
+def test_zero_served_is_nan_safe():
+    """Nothing served: quantiles are NaN (not a crash), rates are 0,
+    the SLO is unmet, and row() still renders every column."""
+    p = _plan(served_mask=np.zeros(6, dtype=bool))
+    for which in ("ttft", "tpot", "e2e"):
+        assert math.isnan(p.quantile(which, 0.99))
+    assert p.goodput_tok_s == 0.0
+    assert p.drop_rate == 1.0
+    assert p.retry_rate == 0.0
+    assert not p.meets(SLO())
+    row = p.row(SLO())
+    assert row["slo_met"] is False
+    assert math.isnan(row["ttft_p99_s"])
+    assert row["goodput_tok_s"] == 0.0
+
+
+def test_degenerate_span_yields_zero_rates():
+    """span_s <= 0 (single-arrival traces): offered/goodput rates are
+    0.0 instead of inf/ZeroDivision."""
+    for span in (0.0, -1.0):
+        p = _plan(served_mask=np.ones(6, dtype=bool), span_s=span)
+        assert p.offered_rps == 0.0
+        assert p.goodput_tok_s == 0.0
+
+
+def test_empty_station_util_and_no_active():
+    """Empty station-util arrays and all-inactive traces stay finite."""
+    p = _plan(served_mask=np.zeros(6, dtype=bool), station_util=[])
+    assert p.row()["max_util"] == 0.0
+    p2 = _plan(served_mask=np.zeros(6, dtype=bool))
+    p2.active = np.zeros(6, dtype=bool)
+    assert p2.n_active == 0
+    assert p2.offered_rps == 0.0
+    assert p2.drop_rate == 0.0 and p2.shed_rate == 0.0
+
+
+def test_quantile_filters_nonfinite():
+    """Served-but-non-finite latencies (zero-decode TPOT) are excluded;
+    an all-non-finite served set returns NaN."""
+    p = _plan(n=4, served_mask=np.ones(4, dtype=bool))
+    p.tpot_s = np.array([0.1, np.nan, np.inf, 0.3])
+    assert p.quantile("tpot", 0.5) == 0.2
+    p.tpot_s = np.full(4, np.nan)
+    assert math.isnan(p.quantile("tpot", 0.5))
+
+
+# --------------------------------------------------------------------- #
+# row() columns, SLO marking
+# --------------------------------------------------------------------- #
+
+EXPECTED_COLS = [
+    "plan", "offered_rps", "goodput_tok_s", "drop_rate", "shed_rate",
+    "retry_rate", "ttft_p50_s", "ttft_p99_s", "tpot_p50_s", "tpot_p99_s",
+    "e2e_p99_s", "max_util", "migration_mb",
+]
+
+
+def test_row_column_stability():
+    """row() column names and order are a stable contract (the JSON
+    artifacts and bench baselines key on them); slo_met appends last."""
+    p = _plan(served_mask=np.ones(6, dtype=bool))
+    assert list(p.row().keys()) == EXPECTED_COLS
+    assert list(p.row(SLO()).keys()) == EXPECTED_COLS + ["slo_met"]
+
+
+def test_row_slo_marking():
+    """slo_met flips with the objective, not the traffic."""
+    p = _plan(served_mask=np.ones(6, dtype=bool))
+    assert p.row(SLO(ttft_s=100.0, tpot_s=10.0))["slo_met"] is True
+    assert p.row(SLO(ttft_s=0.5))["slo_met"] is False
+    # Involuntary drops beyond max_drop break the SLO even when the
+    # served latencies are fine.
+    half = np.arange(6) < 3
+    p2 = _plan(served_mask=half)
+    assert p2.row(SLO(ttft_s=100.0, tpot_s=10.0,
+                      max_drop=0.01))["slo_met"] is False
+    assert p2.row(SLO(ttft_s=100.0, tpot_s=10.0,
+                      max_drop=0.6))["slo_met"] is True
+
+
+def test_shed_excluded_from_drop_rate():
+    """Controller sheds are voluntary: they count in shed_rate and are
+    subtracted out of drop_rate."""
+    served = np.array([True, True, False, False])
+    shed = np.array([False, False, True, False])
+    p = _plan(n=4, served_mask=served, shed=shed,
+              retries=np.array([0, 2, 0, 0]))
+    assert p.shed_rate == 0.25
+    assert p.drop_rate == 0.25          # only the involuntary failure
+    assert p.retry_rate == 0.5          # one of two served retried
+
+
+# --------------------------------------------------------------------- #
+# format_table
+# --------------------------------------------------------------------- #
+
+
+def test_format_table_renders_nan_and_missing():
+    """NaN cells render literally, missing keys render empty, and every
+    line is padded to the widest cell of its column."""
+    rows = [
+        {"plan": "a", "ttft_p99_s": float("nan"), "extra": 1},
+        {"plan": "longer-name", "ttft_p99_s": 2.5},
+    ]
+    text = format_table(rows)
+    lines = text.splitlines()
+    assert len(lines) == 3
+    header = lines[0]
+    assert header.split() == ["plan", "ttft_p99_s", "extra"]
+    assert "nan" in lines[1]
+    # Missing 'extra' in row 2 renders as padding, not a crash.
+    assert lines[2].startswith("longer-name")
+    # Column alignment: the NaN cell starts exactly under its header.
+    start = header.index("ttft_p99_s")
+    assert lines[1][start:start + 3] == "nan"
+
+
+def test_format_table_prefix_and_empty():
+    assert format_table([]) == "(no rows)"
+    assert format_table([], prefix="# ") == "# (no rows)"
+    text = format_table([{"a": 1}], prefix="[x] ")
+    assert all(ln.startswith("[x] ") for ln in text.splitlines())
+
+
+def test_format_table_column_order_follows_first_row():
+    """Columns come from the first row's insertion order — the renderer
+    never sorts or invents columns."""
+    rows = [{"b": 1, "a": 2}, {"a": 3, "b": 4, "c": 5}]
+    header = format_table(rows).splitlines()[0]
+    assert header.split() == ["b", "a"]           # 'c' never appears

@@ -1,0 +1,330 @@
+"""Flight-recorder guards: probes-off bit-parity with the probe-free
+kernel (the static-flag invariant), one fused trace per config, probe
+ring contents vs the simulator's own backlog trace, AIMD/replan
+control-plane events, Chrome-trace export schema validation, and the
+Eq. 43 host-side breakdown vs the engine's jitted layer latencies."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        evaluate_schedules, rand_intra_cg_plan,
+                        sample_topology, spacemoe_plan)
+from repro.core.engine import eq43_layer_terms
+from repro.obs import (FlightLog, ProbeConfig, ProbeRecord, build_flight_log,
+                       chrome_trace, replan_events, ring_bins,
+                       summarize_timeseries, validate_trace)
+from repro.traffic import (AdmissionConfig, FleetSim, QueueConfig,
+                           ReplanConfig, build_ground_segment,
+                           build_replan_schedule, get_scenario,
+                           sample_requests)
+from repro.traffic import queueing
+from repro.traffic.metrics import format_table
+
+CFG = ConstellationConfig.scaled(8, 12, n_slots=10, survival_prob=1.0)
+WL = MoEWorkload.llama_moe_3p5b()
+COMP = ComputeConfig()
+
+
+def _world(seed=0, n_layers=4, n_experts=4, top_k=2):
+    con = Constellation(CFG)
+    topo = sample_topology(con, LinkConfig(), np.random.default_rng(seed))
+    activ = ActivationModel.zipf(n_layers, n_experts, top_k, seed=1)
+    ground = build_ground_segment(con, LinkConfig(), min_elevation_deg=10.0)
+    plans = [spacemoe_plan(con, topo, activ),
+             rand_intra_cg_plan(con.cfg, n_layers, n_experts,
+                                np.random.default_rng(7))]
+    return con, topo, activ, ground, plans
+
+
+def _smoke_requests():
+    return sample_requests(np.random.default_rng(8), rate_rps=2.0,
+                           horizon_s=40.0, n_stations=1, prompt_median=4,
+                           prompt_max=16, decode_mean=4, decode_max=8)
+
+
+# --------------------------------------------------------------------- #
+# Pure host-side pieces
+# --------------------------------------------------------------------- #
+
+
+def test_probe_config_resolve():
+    """stride=None derives whole-horizon coverage; explicit stride and
+    capacity pass through; invalid values raise."""
+    assert ProbeConfig(capacity=64).resolve(640) == (64, 10)
+    assert ProbeConfig(capacity=64).resolve(641) == (64, 11)
+    assert ProbeConfig(capacity=64).resolve(10) == (64, 1)
+    assert ProbeConfig(capacity=8, stride=3).resolve(10_000) == (8, 3)
+    with pytest.raises(ValueError):
+        ProbeConfig(capacity=0)
+    with pytest.raises(ValueError):
+        ProbeConfig(stride=0)
+
+
+def test_ring_bins_wrap():
+    """The deterministic slot->bin mapping holds with and without ring
+    wrap, matching a literal replay of the scan's writes."""
+    for n_bins, cap, stride in [(300, 8, 1), (1450, 64, 23), (5, 8, 1),
+                                (97, 16, 3), (64, 64, 1), (130, 64, 1)]:
+        slots, bins = ring_bins(n_bins, cap, stride)
+        # Literal replay: slot (k % cap) holds the last recorded index k.
+        ring = {}
+        for t in range(0, n_bins, stride):
+            ring[(t // stride) % cap] = t
+        expect = sorted(ring.items(), key=lambda kv: kv[1])
+        assert [s for s, _ in expect] == list(slots), (n_bins, cap, stride)
+        assert [b for _, b in expect] == list(bins), (n_bins, cap, stride)
+        assert (np.diff(bins) > 0).all()
+
+
+def test_ring_bins_coverage_is_tail():
+    """A wrapped ring keeps exactly the *last* ``capacity`` recorded
+    bins — the tail of the horizon, never a stale head."""
+    slots, bins = ring_bins(n_bins=300, capacity=8, stride=1)
+    assert list(bins) == list(range(292, 300))
+
+
+# --------------------------------------------------------------------- #
+# On-device probes: parity, trace stability, ring contents
+# --------------------------------------------------------------------- #
+
+
+def _build_pair():
+    """(probe-free sim, probed sim) on the identical smoke workload."""
+    con, topo, activ, ground, plans = _world()
+    req = _smoke_requests()
+    # tail_s=31 keeps this config's jit-cache entry unique to this module
+    # (test_fleet_perf compiles the same world at tail_s=30), so the
+    # FUSED_TRACE_COUNT deltas below are deterministic under a full run.
+    qcfg = QueueConfig(dt_s=0.05, tail_s=31.0, kv_slots=4)
+
+    def build(probes):
+        return FleetSim(plans, topo, activ, WL, COMP, req,
+                        np.random.default_rng(5), qcfg=qcfg, probes=probes)
+
+    return build(None), build(ProbeConfig(capacity=64))
+
+
+def test_probes_off_bit_parity_and_trace_count():
+    """probes=None stays bitwise identical to the pre-probe kernel
+    across an interleaved probed run, and each config traces the fused
+    kernel exactly once (off and probed are separate cache entries)."""
+    sim_off, sim_on = _build_pair()
+    n0 = queueing.FUSED_TRACE_COUNT
+    res_before = sim_off.run()
+    n_off = queueing.FUSED_TRACE_COUNT - n0
+    assert n_off == 1
+
+    res_on = sim_on.run()
+    assert queueing.FUSED_TRACE_COUNT - n0 == 2   # probed kernel: one more
+
+    res_after = sim_off.run()
+    assert queueing.FUSED_TRACE_COUNT - n0 == 2   # off kernel: cached
+    for pb, pa in zip(res_before.plans, res_after.plans):
+        for field in ("ttft_s", "e2e_s", "tpot_s"):
+            np.testing.assert_array_equal(getattr(pb, field),
+                                          getattr(pa, field))
+        np.testing.assert_array_equal(pb.served, pa.served)
+
+    # The probed run reports the same request-level outcome bitwise.
+    for pb, po in zip(res_before.plans, res_on.plans):
+        np.testing.assert_array_equal(pb.ttft_s, po.ttft_s)
+        np.testing.assert_array_equal(pb.served, po.served)
+
+    assert sim_off.last_probes is None
+    assert isinstance(sim_on.last_probes, ProbeRecord)
+
+
+def test_probe_backlog_matches_wait_trace():
+    """The ring's backlog channel equals the simulator's full (P, S, T)
+    backlog trace at every recorded bin — the probes observe the same
+    state the fixed point iterates on."""
+    _, sim_on = _build_pair()
+    sim_on.run()
+    pr = sim_on.last_probes
+    assert pr.n_recorded > 0 and not pr.admission_on
+    lw = sim_on.last_wait                         # (P, S, T)
+    for i, t in enumerate(pr.bins):
+        np.testing.assert_array_equal(pr.backlog_s[i, 0], lw[:, :, t])
+    # Utilization is per-bin deposited work: bounded by horizon work.
+    assert pr.util_s.min() >= 0.0
+    assert np.isfinite(pr.util_s).all()
+
+
+def test_admission_probes_and_aimd_events():
+    """Under the AIMD controller the ring records qhat/admit/win, the
+    controller actually throttles (admit < 1), and the recorder reads
+    >= 1 admit-change event off the ring."""
+    con, topo, activ, ground, plans = _world()
+    sc = dataclasses.replace(get_scenario("regional-hotspot"),
+                             horizon_s=40.0)
+    req = sc.requests(np.random.default_rng(9), ground.n_stations,
+                      rate_scale=5.0)
+    qcfg = QueueConfig(dt_s=0.05, tail_s=40.0,
+                       admission=AdmissionConfig(ttft_target_s=15.0))
+    sim = FleetSim(plans, topo, activ, WL, COMP, req,
+                   np.random.default_rng(5), qcfg=qcfg, ground=ground,
+                   probes=ProbeConfig(capacity=128))
+    res = sim.run()
+    pr = sim.last_probes
+    assert pr.admission_on
+    B = pr.n_recorded
+    F, P = 1, len(plans)
+    assert pr.qhat_s.shape == (B, F, P)
+    assert pr.win_s.shape == (B, F, P)
+    assert pr.admit.shape[:3] == (B, F, P)
+    assert 0.0 < pr.admit.min() < 1.0             # controller engaged
+    assert pr.admit.max() <= 1.0
+
+    log = build_flight_log(sim, res, scenario="hotspot")
+    aimd = [e for e in log.events if e.kind == "aimd"]
+    assert len(aimd) >= 1
+    for e in aimd:
+        assert 0.0 <= e.args["admit_mean_after"] <= 1.0
+        assert e.args["n_gateways_changed"] >= 1
+
+
+# --------------------------------------------------------------------- #
+# Flight log, export, summaries
+# --------------------------------------------------------------------- #
+
+
+def test_flight_log_and_export_schema():
+    """A probed smoke run assembles a complete flight log whose Chrome
+    trace validates against the schema and contains request spans."""
+    _, sim_on = _build_pair()
+    res = sim_on.run()
+    log = build_flight_log(sim_on, res, scenario="smoke")
+    assert isinstance(log, FlightLog)
+    assert len(log.requests) == sim_on.requests.n_requests
+    assert log.plan == len(res.plans) - 1          # default: last row
+    served = log.served()
+    assert served and all(r.served for r in served)
+    r = served[0]
+    assert r.prefill_span[1] == pytest.approx(r.arrival_s + r.ttft_s)
+    assert r.layer_zero_s.shape == (4,)            # _world n_layers
+    assert r.layer_gw_wait_s is not None
+    assert r.queue_wait_s >= 0.0
+
+    trace = chrome_trace(log)
+    assert validate_trace(trace) == []
+    phs = {e["ph"] for e in trace["traceEvents"]}
+    assert {"X", "C", "M"} <= phs
+    names = {e["name"] for e in trace["traceEvents"]}
+    assert "prefill" in names and "decode" in names
+
+
+def test_summarize_timeseries_feeds_format_table():
+    """The probe ring flattens to windowed rows format_table renders
+    with stable columns."""
+    _, sim_on = _build_pair()
+    sim_on.run()
+    rows = summarize_timeseries(sim_on.last_probes, n_windows=6)
+    assert 1 <= len(rows) <= 6
+    cols = list(rows[0].keys())
+    assert cols[:2] == ["t_s", "backlog_max_s"]
+    assert all(list(r.keys()) == cols for r in rows)
+    assert [r["t_s"] for r in rows] == sorted(r["t_s"] for r in rows)
+    text = format_table(rows, prefix="[telemetry] ")
+    lines = text.splitlines()
+    assert len(lines) == len(rows) + 1
+    assert all(ln.startswith("[telemetry] ") for ln in lines)
+    assert summarize_timeseries(None) == []
+
+
+def test_replan_switch_events():
+    """A forced-switch replan schedule exports >= 1 'replan switch'
+    instant carrying its migration byte flow (and holds export too)."""
+    con, topo, activ, ground, plans = _world()
+    n_sats = CFG.n_sats
+
+    def drown_incumbent(_k, _t, current):
+        b = np.zeros(n_sats)
+        cur = plans[max(current, 0)]
+        b[np.asarray(cur.gateways)] = 100.0
+        b[np.asarray(cur.expert_sats).ravel()] = 100.0
+        return b
+
+    report = build_replan_schedule(
+        plans, topo, activ, WL, COMP, np.random.default_rng(0),
+        ReplanConfig(mode="backlog", migration_weight_s_per_mb=0.0),
+        horizon_s=100.0, slot_period_s=30.0, backlog_at=drown_incumbent)
+    assert report.n_switches > 0
+    events = report.events(slot_period_s=30.0)
+    switches = [e for e in events if e.name == "replan switch"]
+    assert len(switches) == report.n_switches
+    assert all(e.kind == "replan" for e in events)
+    assert sum(e.args["migration_bytes"] for e in switches) \
+        == pytest.approx(report.total_migration_bytes)
+    assert events == replan_events(report, 30.0)
+    # Switch instants land at their boundary's wall-clock time.
+    for e in switches:
+        assert e.t_s == pytest.approx(e.args["boundary"] * 30.0)
+
+
+def test_replan_scenario_trace_has_aimd_and_switch():
+    """End-to-end acceptance: the *-replan scenario under overload
+    exports a trace carrying >= 1 AIMD control instant AND >= 1 replan
+    switch instant (the control-plane coverage the flight recorder
+    exists for), and the trace validates."""
+    from repro.obs.schema import count_events
+    from repro.traffic import run_scenario
+
+    con, topo, activ, ground, plans = _world()
+    base = get_scenario("regional-hotspot-replan")
+    sc = dataclasses.replace(
+        base, horizon_s=60.0, slot_period_s=20.0,
+        admission=AdmissionConfig(ttft_target_s=60.0),
+        replan=dataclasses.replace(base.replan, hysteresis=0.0,
+                                   migration_weight_s_per_mb=0.0))
+    res = run_scenario(sc, plans, topo, activ, WL, COMP,
+                       np.random.default_rng(4), ground=ground,
+                       constellation=con, rate_scale=12.0,
+                       probes=ProbeConfig())
+    log = build_flight_log(res.sim, res.result, replan=res.replan,
+                           scenario=sc.name)
+    trace = chrome_trace(log)
+    assert validate_trace(trace) == []
+    assert count_events(trace, "aimd", ph="i") >= 1
+    assert count_events(trace, "replan switch", ph="i") >= 1
+    assert count_events(trace, "prefill", ph="X") >= 1
+    # The fleet billed the switches the controller decided.
+    assert res.replan.n_switches >= 1
+    sw = [e for e in log.events if e.name == "replan switch"]
+    assert len(sw) == res.replan.n_switches
+
+
+# --------------------------------------------------------------------- #
+# Eq. 43 breakdown vs the engine
+# --------------------------------------------------------------------- #
+
+
+def test_eq43_layer_terms_matches_engine():
+    """The host-side Eq. 43 decomposition reproduces the engine's jitted
+    zero-load layer latencies exactly, for every plan row."""
+    con, topo, activ, ground, plans = _world()
+    sim = FleetSim(plans, topo, activ, WL, COMP, _smoke_requests(),
+                   np.random.default_rng(5),
+                   qcfg=QueueConfig(dt_s=0.05, tail_s=30.0))
+    res = evaluate_schedules(sim.schedules, topo, activ, WL, COMP,
+                             np.random.default_rng(0),
+                             n_tokens=sim.n_tokens, slots=sim.slots,
+                             draws=sim.draws, batch=sim.batch)
+    for q, r in enumerate(res):
+        lay = np.asarray(r.layer_latency_s)               # (T, L)
+        bd = eq43_layer_terms(sim.batch, q, sim.slots,
+                              np.asarray(sim.draws),
+                              t_gateway=sim.t_gateway,
+                              t_expert=sim.t_expert)
+        np.testing.assert_allclose(bd["layer_s"], lay, rtol=1e-6,
+                                   atol=1e-9, equal_nan=True)
+        # The max over branches is what the layer pays; terms stay
+        # component-consistent under the decomposition.
+        finite = np.isfinite(bd["layer_s"])
+        assert finite.any()
+        branch = bd["d_out"] + bd["t_exp"] + bd["d_in"]
+        np.testing.assert_allclose(
+            np.asarray(bd["layer_s"])[finite],
+            (sim.t_gateway + np.max(branch, axis=2))[finite], rtol=1e-6)

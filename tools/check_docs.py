@@ -1,4 +1,4 @@
-"""Docs health check: markdown link check + executable README quickstart.
+"""Docs health check: markdown link check + executable README snippets.
 
 Three stdlib-only checks, run by the CI ``docs`` job and by
 ``tests/test_docs.py``:
@@ -9,11 +9,14 @@ Three stdlib-only checks, run by the CI ``docs`` job and by
    offline-deterministic).
 2. **Snippet parity** — the first fenced ``python`` block in README.md
    must be byte-identical to the marked snippet region of
-   ``examples/readme_quickstart.py``, so the README code cannot drift
-   from the file that is actually executed.
-3. **Quickstart execution** (skippable with ``--no-exec``) — runs
+   ``examples/readme_quickstart.py``, and the first block after the
+   "Tracing a run" heading to ``examples/readme_tracing.py``, so the
+   README code cannot drift from the files that are actually executed.
+3. **Snippet execution** (skippable with ``--no-exec``) — runs
    ``examples/readme_quickstart.py`` with ``PYTHONPATH=src`` and
-   requires a SpaceMoE result row on stdout.
+   requires a SpaceMoE result row on stdout; runs
+   ``examples/readme_tracing.py`` in a scratch directory and
+   schema-validates the trace it writes via ``tools/check_trace.py``.
 
     python tools/check_docs.py [--no-exec]
 """
@@ -57,32 +60,44 @@ def check_links(errors: list[str]) -> int:
     return n
 
 
-def readme_python_block() -> str:
-    """The first fenced ```python block in README.md (stripped)."""
+def readme_python_block(after_heading: str | None = None) -> str:
+    """The first fenced ```python block in README.md (stripped) —
+    optionally the first one *after* a given heading."""
     text = (REPO / "README.md").read_text()
+    if after_heading is not None:
+        idx = text.find(after_heading)
+        if idx < 0:
+            raise SystemExit(f"README.md lost the {after_heading!r} heading")
+        text = text[idx:]
     m = re.search(r"```python\n(.*?)```", text, flags=re.S)
     if not m:
-        raise SystemExit("README.md has no ```python block")
+        raise SystemExit("README.md has no ```python block"
+                         + (f" after {after_heading!r}" if after_heading
+                            else ""))
     return m.group(1).strip()
 
 
-def snippet_region() -> str:
-    """The marked snippet region of examples/readme_quickstart.py."""
-    lines = (REPO / "examples" / "readme_quickstart.py").read_text() \
-        .splitlines()
+def snippet_region(example: str = "readme_quickstart.py") -> str:
+    """The marked snippet region of an examples/ module."""
+    lines = (REPO / "examples" / example).read_text().splitlines()
     try:
         lo = lines.index(SNIPPET_START) + 1
         hi = lines.index(SNIPPET_END)
     except ValueError:
-        raise SystemExit("readme_quickstart.py lost its snippet markers")
+        raise SystemExit(f"{example} lost its snippet markers")
     return "\n".join(lines[lo:hi]).strip()
 
 
 def check_snippet(errors: list[str]) -> None:
-    """README python block must equal the executable snippet region."""
+    """Each README python block must equal its executable snippet."""
     if readme_python_block() != snippet_region():
         errors.append(
             "README.md python block != examples/readme_quickstart.py "
+            "snippet region — update one to match the other")
+    if readme_python_block(after_heading="### Tracing a run") \
+            != snippet_region("readme_tracing.py"):
+        errors.append(
+            "README.md tracing block != examples/readme_tracing.py "
             "snippet region — update one to match the other")
 
 
@@ -101,6 +116,33 @@ def run_quickstart(errors: list[str]) -> None:
         errors.append("quickstart ran but printed no SpaceMoE result row")
 
 
+def run_tracing(errors: list[str]) -> None:
+    """Execute the tracing snippet in a scratch dir and schema-validate
+    the trace it writes (tools/check_trace.py)."""
+    import tempfile
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    with tempfile.TemporaryDirectory() as tmp:
+        proc = subprocess.run(
+            [sys.executable, str(REPO / "examples" / "readme_tracing.py")],
+            capture_output=True, text=True, env=env, timeout=600, cwd=tmp)
+        if proc.returncode != 0:
+            errors.append(f"tracing snippet failed (rc={proc.returncode}):\n"
+                          f"{proc.stderr[-2000:]}")
+            return
+        if "trace events" not in proc.stdout:
+            errors.append("tracing snippet ran but printed no event count")
+        trace = pathlib.Path(tmp) / "trace_smoke.json"
+        check = subprocess.run(
+            [sys.executable, str(REPO / "tools" / "check_trace.py"),
+             str(trace), "--require-requests"],
+            capture_output=True, text=True, env=env, timeout=120)
+        if check.returncode != 0:
+            errors.append("tracing snippet's trace failed check_trace:\n"
+                          f"{(check.stdout + check.stderr)[-2000:]}")
+
+
 def main(argv: list[str] | None = None) -> int:
     """Run all checks; print a report and return a process exit code."""
     ap = argparse.ArgumentParser()
@@ -113,6 +155,7 @@ def main(argv: list[str] | None = None) -> int:
     check_snippet(errors)
     if not args.no_exec:
         run_quickstart(errors)
+        run_tracing(errors)
 
     docs = ", ".join(str(d.relative_to(REPO)) for d in iter_doc_files())
     if errors:
@@ -120,8 +163,10 @@ def main(argv: list[str] | None = None) -> int:
         for e in errors:
             print(f"  - {e}", file=sys.stderr)
         return 1
-    print(f"docs check OK: {n_links} links across [{docs}], README snippet "
-          f"in sync" + ("" if args.no_exec else ", quickstart executed"))
+    print(f"docs check OK: {n_links} links across [{docs}], README "
+          f"snippets in sync"
+          + ("" if args.no_exec
+             else ", quickstart + tracing snippets executed"))
     return 0
 
 

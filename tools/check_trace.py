@@ -1,0 +1,90 @@
+"""Trace-schema gate: validate exported flight-recorder trace JSON.
+
+CI exports a trace from the serve smoke
+(``serve.py --traffic smoke --trace trace_smoke.json``) and then::
+
+    python tools/check_trace.py trace_smoke.json
+
+Every file must parse as JSON and pass
+:func:`repro.obs.schema.validate_trace` (the Trace Event Format's
+object flavor with this repo's required metadata) — a drifting exporter
+fails the job before an un-loadable artifact ships.
+
+Acceptance-style content requirements are opt-in flags::
+
+    python tools/check_trace.py trace_replan.json \
+        --require-aimd --require-replan-switch
+
+``--require-aimd`` demands >= 1 AIMD control instant,
+``--require-replan-switch`` >= 1 replan switch instant, and
+``--require-requests`` >= 1 exported request span — the control-plane
+coverage the observability PR pins on the replan scenarios.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+from repro.obs.schema import count_events, validate_trace  # noqa: E402
+
+
+def check_file(path: str, require_aimd: bool = False,
+               require_replan_switch: bool = False,
+               require_requests: bool = False) -> list[str]:
+    """Validate one trace file; returns a list of problems (empty = ok)."""
+    try:
+        with open(path) as f:
+            obj = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable trace: {e}"]
+    problems = validate_trace(obj)
+    if require_aimd and count_events(obj, "aimd", ph="i") < 1:
+        problems.append("no AIMD control instants "
+                        "(--require-aimd; run with an admission config)")
+    if require_replan_switch \
+            and count_events(obj, "replan switch", ph="i") < 1:
+        problems.append("no replan switch instants "
+                        "(--require-replan-switch; run a *-replan "
+                        "scenario that actually switches)")
+    if require_requests and count_events(obj, "prefill", ph="X") < 1:
+        problems.append("no request prefill spans (--require-requests)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("traces", nargs="+", help="exported trace JSON files")
+    ap.add_argument("--require-aimd", action="store_true",
+                    help="demand >= 1 AIMD control instant")
+    ap.add_argument("--require-replan-switch", action="store_true",
+                    help="demand >= 1 replan switch instant")
+    ap.add_argument("--require-requests", action="store_true",
+                    help="demand >= 1 exported request span")
+    args = ap.parse_args(argv)
+
+    failed = False
+    for path in args.traces:
+        problems = check_file(path, args.require_aimd,
+                              args.require_replan_switch,
+                              args.require_requests)
+        if problems:
+            failed = True
+            print(f"[check_trace] {path}: FAIL")
+            for p in problems[:20]:
+                print(f"  - {p}")
+            if len(problems) > 20:
+                print(f"  ... and {len(problems) - 20} more")
+        else:
+            with open(path) as f:
+                n = len(json.load(f).get("traceEvents", []))
+            print(f"[check_trace] {path}: ok ({n} events)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
