@@ -1,0 +1,160 @@
+"""Continuous-batching capacity frontier: batched vs FIFO goodput at matched p99 TTFT.
+
+One overloaded Poisson trace is served twice on the same world, plans
+and random draws — once by the FIFO fleet kernel (every decode step
+occupies its satellite for the full single-token service time) and once
+under :class:`repro.traffic.BatchingConfig` continuous batching (decode
+steps sharing a (satellite, bin) drain in batches of up to ``B_max`` at
+the service model's batch speedup).  A nested thinning-fraction sweep
+rides one ``run_many`` launch per regime, so the whole frontier costs
+two compiles; each run contributes one (offered rate, goodput, p99
+TTFT, drop rate) point per plan.
+
+The headline figure is **best goodput at matched p99 TTFT**: the
+highest served-decode throughput each regime reaches while keeping p99
+TTFT within a fixed multiple of the zero-load p99.  The fused batching
+law is pinned bitwise-FIFO at ``B_max=1`` (tests), so any frontier gap
+is the capacity continuous batching buys; the run exits non-zero if
+batching fails to beat FIFO (``BENCH_batching.json`` tracks the margin
+across PRs).
+
+    PYTHONPATH=src python -m benchmarks.run --fast --only batching
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.traffic import (BatchingConfig, FleetSim, QueueConfig,
+                           format_table, sample_requests)
+
+from .bench_traffic import _plans, _world
+from .common import Timer, emit
+
+#: Largest decode batch per (satellite, bin) in the batched regime.
+B_MAX = 8
+#: Nested thinning fractions of the envelope trace (ascending).
+FRACTIONS = (0.25, 0.5, 0.75, 1.0)
+#: p99-TTFT bound for the matched comparison, as a multiple of the
+#: zero-load p99 (the same relative-headroom style the traffic
+#: saturation sweep uses).
+TTFT_BOUND_SCALE = 2.5
+
+
+def _round(x: float, digits: int) -> float | None:
+    """Round for JSON; non-finite (nothing served) becomes null."""
+    return round(float(x), digits) if np.isfinite(x) else None
+
+
+def _frontier_row(regime: str, fraction: float, plan) -> dict:
+    """One frontier point: thinning fraction -> goodput/latency/drops."""
+    return {
+        "regime": regime,
+        "fraction": fraction,
+        "plan": plan.plan_name,
+        "offered_rps": _round(plan.offered_rps, 4),
+        "goodput_tok_s": _round(plan.goodput_tok_s, 3),
+        "ttft_p99_s": _round(plan.quantile("ttft", 0.99), 3),
+        "drop_rate": round(plan.drop_rate, 4),
+    }
+
+
+def run(fast: bool = True, json_path: str | None = None,
+        rate_rps: float | None = None) -> dict:
+    """Sweep thinning fractions under both regimes; emit the frontier.
+
+    Args:
+        fast: CI-sized world and horizon when True.
+        json_path: Optional path for the JSON frontier summary.
+        rate_rps: Envelope (100% fraction) arrival rate; ``None`` picks
+            a rate that saturates the FIFO kernel on the chosen world.
+
+    Returns:
+        JSON-able dict with the frontier rows, the per-regime best
+        goodput at the matched p99 bound, and the ``pass`` flag CI
+        gates on (batched strictly above FIFO).
+    """
+    con, topo, activ, wl, comp, ground = _world(fast)
+    plans = _plans(con, topo, activ)[:2]          # SpaceMoE vs RandIntra-CG
+    horizon = 60.0 if fast else 180.0
+    if rate_rps is None:
+        rate_rps = 3.0 if fast else 4.0
+    requests = sample_requests(
+        np.random.default_rng(29), rate_rps=rate_rps, horizon_s=horizon,
+        n_stations=ground.n_stations, prompt_median=4, prompt_max=16,
+        decode_mean=8, decode_max=16)
+    qcfg = QueueConfig(dt_s=0.05, tail_s=60.0)
+
+    def make(batching: BatchingConfig | None) -> FleetSim:
+        return FleetSim(plans, topo, activ, wl, comp, requests,
+                        np.random.default_rng(23), qcfg=qcfg,
+                        ground=ground, batching=batching)
+
+    sim_fifo = make(None)
+    sim_bat = make(BatchingConfig(b_max=B_MAX))
+
+    # Zero-load reference anchors the matched-latency bound.
+    base = sim_fifo.run(zero_load=True)
+    ttft0_p99 = max(p.quantile("ttft", 0.99) for p in base.plans)
+    bound = TTFT_BOUND_SCALE * ttft0_p99
+
+    # Nested masks (one uniform draw per request) keep the thinned sets
+    # monotone; each regime's whole fraction axis is one launch.
+    u = np.random.default_rng(31).random(requests.n_requests)
+    fractions = np.asarray(FRACTIONS)
+    masks = u[None, :] < fractions[:, None]
+
+    rows: list[dict] = []
+    timers = {}
+    for regime, sim in (("fifo", sim_fifo), ("batched", sim_bat)):
+        with Timer() as t:
+            for frac, res in zip(FRACTIONS, sim.run_many(masks)):
+                rows += [_frontier_row(regime, float(frac), p)
+                         for p in res.plans]
+        timers[regime] = t
+
+    out = {
+        "fast": fast,
+        "plans": [p.name for p in plans],
+        "b_max": B_MAX,
+        "rate_rps": rate_rps,
+        "fractions": list(FRACTIONS),
+        "zero_load_ttft_p99_s": round(ttft0_p99, 3),
+        "ttft_bound_scale": TTFT_BOUND_SCALE,
+        "frontier": rows,
+    }
+    # Best goodput each regime reaches while p99 TTFT stays within the
+    # matched bound — the headline capacity figure.
+    for regime in ("fifo", "batched"):
+        ok = [r for r in rows if r["regime"] == regime
+              and r["ttft_p99_s"] is not None and r["ttft_p99_s"] <= bound]
+        out[f"best_goodput_{regime}"] = (
+            max(r["goodput_tok_s"] or 0.0 for r in ok) if ok else 0.0)
+    out["capacity_gain"] = round(
+        out["best_goodput_batched"] / out["best_goodput_fifo"], 3) \
+        if out["best_goodput_fifo"] > 0 else None
+    out["pass"] = bool(out["best_goodput_batched"]
+                       > out["best_goodput_fifo"])
+
+    print(format_table(rows, prefix="# "))
+    print(f"# zero-load p99 TTFT {ttft0_p99:.2f}s; p99<= {bound:.1f}s "
+          f"goodput: fifo={out['best_goodput_fifo']:.2f} "
+          f"batched={out['best_goodput_batched']:.2f} tok/s "
+          f"(gain {out['capacity_gain']}x, B_max={B_MAX})")
+    emit("batching/fifo_sweep", timers["fifo"].seconds * 1e6,
+         f"best_goodput={out['best_goodput_fifo']}")
+    emit("batching/batched_sweep", timers["batched"].seconds * 1e6,
+         f"best_goodput={out['best_goodput_batched']}")
+
+    if json_path:
+        import json
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+    if not out["pass"]:
+        raise SystemExit(
+            "bench_batching: batched goodput failed to beat FIFO at the "
+            "matched p99 TTFT bound")
+    return out
+
+
+if __name__ == "__main__":
+    run()

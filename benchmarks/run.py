@@ -66,11 +66,11 @@ def main() -> None:
             print(f"# profile: no jax compile events ({e})",
                   file=sys.stderr)
 
-    from . import (bench_admission, bench_calibration, bench_engine,
-                   bench_fig6, bench_fig7, bench_fleet, bench_kernels,
-                   bench_linkstate, bench_multi_expert, bench_obs,
-                   bench_placement, bench_replan, bench_roofline,
-                   bench_table2, bench_traffic)
+    from . import (bench_admission, bench_batching, bench_calibration,
+                   bench_engine, bench_fig6, bench_fig7, bench_fleet,
+                   bench_kernels, bench_linkstate, bench_multi_expert,
+                   bench_obs, bench_placement, bench_replan,
+                   bench_roofline, bench_table2, bench_traffic)
 
     n_tok = 120 if args.fast else 400
     suite = {
@@ -82,6 +82,8 @@ def main() -> None:
                     lambda: bench_traffic.run(fast=args.fast)),
         "admission": (bench_admission,
                       lambda: bench_admission.run(fast=args.fast)),
+        "batching": (bench_batching,
+                     lambda: bench_batching.run(fast=args.fast)),
         "replan": (bench_replan,
                    lambda: bench_replan.run(fast=args.fast)),
         "fleet": (bench_fleet,

@@ -695,6 +695,36 @@ class ServiceModel:
         b = np.asarray(batch, dtype=np.float64)
         return b / self.gateway_step_s(ctx, batch)
 
+    def batch_speedup(self, b_max: int, ctx_len: int = 1024) -> np.ndarray:
+        """(b_max,) relative per-token decode speedup at batch 1..b_max.
+
+        ``speedup[b-1] = decode_rate(b) / decode_rate(1)``, clamped
+        monotone non-decreasing with ``speedup[0] = 1`` exactly — the
+        table the continuous-batching queue law interpolates (see
+        :mod:`repro.traffic.batching`).  Calibrated mode reads the
+        measured decode-attention roofline; analytic mode (whose
+        ``decode_rate`` is deliberately flat — the bit-parity constants
+        bill ``batch * latency_s``) projects the same roofline shape at
+        the satellite-unit byte/FLOP balance (``SAT_BYTES_PER_FLOP``):
+        weight reads amortize over the batch until the compute term
+        takes over.
+        """
+        b = np.arange(1, int(b_max) + 1, dtype=np.float64)
+        if self.mode == "calibrated":
+            rate = np.asarray(self.decode_rate(b, ctx_len),
+                              dtype=np.float64)
+        else:
+            w, f = self.workload, self.compute.flops_per_s
+            bw = f * SAT_BYTES_PER_FLOP
+            step = np.maximum(
+                b * w.gateway_flops(ctx_len) / f,
+                (w.gateway_weight_bytes + b * w.gateway_token_bytes(ctx_len))
+                / bw)
+            rate = b / step
+        s = np.maximum.accumulate(np.maximum(rate / rate[0], 1.0))
+        s[0] = 1.0
+        return s
+
     # -- experts ---------------------------------------------------------
     def expert_s(self) -> np.ndarray:
         """(n_experts,) per-expert service seconds at nominal speed.

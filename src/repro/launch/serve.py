@@ -138,6 +138,12 @@ def main(argv=None) -> dict:
                          "recorder as Chrome/Perfetto trace-event JSON "
                          "(open at ui.perfetto.dev); also prints the "
                          "windowed fleet-telemetry table")
+    ap.add_argument("--batching", type=int, default=0, metavar="B_MAX",
+                    help="with --traffic: continuous decode batching in "
+                         "the fleet queues — satellites drain decode "
+                         "steps in batches of up to B_MAX per time bin "
+                         "at the service model's batch rate (0 = off, "
+                         "the bit-identical FIFO kernel)")
     ap.add_argument("--fail-device", type=int, default=-1,
                     help="elastic demo: fail this EP device and re-plan")
     args = ap.parse_args(argv)
@@ -273,6 +279,9 @@ def main(argv=None) -> dict:
             if args.trace:
                 from repro.obs import ProbeConfig
                 sim_kwargs["probes"] = ProbeConfig()
+            if args.batching > 0:
+                from repro.traffic import BatchingConfig
+                sim_kwargs["batching"] = BatchingConfig(b_max=args.batching)
             res = run_scenario(sc, sweep, topo, activ, wl, comp,
                                np.random.default_rng(4), ground=ground,
                                constellation=con,

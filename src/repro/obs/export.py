@@ -83,14 +83,19 @@ def _request_events(log: FlightLog, max_requests: int) -> list[dict]:
                 "ts": _us(r.arrival_s), "dur": _us(r.ttft_s),
                 "args": args})
         if _finite(r.ttft_s) and _finite(r.e2e_s):
+            dec_args = {"decode_len": r.decode_len,
+                        "tpot_s": round(r.tpot_s, 6)
+                        if _finite(r.tpot_s) else -1.0}
+            if _finite(r.batch_b):
+                # Continuous-batching runs: the request's batch span —
+                # mean B_eff over its decode window.
+                dec_args["batch_b"] = round(r.batch_b, 3)
             events.append({
                 "name": "decode", "cat": "request", "ph": "X",
                 "pid": PID_REQUESTS, "tid": tid,
                 "ts": _us(r.arrival_s + r.ttft_s),
                 "dur": _us(max(r.e2e_s - r.ttft_s, 0.0)),
-                "args": {"decode_len": r.decode_len,
-                         "tpot_s": round(r.tpot_s, 6)
-                         if _finite(r.tpot_s) else -1.0}})
+                "args": dec_args})
     for r in unserved:
         events.append({
             "name": "shed" if r.shed else "dropped", "cat": "request",

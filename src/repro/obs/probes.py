@@ -28,6 +28,9 @@ import numpy as np
 
 #: Ring-buffer channels recorded per (sweep entry, queue row) per bin.
 ROW_CHANNELS = ("backlog", "util", "drops")
+#: Fourth row channel, recorded only under continuous batching: the
+#: per-(row, bin) effective decode batch occupancy B_eff.
+BATCH_CHANNEL = "batch_b"
 #: Extra channels recorded under AIMD admission.
 ADMISSION_CHANNELS = ("qhat", "admit", "win")
 
@@ -66,7 +69,8 @@ class ProbeConfig:
 
 
 def make_buffers(capacity: int, n_sweep: int, n_rows: int,
-                 admit_shape: tuple[int, int] | None) -> dict:
+                 admit_shape: tuple[int, int] | None,
+                 n_row_channels: int = len(ROW_CHANNELS)) -> dict:
     """Zeroed host-side ring buffers for one probed launch.
 
     One extra slot (index ``capacity``) is the sentinel scratch target
@@ -81,16 +85,20 @@ def make_buffers(capacity: int, n_sweep: int, n_rows: int,
         n_rows: Compacted (plan, satellite) queue-row count.
         admit_shape: ``(n_plans, n_gateways)`` to also allocate the AIMD
             channels; ``None`` for uncontrolled runs.
+        n_row_channels: Row channels to allocate — ``len(ROW_CHANNELS)``
+            normally, one more under continuous batching (the
+            ``BATCH_CHANNEL`` occupancy plane rides the same write).
 
     Returns:
         Dict of numpy arrays, the donated pytree of the probed launch.
     """
     c1 = int(capacity) + 1
     # The row channels share one stacked buffer (axis 1 ordered as
-    # ROW_CHANNELS) so the scan step pays one ring write for all three;
-    # same for the two (F, P) AIMD channels (axis 1 = qhat, win).
+    # ROW_CHANNELS [+ BATCH_CHANNEL]) so the scan step pays one ring
+    # write for all of them; same for the two (F, P) AIMD channels
+    # (axis 1 = qhat, win).
     bufs = {
-        "rows": np.zeros((c1, len(ROW_CHANNELS), n_sweep, n_rows),
+        "rows": np.zeros((c1, int(n_row_channels), n_sweep, n_rows),
                          dtype=np.float32),
     }
     if admit_shape is not None:
@@ -150,6 +158,9 @@ class ProbeRecord:
             breakdown the flight recorder reports).
         ex_wait_s: (F, P, M, L) final-iteration worst expert-branch
             queue wait per token and layer.
+        batch_b: (B, F, P, S) effective decode batch occupancy B_eff at
+            each recorded bin (>= 1 wherever decode work landed); None
+            unless the launch ran with continuous batching.
     """
 
     dt_s: float
@@ -164,6 +175,7 @@ class ProbeRecord:
     win_s: np.ndarray | None = None
     gw_wait_s: np.ndarray | None = None
     ex_wait_s: np.ndarray | None = None
+    batch_b: np.ndarray | None = None
 
     @property
     def n_recorded(self) -> int:
@@ -209,8 +221,13 @@ class ProbeRecord:
         rows = {name: unwrap(raw["rows"][:, i], True)
                 for i, name in enumerate(ROW_CHANNELS)}
         extra = {}
+        # A fourth row channel means the launch ran under continuous
+        # batching and recorded the B_eff occupancy plane.
+        if np.asarray(raw["rows"]).shape[1] > len(ROW_CHANNELS):
+            extra["batch_b"] = unwrap(
+                raw["rows"][:, len(ROW_CHANNELS)], True)
         if "aimd" in raw:
-            extra = dict(qhat_s=unwrap(raw["aimd"][:, 0], False),
+            extra.update(qhat_s=unwrap(raw["aimd"][:, 0], False),
                          win_s=unwrap(raw["aimd"][:, 1], False),
                          admit=unwrap(raw["admit"], False))
         return cls(

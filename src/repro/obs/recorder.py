@@ -56,6 +56,11 @@ class RequestRecord:
             fixed-point iteration (None without probes).
         layer_ex_wait_s: (L,) worst expert-branch queue wait per layer,
             final fixed-point iteration (None without probes).
+        batch_b: Mean effective decode batch occupancy (B_eff) over the
+            request's decode span at its plan's gateway satellites —
+            the per-request batch span of a continuous-batching run
+            (NaN without batching probes or when no recorded bin falls
+            inside the span).
     """
 
     rid: int
@@ -74,6 +79,7 @@ class RequestRecord:
     layer_zero_s: np.ndarray
     layer_gw_wait_s: np.ndarray | None = None
     layer_ex_wait_s: np.ndarray | None = None
+    batch_b: float = float("nan")
 
     @property
     def prefill_span(self) -> tuple[float, float]:
@@ -223,11 +229,25 @@ def build_flight_log(
         else np.zeros(req.n_requests, dtype=bool)
 
     records: list[RequestRecord] = []
+    batching_on = probes is not None and probes.batch_b is not None
+    probe_t = probes.t_s if probes is not None else None
     for r in range(req.n_requests):
         gw_wait = ex_wait = None
         if probes is not None and probes.gw_wait_s is not None:
             gw_wait = probes.gw_wait_s[sweep, p, r]
             ex_wait = probes.ex_wait_s[sweep, p, r]
+        batch_b = float("nan")
+        if batching_on and pt.served[r] and np.isfinite(pt.e2e_s[r]):
+            # Per-request batch span: mean B_eff over the recorded bins
+            # of the decode span, at the plan's gateway satellites for
+            # the request's topology slot.
+            lo = req.arrival_s[r] + pt.ttft_s[r]
+            hi = req.arrival_s[r] + pt.e2e_s[r]
+            m = (probe_t >= lo) & (probe_t <= hi)
+            if m.any():
+                sats = sim.gateways_slot[p, sim.slots[r]]      # (L,)
+                batch_b = float(
+                    probes.batch_b[m][:, sweep, p][:, sats].mean())
         records.append(RequestRecord(
             rid=r,
             station=int(req.station[r]),
@@ -245,6 +265,7 @@ def build_flight_log(
             layer_zero_s=np.asarray(sim.eff_layer[p, r]),
             layer_gw_wait_s=gw_wait,
             layer_ex_wait_s=ex_wait,
+            batch_b=batch_b,
         ))
 
     names = [q.plan_name for q in result.plans]

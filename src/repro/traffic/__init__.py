@@ -4,6 +4,7 @@ Layers a constellation-scale serving simulator on top of the batched
 plan-evaluation engine: arrival processes (:mod:`.requests`), ground
 gateway -> ranked ingress-satellite mapping (:mod:`.ground`), the
 discrete-time per-satellite fleet queue kernel (:mod:`.queueing`),
+continuous decode batching for it (:mod:`.batching`),
 latency-target adaptive admission control with gateway retry
 (:mod:`.admission`), backlog-driven continuous re-placement over
 time-indexed :class:`~repro.core.schedule.PlanSchedule` rows
@@ -20,6 +21,8 @@ plans of the re-placement pool.
 """
 from .admission import (AdmissionConfig, admission_queue_scan,
                         control_bin_flags, resolve_admission)
+from .batching import (BatchingConfig, batched_effective_work,
+                       effective_work_np, windowed_counts)
 from .ground import (DEFAULT_STATIONS, GroundSegment, GroundStation,
                      build_ground_segment, ground_delay_table)
 from .metrics import (SLO, PlanTraffic, SaturationResult, TrafficResult,
@@ -39,6 +42,8 @@ from .scenarios import (SCENARIOS, ScenarioOutcome, StormReport,
 __all__ = [
     "AdmissionConfig", "admission_queue_scan", "control_bin_flags",
     "resolve_admission",
+    "BatchingConfig", "batched_effective_work", "effective_work_np",
+    "windowed_counts",
     "DEFAULT_STATIONS", "GroundSegment", "GroundStation",
     "build_ground_segment", "ground_delay_table",
     "SLO", "PlanTraffic", "SaturationResult", "TrafficResult",

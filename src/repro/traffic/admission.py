@@ -128,7 +128,7 @@ class AdmissionConfig:
 @jax.jit
 def admission_queue_scan(work, cap, dt, ttft0, tpot0, ctrl, gw_idx, exp_idx,
                          admit0, ttft_target, tpot_target, increase,
-                         decrease, admit_min):
+                         decrease, admit_min, batching=None):
     """Fleet backlog scan with the AIMD controller in the carry.
 
     The backlog recursion is identical to
@@ -160,12 +160,24 @@ def admission_queue_scan(work, cap, dt, ttft0, tpot0, ctrl, gw_idx, exp_idx,
         increase: AIMD additive increase per clean interval.
         decrease: AIMD multiplicative decrease on breach.
         admit_min: Admission floor.
+        batching: Optional continuous-batching pytree —
+            ``work_dec``/``cnt_win`` (P, S, T) decode-work and windowed
+            occupancy planes plus ``table``/``bcap`` (the padded speedup
+            table and batch cap).  The deposit-time scaling law
+            (:func:`repro.traffic.batching.batched_effective_work`)
+            rewrites ``work`` before the scan; ``None`` (a distinct
+            trace) leaves the FIFO kernel untouched.
 
     Returns:
         (wait, dropped, admit): wait/dropped are (P, S, T) exactly as in
         the plain kernel; admit is (P, G, T), the admission probability
         in effect during each bin.
     """
+    if batching is not None:
+        from .batching import batched_effective_work
+        work, _ = batched_effective_work(
+            work, batching["work_dec"], batching["cnt_win"],
+            batching["table"], batching["bcap"])
     p, s, _ = work.shape
     n_layers = gw_idx.shape[2]
 

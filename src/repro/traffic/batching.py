@@ -1,0 +1,208 @@
+"""Continuous decode batching for the fleet queue kernel.
+
+The FIFO queue kernel of PR 2 serves every decode token one-at-a-time:
+a token's deposit occupies its satellite for the full single-token
+service time.  Real serving systems run *continuous batching* — decode
+steps of requests sharing an accelerator are grouped per step, the
+weight reads amortize over the group, and per-token service shrinks to
+``B / decode_rate(B)`` (the batch-size-dependent rates
+:meth:`repro.core.calibration.ServiceModel.decode_rate` exposes off the
+measured decode-attention roofline).  This module supplies the law the
+fused fleet scan applies:
+
+**Deposit-time scaling.**  Alongside the offered-work plane ``work``
+the kernel scatters a decode-work plane ``work_dec`` (the decode-side
+subset of the deposits) and an occupancy-count plane ``cnt`` (decode
+token visits per (satellite, bin) — deposits are already grouped per
+(satellite, step), the count plane is the group size).  Per
+(row, bin) the admissible batch is
+
+    ``B_eff = clip(window_sum(cnt), 1, B_cap)``,
+    ``B_cap = min(b_max, kv_slots_per_sat)``  (KV-slot occupancy bound),
+
+the speedup ``s(B_eff)`` is a piecewise-linear interpolation of a
+monotone per-batch speedup table with ``s(1) = 1``, and the scan runs
+on the *effective* work
+
+    ``work_eff = work + work_dec * (1 / s(B_eff) - 1)``.
+
+Scaling at deposit time (rather than state-dependent drain rates)
+keeps the backlog recursion itself untouched, which buys two pinned
+invariants for free:
+
+* **B_max = 1 is bitwise FIFO** — ``B_eff ≡ 1`` makes ``s ≡ 1.0``
+  exactly, so ``work_dec * (1/s - 1)`` is an exact multiply-by-zero and
+  ``work_eff == work`` bit-for-bit (fma-safe: ``fma(w_dec, 0, w) = w``);
+* **monotone in B_max** — a larger cap yields pointwise-larger ``s``,
+  hence pointwise-smaller ``work_eff``, and the scan step
+  ``f(b, w) = max(min(b + w, cap) - dt, 0)`` is monotone in both
+  arguments, so waits and drops are pointwise non-increasing in
+  ``B_max`` (the property tests exercise exactly this argument).
+
+``batching=None`` follows the ``service_model=``/``probes=`` static-flag
+pattern: the fused kernel's traced computation stays byte-identical to
+the batching-free kernel and shares its compile-cache entry.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchingConfig:
+    """Continuous decode-batching parameters (static per simulator).
+
+    Attributes:
+        b_max: Largest decode batch a satellite may form per time bin.
+            ``b_max=1`` is pinned bitwise-identical to the FIFO kernel.
+        kv_slots_per_sat: KV-cache slots one satellite can hold; bounds
+            the admissible batch (``B_cap = min(b_max, kv_slots)``).
+            0 = unbounded by KV (the batch is bounded by ``b_max`` only).
+        window_s: Occupancy window, seconds.  The batch a deposit joins
+            is estimated from the decode-visit count of the trailing
+            window (inclusive of the deposit's own bin); 0 uses exactly
+            one bin — deposits grouped per (satellite, step).
+        speedup: Optional explicit per-batch speedup table
+            ``(s(1), s(2), ..., s(n))`` overriding the service model's
+            (clamped monotone and >= 1, extended flat past its end).
+            ``None`` reads the table off
+            :meth:`~repro.core.calibration.ServiceModel.batch_speedup`.
+    """
+
+    b_max: int = 8
+    kv_slots_per_sat: int = 0
+    window_s: float = 0.0
+    speedup: tuple | None = None
+
+    def __post_init__(self):
+        """Validate the batching parameters."""
+        if self.b_max < 1:
+            raise ValueError("b_max must be >= 1")
+        if self.kv_slots_per_sat < 0:
+            raise ValueError("kv_slots_per_sat must be >= 0")
+        if self.window_s < 0.0:
+            raise ValueError("window_s must be >= 0")
+        if self.speedup is not None:
+            sp = np.asarray(self.speedup, dtype=np.float64)
+            if sp.ndim != 1 or sp.size < 1:
+                raise ValueError("speedup must be a non-empty 1-D table")
+            if not np.all(np.isfinite(sp)) or np.any(sp <= 0.0):
+                raise ValueError("speedup entries must be finite and > 0")
+
+    @property
+    def b_cap(self) -> int:
+        """The admissible batch bound: ``min(b_max, kv_slots_per_sat)``
+        (the KV-slot occupancy bound; unbounded KV keeps ``b_max``)."""
+        if self.kv_slots_per_sat > 0:
+            return int(min(self.b_max, self.kv_slots_per_sat))
+        return int(self.b_max)
+
+    def window_bins(self, dt_s: float) -> int:
+        """Occupancy window in whole time bins (>= 1)."""
+        return max(1, int(round(self.window_s / dt_s)))
+
+    def resolve_table(self, service_model=None,
+                      ctx_len: int = 1024) -> np.ndarray:
+        """The padded interpolation table the kernels index.
+
+        Returns a ``(b_cap + 2,)`` float64 array with ``table[b]`` the
+        speedup at batch b for ``b in 1..b_cap``, ``table[0] = 1`` and a
+        flat extension at ``table[b_cap + 1]`` (so linear interpolation
+        of ``B_eff in [1, b_cap]`` never reads out of range).  Entries
+        are clamped monotone non-decreasing with ``table[1] = 1``
+        exactly — the bitwise ``b_max=1`` contract.
+        """
+        cap = self.b_cap
+        if self.speedup is not None:
+            s = np.asarray(self.speedup, dtype=np.float64)
+        elif service_model is not None:
+            s = np.asarray(service_model.batch_speedup(cap, ctx_len),
+                           dtype=np.float64)
+        else:
+            s = np.ones(cap, dtype=np.float64)
+        if s.size < cap:
+            s = np.concatenate([s, np.full(cap - s.size, s[-1])])
+        s = np.maximum.accumulate(np.maximum(s[:cap], 1.0))
+        s[0] = 1.0
+        return np.concatenate([[1.0], s, [s[-1]]])
+
+
+def windowed_counts(cnt: np.ndarray, window_bins: int) -> np.ndarray:
+    """Causal inclusive window sum of ``cnt`` along the last (time) axis:
+    ``out[..., t] = sum(cnt[..., t - w + 1 : t + 1])`` for window w."""
+    w = int(window_bins)
+    if w <= 1:
+        return cnt
+    cs = np.cumsum(cnt, axis=-1)
+    out = cs.copy()
+    out[..., w:] -= cs[..., :-w]
+    return out
+
+
+def batch_speedup_at(cnt_win, table: np.ndarray, b_cap: float):
+    """(s, B_eff) at a windowed occupancy count (numpy arrays).
+
+    ``B_eff = clip(cnt_win, 1, b_cap)``; ``s`` linearly interpolates the
+    padded ``table`` (see :meth:`BatchingConfig.resolve_table`) at
+    ``B_eff``.  ``b_cap = 1`` yields ``s == 1.0`` exactly.
+    """
+    table = np.asarray(table, dtype=np.float64)
+    beff = np.clip(cnt_win, 1.0, float(b_cap))
+    idx = np.clip(np.floor(beff).astype(np.int64), 0, table.size - 2)
+    frac = beff - idx
+    s = table[idx] * (1.0 - frac) + table[idx + 1] * frac
+    return s, beff
+
+
+def effective_work_np(work: np.ndarray, work_dec: np.ndarray,
+                      cnt: np.ndarray, table: np.ndarray, b_cap: float,
+                      window_bins: int = 1):
+    """The deposit-time batching law, host (numpy) form.
+
+    Args:
+        work: (..., T) offered seconds of work per bin (decode +
+            prefill + background).
+        work_dec: (..., T) the decode-side subset of ``work``.
+        cnt: (..., T) decode token visits deposited per bin.
+        table: Padded speedup table (:meth:`BatchingConfig.resolve_table`).
+        b_cap: Admissible batch bound.
+        window_bins: Occupancy window in bins.
+
+    Returns:
+        (work_eff, b_eff), both shaped like ``work``:
+        ``work_eff = work + work_dec * (1 / s(B_eff) - 1)``.
+    """
+    s, beff = batch_speedup_at(windowed_counts(cnt, window_bins),
+                               table, b_cap)
+    return work + work_dec * (1.0 / s - 1.0), beff
+
+
+def batched_effective_work(work, work_dec, cnt_win, table, b_cap):
+    """The deposit-time batching law, traced (jax.numpy) form.
+
+    Identical math to :func:`effective_work_np` with the window sum
+    already applied (``cnt_win``), so the jitted caller carries no
+    static window argument.  Returns ``(work_eff, b_eff)``.
+    """
+    beff = jnp.clip(cnt_win, 1.0, b_cap)
+    idx = jnp.clip(jnp.floor(beff).astype(jnp.int32), 0,
+                   table.shape[0] - 2)
+    frac = beff - idx
+    s = table[idx] * (1.0 - frac) + table[idx + 1] * frac
+    return work + work_dec * (1.0 / s - 1.0), beff
+
+
+def windowed_counts_jnp(cnt, window_bins: int):
+    """:func:`windowed_counts` in traced form (time on the last axis;
+    ``window_bins`` must be static at trace time)."""
+    w = int(window_bins)
+    if w <= 1:
+        return cnt
+    cs = jnp.cumsum(cnt, axis=-1)
+    shifted = jnp.concatenate(
+        [jnp.zeros(cnt.shape[:-1] + (min(w, cnt.shape[-1]),), cnt.dtype),
+         cs[..., :-w]], axis=-1)
+    return cs - shifted

@@ -123,16 +123,19 @@ class PlanTraffic:
     def goodput_tok_s(self) -> float:
         """Decode tokens/s delivered by served requests over the span —
         the goodput-under-control figure the admission frontier plots
-        (0.0 when the plan served nothing or the span is degenerate)."""
-        if self.span_s <= 0.0:
+        (exactly 0.0 when the plan row is degenerate: nothing offered,
+        nothing served, or a non-positive span — every execution path
+        derives the figure from this one guarded property)."""
+        if self.span_s <= 0.0 or not self.n_active:
             return 0.0
         return float(self.decode_len[self.served].sum() / self.span_s)
 
     @property
     def offered_rps(self) -> float:
         """Offered request rate (active requests over the arrival span;
-        0.0 on a degenerate span)."""
-        if self.span_s <= 0.0:
+        exactly 0.0 when nothing was offered or the span is
+        degenerate)."""
+        if self.span_s <= 0.0 or not self.n_active:
             return 0.0
         return self.n_active / self.span_s
 
@@ -284,8 +287,11 @@ def saturation_sweep(
     met: dict[str, list[bool]] = {}
     for res in sim.run_many(masks):
         results.append(res)
-        rates.append(res.plans[0].offered_rps if res.plans[0].n_active
-                     else 0.0)
+        # No local re-derivation: the guarded ``offered_rps`` property
+        # is the single source for the rate figure, so a degenerate
+        # zero-offered row reads identically here and in a per-target
+        # ``run`` (pinned in tests/test_metrics.py).
+        rates.append(res.plans[0].offered_rps)
         for p in res.plans:
             met.setdefault(p.plan_name, []).append(p.meets(slo))
 

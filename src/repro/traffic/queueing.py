@@ -99,6 +99,9 @@ from repro.core.workload import MoEWorkload
 
 from .admission import (AdmissionConfig, admission_queue_scan,
                         control_bin_flags, resolve_admission)
+from .batching import (BatchingConfig, batch_speedup_at,
+                       batched_effective_work, effective_work_np,
+                       windowed_counts, windowed_counts_jnp)
 from .ground import GroundSegment
 from .metrics import PlanTraffic, TrafficResult
 from .requests import RequestBatch
@@ -182,6 +185,7 @@ def station_waiting_times(
     dt_s: float,
     buffer_s: float = np.inf,
     horizon_s: float | None = None,
+    batching: BatchingConfig | None = None,
 ) -> np.ndarray:
     """Per-arrival waiting times at one FIFO station via the fleet kernel.
 
@@ -202,6 +206,12 @@ def station_waiting_times(
         buffer_s: Backlog cap (overflow is dropped), default unbounded.
         horizon_s: Optional simulation horizon (defaults to the last
             arrival).
+        batching: Optional :class:`~repro.traffic.batching
+            .BatchingConfig` — applies the continuous-batching law
+            (deposit-time work scaling by the windowed-occupancy
+            speedup; see :mod:`repro.traffic.batching`) to this
+            station, arrivals counting one occupancy unit each.
+            ``None`` is the exact FIFO reference.
 
     Returns:
         (n,) waiting time each arrival experiences before service.
@@ -215,16 +225,27 @@ def station_waiting_times(
     n_bins = int(np.floor(horizon / dt_s)) + 2
     bins = np.minimum((t / dt_s).astype(np.int64), n_bins - 1)
 
-    work = np.bincount(bins, weights=s, minlength=n_bins)[None, None, :]
+    work = np.bincount(bins, weights=s, minlength=n_bins)
+    sp_bin = np.ones(n_bins)
+    if batching is not None:
+        cnt = np.bincount(bins, minlength=n_bins).astype(np.float64)
+        table = batching.resolve_table()
+        work, _ = effective_work_np(
+            work, work, cnt, table, batching.b_cap,
+            batching.window_bins(dt_s))
+        sp_bin, _ = batch_speedup_at(
+            windowed_counts(cnt, batching.window_bins(dt_s)),
+            table, batching.b_cap)
     wait_bins = np.asarray(
-        _fleet_queue_scan(jnp.asarray(work), jnp.asarray(buffer_s), dt_s)[0]
-    )[0, 0]
+        _fleet_queue_scan(jnp.asarray(work[None, None, :]),
+                          jnp.asarray(buffer_s), dt_s)[0])[0, 0]
 
-    # Within-bin FIFO: prior work of same-bin arrivals, minus the time
-    # already elapsed inside the bin.
+    # Within-bin FIFO: prior work of same-bin arrivals (scaled by the
+    # bin's batching speedup when enabled), minus the time already
+    # elapsed inside the bin.
     cs = np.cumsum(s)
     first = np.searchsorted(bins, bins, side="left")
-    prior = (cs - s) - (cs[first] - s[first])
+    prior = ((cs - s) - (cs[first] - s[first])) / sp_bin[bins]
     delta = t - bins * dt_s
     return np.maximum(wait_bins[bins] + prior - delta, 0.0)
 
@@ -283,8 +304,8 @@ _CHUNK_BLOCK = 8192
 
 
 def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
-                pbuf, n_iter, n_bins, n_rows, adm_on, use_pallas,
-                want_wait, probes):
+                pbuf, batch, n_iter, n_bins, n_rows, adm_on, use_pallas,
+                want_wait, probes, batch_window):
     """Single-launch fleet fixed point (the device half of ``FleetSim.run``).
 
     Rolls the legacy schedule -> bin -> scan -> gather iteration into one
@@ -350,6 +371,20 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
         pbuf: Probe ring buffers (:func:`repro.obs.probes.make_buffers`
             pytree; donated by the probed jit wrapper) — an empty dict
             when ``probes`` is None.
+        batch: Continuous-batching pytree — an **empty dict** when
+            batching is off (the trace then contains no batching ops and
+            shares the batching-free compile-cache entry).  When on:
+            ``table`` (the padded speedup interpolation table, f64),
+            ``bcap`` (scalar admissible-batch bound) and — only for the
+            probed ``n_iter == 1`` peel — ``beff0`` (F, rows, T) f32,
+            the host-computed iteration-1 batch occupancy the probe
+            channel records.  The law itself is deposit-time scaling
+            (see :mod:`repro.traffic.batching`): the decode-work and
+            occupancy-count planes ride two extra chunk channels
+            (``wdec``/``cntw``) through the same scatter, and the scan
+            consumes ``work + work_dec * (1/s(B_eff) - 1)``.
+        batch_window: Static — occupancy window in bins (0 when batching
+            is off; >= 1 when on).
         probes: Static — ``None`` (the probe-free kernel, byte-identical
             to the pre-observability trace) or the resolved
             ``(capacity, stride)`` pair of a
@@ -391,16 +426,19 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
         p_cap, p_stride = probes
 
     def probe_write(bufs, t, wait, w_t, drop, qhat=None, admit=None,
-                    win=None):
+                    win=None, beff=None):
         # Ring write via dynamic_update_slice: bin t lands in slot
         # (t // stride) % capacity; bins the stride skips write the
         # sentinel scratch slot (index capacity), so the scan step is
         # branch-free and XLA keeps the buffers aliased in the carry.
+        # Under batching a fourth row channel records the per-bin batch
+        # occupancy B_eff.
         rec = (t % p_stride) == 0
         slot = jnp.where(rec, (t // p_stride) % p_cap, p_cap)
+        chans = [wait, w_t, drop] + ([] if beff is None else [beff])
         out = dict(bufs)
         out["rows"] = jax.lax.dynamic_update_slice(
-            bufs["rows"], jnp.stack([wait, w_t, drop])[None],
+            bufs["rows"], jnp.stack(chans)[None],
             (slot, 0, 0, 0))
         if qhat is not None:
             out["aimd"] = jax.lax.dynamic_update_slice(
@@ -439,35 +477,55 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
                                  axis=1).reshape(-1)
         b_ch, fin = to_bins(flat_t[chunks["src"]])
         bins = jnp.minimum(b_ch + chunks["offs"], T - 1)
+
+        def scat(vals):
+            if use_pallas:
+                # TPU: one-hot-matmul deposit kernel (f32 accumulation —
+                # TPUs have no f64; CPU CI parity runs the reference path).
+                return _kernel_ops.deposit(
+                    chunks["fprow"], bins.astype(jnp.int32),
+                    vals.astype(f32), F * SR, T).astype(f64)
+            # int64 flat index: F * rows * T can exceed 2^31 on large
+            # worlds/sweeps (x64 is enabled for every fused launch).
+            flat = chunks["fprow"].astype(jnp.int64) * T + bins
+            return jnp.zeros(F * SR * T).at[flat].add(
+                vals, mode="promise_in_bounds")
+
         vals = chunks["work"] * fin
         if adm_on:
             # Shed requests stop depositing (the activity compaction
             # already removed thinned-out requests).
-            vals = vals * ~shed.reshape(-1)[chunks["fpr"]]
-        if use_pallas:
-            # TPU: one-hot-matmul deposit kernel (f32 accumulation —
-            # TPUs have no f64; CPU CI parity runs the reference path).
-            plane = _kernel_ops.deposit(
-                chunks["fprow"], bins.astype(jnp.int32),
-                vals.astype(f32), F * SR, T).astype(f64)
-        else:
-            # int64 flat index: F * rows * T can exceed 2^31 on large
-            # worlds/sweeps (x64 is enabled for every fused launch).
-            flat = chunks["fprow"].astype(jnp.int64) * T + bins
-            plane = jnp.zeros(F * SR * T).at[flat].add(
-                vals, mode="promise_in_bounds")
-        work = plane.reshape(F, SR, T)
+            keep = ~shed.reshape(-1)[chunks["fpr"]]
+            vals = vals * keep
+        work = scat(vals).reshape(F, SR, T)
         if "mig_dense" in q:
             work = work + q["mig_dense"][None]
-        return work
+        if not batch:
+            return work, work, None
+        # Continuous batching (deposit-time scaling): the decode-work
+        # and occupancy-count channels ride the same scatter, and the
+        # scan consumes work + work_dec * (1/s(B_eff) - 1).  The
+        # migration background plane stays outside work_dec — it is not
+        # batchable decode work.
+        vdec, vcnt = chunks["wdec"] * fin, chunks["cntw"] * fin
+        if adm_on:
+            vdec, vcnt = vdec * keep, vcnt * keep
+        work_dec = scat(vdec).reshape(F, SR, T)
+        cnt = scat(vcnt).reshape(F, SR, T)
+        work_eff, beff = batched_effective_work(
+            work, work_dec, windowed_counts_jnp(cnt, batch_window),
+            batch["table"], batch["bcap"])
+        return work_eff, work, beff
 
-    def fleet_scan(work32, bufs=None):
+    def fleet_scan(work32, bufs=None, beff_t=None):
         # The _fleet_queue_scan backlog recursion, time-major and
         # wait-only (f32, exactly the legacy downcast).  With ring
         # buffers passed (the probed final iteration only), the scan
         # carry additionally threads them and every stride-th bin
         # records (backlog, offered work, dropped) — the bufs-free
-        # branch below is byte-identical to the legacy scan.
+        # branch below is byte-identical to the legacy scan.  With
+        # ``beff_t`` (probed batching runs) the ring gains the
+        # batch-occupancy channel.
         if bufs is None:
             def step(b, w_t):
                 wait = b
@@ -478,19 +536,24 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
 
         def step(carry, xs):
             b, pb = carry
-            w_t, t = xs
+            if beff_t is None:
+                (w_t, t), be = xs, None
+            else:
+                w_t, t, be = xs
             wait = b
             offered = b + w_t
             drop = jnp.maximum(offered - cap32, 0.0)
-            pb = probe_write(pb, t, wait, w_t, drop)
+            pb = probe_write(pb, t, wait, w_t, drop, beff=be)
             b = jnp.maximum(jnp.minimum(offered, cap32) - dt32, 0.0)
             return (b, pb), wait
+        xs = (work32, jnp.arange(T))
+        if beff_t is not None:
+            xs = xs + (beff_t,)
         (_, bufs), wait = jax.lax.scan(
-            step, (jnp.zeros((F, SR), f32), bufs),
-            (work32, jnp.arange(T)))
+            step, (jnp.zeros((F, SR), f32), bufs), xs)
         return wait, bufs
 
-    def adm_scan(work32, bufs=None):
+    def adm_scan(work32, bufs=None, beff_t=None):
         # The admission_queue_scan recursion (bit-identical backlog and
         # AIMD cell), time-major over compacted rows, emitting wait +
         # the admit trace.  With ring buffers passed (the probed final
@@ -537,17 +600,22 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
 
         def step(carry, xs):
             backlog, admit, win, pb = carry
-            w_t, is_ctrl, gw_t, exp_t, t = xs
+            if beff_t is None:
+                (w_t, is_ctrl, gw_t, exp_t, t), be = xs, None
+            else:
+                w_t, is_ctrl, gw_t, exp_t, t, be = xs
             backlog, admit_next, win_next, wait, offered, qhat = cell(
                 backlog, admit, win, w_t, is_ctrl, gw_t, exp_t)
             drop = jnp.maximum(offered - cap32, 0.0)
             pb = probe_write(pb, t, wait, w_t, drop, qhat=qhat,
-                             admit=admit_next, win=win_next)
+                             admit=admit_next, win=win_next, beff=be)
             return (backlog, admit_next, win_next, pb), (wait, admit)
+        xs = (work32, q["ctrl"], q["gw_rows_bin"], q["exp_rows_bin"],
+              jnp.arange(T))
+        if beff_t is not None:
+            xs = xs + (beff_t,)
         (_, _, _, bufs), (wait, admit) = jax.lax.scan(
-            step, carry0 + (bufs,),
-            (work32, q["ctrl"], q["gw_rows_bin"], q["exp_rows_bin"],
-             jnp.arange(T)))
+            step, carry0 + (bufs,), xs)
         return wait, admit, bufs
 
     def gather(wait_t, work32, gw_b, gw_fin, ex_b, ex_fin):
@@ -568,20 +636,27 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
         return gw_wait, ex_wait.max(axis=4), gw_over, ex_over.any(axis=4)
 
     def finish_iter(work32, work_sum, gw_b, gw_fin, ex_b, ex_fin, c,
-                    record=False):
+                    record=False, beff=None):
         # Scan + admission resolve + gather for one iteration whose
         # offered work (f32, row-major (F, SR, T)) is already binned;
         # only the scan input is transposed to time-major.  ``record``
         # (static) threads the probe rings through this iteration's
         # scan — set on the peeled *final* iteration only, so the probe
-        # cost is paid once per launch, not once per iteration.
+        # cost is paid once per launch, not once per iteration.  Under
+        # batching ``work32`` is the *effective* (speedup-scaled) work —
+        # gather overload stays consistent with the scan — while
+        # ``work_sum`` stays the raw offered sum; ``beff`` feeds the
+        # recorded batch-occupancy probe channel.
         work32_t = jnp.moveaxis(work32, 2, 0)             # (T, F, SR)
+        beff_t = None
+        if record and beff is not None:
+            beff_t = jnp.moveaxis(beff.astype(f32), 2, 0)
         pb = c.get("probes")
         if adm_on:
             if not record:
                 wait_t, admit = adm_scan(work32_t)
             else:
-                wait_t, admit, pb = adm_scan(work32_t, pb)
+                wait_t, admit, pb = adm_scan(work32_t, pb, beff_t)
             # Monotone outer iteration (see run_legacy): the admit trace
             # accumulates as a running minimum so the shed set only grows.
             admit_floor = jnp.minimum(c["admit_floor"], admit)
@@ -599,7 +674,7 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
             if not record:
                 wait_t = fleet_scan(work32_t)
             else:
-                wait_t, pb = fleet_scan(work32_t, pb)
+                wait_t, pb = fleet_scan(work32_t, pb, beff_t)
             shed, retries = c["shed"], c["retries"]
             admit_floor = c["admit_floor"]
             ingress_extra = c["ingress_extra"]
@@ -619,11 +694,13 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
         start_pref = q["arrival_s"][None, None, :] + c["ingress_extra"]
         layer_arr, exp_arr, _, _ = schedule(c["gw_wait"], c["ex_max"],
                                             start_pref)
-        work = bin_work(layer_arr, exp_arr, c["shed"])    # (F, SR, T)
+        work, work_raw, beff = bin_work(layer_arr, exp_arr,
+                                        c["shed"])       # (F, SR, T)
         gw_b, gw_fin = to_bins(layer_arr)
         ex_b, ex_fin = to_bins(exp_arr)
-        return finish_iter(work.astype(f32), work.sum(axis=2),
-                           gw_b, gw_fin, ex_b, ex_fin, c, record=record)
+        return finish_iter(work.astype(f32), work_raw.sum(axis=2),
+                           gw_b, gw_fin, ex_b, ex_fin, c, record=record,
+                           beff=beff)
 
     n_gw = q["ttft0"].shape[1] if adm_on else 1
     carry = dict(
@@ -651,10 +728,13 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
         c = jax.lax.fori_loop(0, n_iter - 1, body, carry)
     elif n_iter == 1:
         carry["probes"] = pbuf
+        # Peeled-final batching runs ship the host-computed iteration-1
+        # occupancy (batch["beff0"]) for the probe channel; work0 itself
+        # is already the host-computed effective plane.
         c = finish_iter(work0, work0_sum,
                         q["gw_b0"][None], q["gw_fin0"][None],
                         q["ex_b0"][None], q["ex_fin0"][None], carry,
-                        record=True)
+                        record=True, beff=batch.get("beff0"))
     else:
         carry = finish_iter(work0, work0_sum,
                             q["gw_b0"][None], q["gw_fin0"][None],
@@ -682,20 +762,21 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
 
 
 #: The jitted fused fixed point.  Statics: (n_iter, n_bins, n_rows,
-#: adm_on, use_pallas, want_wait, probes); everything else rides the
-#: pytrees, so any fleet run with equal shapes — every rate of a sweep,
-#: every re-placement decide/evaluate round — hits one compile cache
-#: entry.  Probe-free launches pass ``probes=None`` and an empty pbuf
-#: pytree, so their traced computation is byte-identical to the legacy
-#: kernel.
+#: adm_on, use_pallas, want_wait, probes, batch_window); everything else
+#: rides the pytrees, so any fleet run with equal shapes — every rate of
+#: a sweep, every re-placement decide/evaluate round — hits one compile
+#: cache entry.  Probe-free launches pass ``probes=None`` and an empty
+#: pbuf pytree, and batching-free launches an empty ``batch`` pytree
+#: with ``batch_window=0``, so their traced computation is byte-identical
+#: to the legacy kernel.
 _fused_exec = jax.jit(_fused_core,
-                      static_argnums=(7, 8, 9, 10, 11, 12, 13))
+                      static_argnums=(8, 9, 10, 11, 12, 13, 14, 15))
 
 #: Probed variant: identical statics, but the probe ring buffers
 #: (positional arg 6) are donated so XLA updates them in place instead
 #: of copying the rings once per scan step.
 _fused_exec_probed = jax.jit(_fused_core,
-                             static_argnums=(7, 8, 9, 10, 11, 12, 13),
+                             static_argnums=(8, 9, 10, 11, 12, 13, 14, 15),
                              donate_argnums=(6,))
 
 
@@ -756,6 +837,7 @@ class FleetSim:
         min_bins: int = 0,
         service_model=None,
         probes: ProbeConfig | None = None,
+        batching: BatchingConfig | None = None,
     ):
         """Build the simulator and run every rate-independent precompute.
 
@@ -801,6 +883,15 @@ class FleetSim:
                 :class:`~repro.obs.probes.ProbeRecord`.  ``None`` (the
                 default) keeps the fused kernel's traced computation
                 bit-identical to the probe-free simulator.
+            batching: Optional
+                :class:`~repro.traffic.batching.BatchingConfig`.  When
+                set, per-(plan, satellite) decode queues drain in
+                batches of up to ``b_max`` per time bin with service
+                time ``B / decode_rate(B)`` and KV-slot occupancy
+                bounding the admissible batch (deposit-time scaling —
+                see :mod:`repro.traffic.batching`).  ``None`` (the
+                default) keeps every execution path bit-identical to
+                the FIFO simulator, and so does ``b_max=1``.
         """
         self.plans = list(plans)
         self.schedules = [as_schedule(p, topo.n_slots) for p in self.plans]
@@ -853,6 +944,18 @@ class FleetSim:
         # --- engine pass: base (zero-load) per-token latencies -------------
         svc = resolve_service_model(service_model, workload, compute)
         self.service_model = svc
+        # Continuous-batching statics: the padded speedup table (read
+        # off the service model's batch-size-dependent decode rates),
+        # the KV-bounded batch cap, and the occupancy window in bins.
+        self.batching = batching
+        if batching is not None:
+            self._batch_table = batching.resolve_table(svc, ctx_len)
+            self._batch_cap = float(batching.b_cap)
+            self._batch_window = batching.window_bins(qcfg.dt_s)
+        else:
+            self._batch_table = None
+            self._batch_cap = 0.0
+            self._batch_window = 0
         draws = np.stack([activation.sample(layer, rng, M)
                           for layer in range(L)])                 # (L, M, K)
         self.draws = draws
@@ -1049,6 +1152,31 @@ class FleetSim:
         self._chunk_row = self.ev_chunk_plan * self.n_stations \
             + self.ev_chunk_station
         self._chunk_pr = self.ev_chunk_plan * R + self.ev_chunk_req
+
+        if batching is not None:
+            # Continuous-batching chunk channels.  Decode-side events —
+            # decode-token gateway visits and the decode expert block —
+            # carry their work in ``wdec`` (the batchable subset the
+            # speedup scales) and one fractional token visit per chunk
+            # in ``cntw`` (a chunk holds work/ev_work of its event's
+            # visit, so each decode event deposits exactly one occupancy
+            # unit; a satellite hosting several layers of one token
+            # counts that token once per visit).  Prefill blocks batch
+            # over their own prompt already and count zero.
+            ev_dec = np.concatenate([
+                np.broadcast_to((np.arange(M) >= R)[:, None],
+                                (M, L)).ravel(),
+                np.ones(N * L * K, dtype=bool),
+                np.zeros(R * L * n_exp, dtype=bool),
+            ]).astype(np.float64)                                 # (E,)
+            dec_ch = np.broadcast_to(ev_dec[None, :],
+                                     ev_work.shape).ravel()[self._rep]
+            wf = w_flat[self._rep]
+            self._chunk_wdec = self.ev_chunk_work * dec_ch
+            self._chunk_cntw = np.where(
+                wf > 0.0,
+                self.ev_chunk_work / np.where(wf > 0.0, wf, 1.0),
+                0.0) * dec_ch
         #: Lazily-built device-resident precompute (see _device_tables).
         self._dev: dict | None = None
         #: Deposit implementation: "auto" (Pallas on TPU, jnp scatter-add
@@ -1319,6 +1447,9 @@ class FleetSim:
         self._f_req = self.ev_chunk_req[perm]
         self._f_bins0 = bins0[perm]
         self._f_fin0 = fin0[self._rep][perm]
+        if self.batching is not None:
+            self._f_wdec = self._chunk_wdec[perm]
+            self._f_cntw = self._chunk_cntw[perm]
         if self._mig_flat.size:
             flat = self._row_inv[self._mig_flat // self.n_bins] \
                 * self.n_bins + self._mig_flat % self.n_bins
@@ -1397,6 +1528,25 @@ class FleetSim:
             w = np.concatenate([w, self._mig_work])
         return np.bincount(flat, weights=w,
                            minlength=P * S * T).reshape(P, S, T)
+
+    def _bin_work_planes(self, layer_arr, exp_arr, active2d):
+        """Decode-work and occupancy-count planes (P, S, T) for the
+        legacy path's continuous-batching law (:mod:`.batching`) —
+        same bins as :meth:`_bin_work`, decode-side chunk channels,
+        no migration background (weights are not batchable decode)."""
+        P = self.n_plans
+        S, T = self.n_stations, self.n_bins
+        ev_time = self._event_times(layer_arr, exp_arr)           # (P*E,)
+        base_bin, finite = self._to_bins(ev_time)
+        bins = np.minimum(base_bin[self._rep] + self._offs, T - 1)
+        act = finite[self._rep] \
+            * active2d[self.ev_chunk_plan, self.ev_chunk_req]
+        flat = (self.ev_chunk_plan * S + self.ev_chunk_station) * T + bins
+        wdec = np.bincount(flat, weights=self._chunk_wdec * act,
+                           minlength=P * S * T).reshape(P, S, T)
+        cnt = np.bincount(flat, weights=self._chunk_cntw * act,
+                          minlength=P * S * T).reshape(P, S, T)
+        return wdec, cnt
 
     def _gather(self, wait, overload, layer_arr, exp_arr):
         """Per-(plan, token, layer) gateway wait, expert branch-max wait,
@@ -1549,6 +1699,13 @@ class FleetSim:
             fpr = np.zeros(n_pad, dtype=np.int64)
             fpr[:n] = f_id * (P * R) + self._f_pr[cid]
             chunks["fpr"] = fpr
+        if self.batching is not None:
+            wdec = np.zeros(n_pad)
+            wdec[:n] = self._f_wdec[cid]
+            cntw = np.zeros(n_pad)
+            cntw[:n] = self._f_cntw[cid]
+            chunks["wdec"] = wdec
+            chunks["cntw"] = cntw
 
         # Iteration-1 offered work: the zero-wait schedule's bins are
         # static, so one host bincount over the active chunks builds the
@@ -1556,12 +1713,29 @@ class FleetSim:
         # transfer).
         flat0 = (f_id * SR + self._f_rowc[cid]).astype(np.int64) * T \
             + self._f_bins0[cid]
+        # astype: bincount of an *empty* chunk set (an all-False sweep
+        # row) returns int64 even with weights given.
         plane0 = np.bincount(
             flat0, weights=self._f_work[cid] * self._f_fin0[cid],
-            minlength=F * SR * T).reshape(F, SR, T)
+            minlength=F * SR * T).reshape(F, SR, T).astype(np.float64)
         if self._mig_rm is not None:
             plane0 += self._mig_rm[None]
         work0_sum = plane0.sum(axis=2)                        # (F, SR)
+        beff0 = None
+        if self.batching is not None:
+            # The peeled iteration's effective work is host-computed in
+            # f64 (mirroring the device's f64-scatter-then-f32-downcast
+            # policy) from the decode-work and occupancy planes of the
+            # same static bins.
+            plane0_dec = np.bincount(
+                flat0, weights=self._f_wdec[cid] * self._f_fin0[cid],
+                minlength=F * SR * T).reshape(F, SR, T)
+            cnt0 = np.bincount(
+                flat0, weights=self._f_cntw[cid] * self._f_fin0[cid],
+                minlength=F * SR * T).reshape(F, SR, T)
+            plane0, beff0 = effective_work_np(
+                plane0, plane0_dec, cnt0, self._batch_table,
+                self._batch_cap, self._batch_window)
 
         # Telemetry rings: static (capacity, stride) pair + donated
         # zeroed buffers.  probes=None launches pass an empty pytree and
@@ -1572,12 +1746,26 @@ class FleetSim:
             n_gw = self._adm_ttft0.shape[1] if self.admission_on else 0
             pbuf = {k: jnp.asarray(v) for k, v in make_buffers(
                 p_cap, F, SR,
-                (P, n_gw) if self.admission_on else None).items()}
+                (P, n_gw) if self.admission_on else None,
+                n_row_channels=4 if self.batching is not None else 3
+            ).items()}
             exec_fn = _fused_exec_probed
         else:
             static_probes = None
             pbuf = {}
             exec_fn = _fused_exec
+        # Batching pytree: empty when off (the trace then shares the
+        # batching-free compile-cache entry); the host-computed beff0
+        # ships only for the probed n_iter == 1 peel, which has no
+        # device-side occupancy plane to record from.
+        batch_np: dict = {}
+        batch_window = 0
+        if self.batching is not None:
+            batch_np = dict(table=self._batch_table,
+                            bcap=np.float64(self._batch_cap))
+            batch_window = self._batch_window
+            if self.probes is not None and max(1, self.qcfg.iterations) == 1:
+                batch_np["beff0"] = beff0.astype(np.float32)
         with _x64(), warnings.catch_warnings():
             # CPU jit declines buffer donation with a UserWarning; the
             # request is still the right thing on TPU/GPU.
@@ -1588,9 +1776,10 @@ class FleetSim:
                 jnp.asarray(plane0.astype(np.float32)),
                 jnp.asarray(work0_sum),
                 jnp.asarray(tt), jnp.asarray(tp), pbuf,
+                {k: jnp.asarray(v) for k, v in batch_np.items()},
                 max(1, self.qcfg.iterations), self.n_bins, self.n_rows,
                 self.admission_on, self._use_pallas(), want_wait,
-                static_probes)
+                static_probes, batch_window)
             out = {k: jax.tree_util.tree_map(np.asarray, v)
                    for k, v in out.items()}
         if self.probes is not None:
@@ -1740,6 +1929,25 @@ class FleetSim:
                                   active[None, :] & ~shed)
             if zero_load:
                 break
+            batch_kw = None
+            scan_work = work
+            if self.batching is not None:
+                wdec, cnt = self._bin_work_planes(
+                    layer_arr, exp_arr, active[None, :] & ~shed)
+                if adm_on:
+                    # The law applies inside the admission jit (the
+                    # window sum is pre-applied host-side so the call
+                    # carries no static argument).
+                    batch_kw = dict(
+                        work_dec=jnp.asarray(wdec),
+                        cnt_win=jnp.asarray(windowed_counts(
+                            cnt, self._batch_window)),
+                        table=jnp.asarray(self._batch_table),
+                        bcap=jnp.asarray(np.float64(self._batch_cap)))
+                else:
+                    scan_work, _ = effective_work_np(
+                        work, wdec, cnt, self._batch_table,
+                        self._batch_cap, self._batch_window)
             if adm_on:
                 wait, dropped, admit = admission_queue_scan(
                     jnp.asarray(work), jnp.asarray(qcfg.buffer_s),
@@ -1747,7 +1955,8 @@ class FleetSim:
                     jnp.ones((P, self.n_gw_stations)),
                     margin * acfg.ttft_target_s,
                     margin * acfg.tpot_target_s,
-                    acfg.increase, acfg.decrease, acfg.admit_min)
+                    acfg.increase, acfg.decrease, acfg.admit_min,
+                    batching=batch_kw)
                 # Monotone outer iteration: accumulate the trace as a
                 # running minimum so the shed set only grows and the
                 # fixed point converges from the congested side.
@@ -1762,7 +1971,7 @@ class FleetSim:
                 start_pref = req.arrival_s[None, :] + ingress_extra
             else:
                 wait, dropped = _fleet_queue_scan(
-                    jnp.asarray(work), jnp.asarray(qcfg.buffer_s),
+                    jnp.asarray(scan_work), jnp.asarray(qcfg.buffer_s),
                     qcfg.dt_s)
             wait = np.asarray(wait)
             overload = np.asarray(dropped) > 0.0

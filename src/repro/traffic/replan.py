@@ -326,9 +326,19 @@ def replan_traffic(
     rcfg: ReplanConfig,
     qcfg: QueueConfig,
     ground: GroundSegment | None = None,
+    batching=None,
     **sim_kwargs,
 ) -> ReplanOutcome:
     """Close the re-placement loop over one request trace.
+
+    ``batching`` (an optional
+    :class:`~repro.traffic.batching.BatchingConfig`) applies the
+    continuous-batching service law to *every* fleet run of the loop —
+    the probe row, each decide/evaluate round and the final evaluation —
+    so the controller observes and is scored on the same batched
+    queues; further keyword arguments (``service_model=``, ``probes=``,
+    ...) forward to :class:`~repro.traffic.queueing.FleetSim` the same
+    way.
 
     1. **Probe**: run the fleet with every candidate held static and
        record the (plan, satellite, bin) backlog — what a live
@@ -352,6 +362,8 @@ def replan_traffic(
         # The gate must price exactly what the queues will bill.
         rcfg = dataclasses.replace(
             rcfg, bytes_per_expert=qcfg.migration_bytes_per_expert)
+    if batching is not None:
+        sim_kwargs = dict(sim_kwargs, batching=batching)
     seed = int(rng.integers(0, 2**31 - 1))
     # The probe *construction* (engine pass) fixes the bin horizon the
     # decision walk must cover; only the backlog mode pays for the full

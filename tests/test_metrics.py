@@ -167,3 +167,54 @@ def test_format_table_column_order_follows_first_row():
     rows = [{"b": 1, "a": 2}, {"a": 3, "b": 4, "c": 5}]
     header = format_table(rows).splitlines()[0]
     assert header.split() == ["b", "a"]           # 'c' never appears
+
+
+# --------------------------------------------------------------------- #
+# run_many / run path equality (including degenerate rows)
+# --------------------------------------------------------------------- #
+
+
+def test_run_many_rows_match_per_target_runs():
+    """Every sweep row of ``run_many`` — including a degenerate
+    all-False mask — reports the same guarded ``offered_rps`` and
+    ``goodput_tok_s`` as a standalone ``run`` on that mask, so
+    ``saturation_sweep``'s rate axis cannot diverge from per-target
+    reruns (both paths read the single guarded property)."""
+    from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                            ConstellationConfig, LinkConfig, MoEWorkload,
+                            rand_intra_cg_plan, sample_topology,
+                            spacemoe_plan)
+    from repro.traffic import FleetSim, QueueConfig, RequestBatch
+
+    cfg = ConstellationConfig.scaled(8, 12, n_slots=10, survival_prob=1.0)
+    con = Constellation(cfg)
+    topo = sample_topology(con, LinkConfig(), np.random.default_rng(0))
+    activ = ActivationModel.zipf(4, 4, 2, seed=1)
+    plans = [spacemoe_plan(con, topo, activ),
+             rand_intra_cg_plan(con.cfg, 4, 4, np.random.default_rng(7))]
+    n = 40
+    req = RequestBatch(
+        arrival_s=np.arange(n, dtype=np.float64) * 1.0,
+        prompt_len=np.full(n, 2, dtype=np.int64),
+        decode_len=np.full(n, 6, dtype=np.int64),
+        station=np.zeros(n, dtype=np.int64),
+    )
+    sim = FleetSim(plans, topo, activ, MoEWorkload.llama_moe_3p5b(),
+                   ComputeConfig(), req, np.random.default_rng(0),
+                   qcfg=QueueConfig(dt_s=0.05, tail_s=35.0))
+    u = np.random.default_rng(3).random(n)
+    masks = np.stack([np.zeros(n, dtype=bool),     # degenerate row
+                      u < 0.5,
+                      np.ones(n, dtype=bool)])
+    many = sim.run_many(masks)
+    for mask, res in zip(masks, many):
+        single = sim.run(mask)
+        for pm, ps in zip(res.plans, single.plans):
+            assert pm.offered_rps == ps.offered_rps
+            assert pm.goodput_tok_s == ps.goodput_tok_s
+            np.testing.assert_array_equal(pm.served, ps.served)
+    # The degenerate row reads exactly 0.0 on both paths, never a
+    # division artifact.
+    for p in many[0].plans:
+        assert p.offered_rps == 0.0 and p.goodput_tok_s == 0.0
+        assert p.n_active == 0

@@ -12,11 +12,11 @@ from repro.core import (ActivationModel, ComputeConfig, Constellation,
                         ConstellationConfig, LinkConfig, MoEWorkload,
                         PlanBatch, evaluate_plans, ingress_offsets,
                         rand_intra_cg_plan, sample_topology, spacemoe_plan)
-from repro.traffic import (SCENARIOS, FleetSim, QueueConfig, RequestBatch,
-                           apply_failure_storm, build_ground_segment,
-                           get_scenario, poisson_arrivals, run_scenario,
-                           sample_requests, saturation_sweep,
-                           station_waiting_times)
+from repro.traffic import (SCENARIOS, BatchingConfig, FleetSim, QueueConfig,
+                           RequestBatch, apply_failure_storm,
+                           build_ground_segment, get_scenario,
+                           poisson_arrivals, run_scenario, sample_requests,
+                           saturation_sweep, station_waiting_times)
 
 CFG = ConstellationConfig.scaled(8, 12, n_slots=10, survival_prob=1.0)
 WL = MoEWorkload.llama_moe_3p5b()
@@ -63,6 +63,42 @@ def test_mdone_matches_pollaczek_khinchine():
     t2 = poisson_arrivals(2.0 / s, 200.0, np.random.default_rng(1))
     w2 = station_waiting_times(t2, s, dt_s=0.002, horizon_s=250.0)
     assert w2[-100:].mean() > 10 * pk
+
+
+def test_batch_arrivals_match_batch_pollaczek_khinchine():
+    """Batched kernel vs the batch-arrival (M^[G]/D/1) P-K closed form.
+
+    G simultaneous arrivals at Poisson epochs of rate lam_b, each with
+    deterministic demand d, see mean wait
+
+        E[W] = lam_b G^2 d^2 / (2 (1 - rho)) + (G - 1) d / 2,
+
+    (batch-work M/G/1 delay plus the mean within-batch position delay,
+    rho = lam_b G d).  The unbatched kernel must match the formula at
+    service d; with ``BatchingConfig(b_max=G)`` every batch drains at
+    the table speedup s(G), so the same formula at d -> d / s(G) must
+    hold — the analytic pin on the continuous-batching service term,
+    alongside the M/D/1 pin above."""
+    lam_b, G, d = 6.0, 4, 0.02               # rho = 0.48 unbatched
+    rng = np.random.default_rng(33)
+    epochs = poisson_arrivals(lam_b, 400.0, rng)
+    t = np.repeat(epochs, G)
+
+    def pk_batch(dd):
+        rho = lam_b * G * dd
+        return lam_b * G * G * dd * dd / (2.0 * (1.0 - rho)) \
+            + (G - 1) * dd / 2.0
+
+    w = station_waiting_times(t, d, dt_s=0.002, horizon_s=450.0)
+    assert abs(w.mean() - pk_batch(d)) / pk_batch(d) < 0.08
+
+    speedup = (1.0, 1.6, 2.1, 2.5)
+    wb = station_waiting_times(
+        t, d, dt_s=0.002, horizon_s=450.0,
+        batching=BatchingConfig(b_max=G, speedup=speedup))
+    d_eff = d / speedup[G - 1]
+    assert abs(wb.mean() - pk_batch(d_eff)) / pk_batch(d_eff) < 0.08
+    assert wb.mean() < w.mean()              # batching strictly helps
 
 
 def test_station_waits_zero_at_zero_load():
