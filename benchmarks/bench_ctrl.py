@@ -1,0 +1,263 @@
+"""Joint control plane: one-launch control grid vs the per-cell host loop.
+
+A full 3x3x3 controller grid — decision **cadence** x **migration
+budget** x **admission TTFT target** — runs two ways on one world and
+candidate pool:
+
+* **host** — the pinned decide law walked round by round per cell
+  (:func:`repro.traffic.replan.replan_traffic`), one controller run per
+  grid point: the pre-fusion cost of tuning the joint controller;
+* **fused** — one :meth:`repro.traffic.queueing.FleetSim
+  .run_replan_grid` call: all 27 cells batched along the leading axis of
+  a single device program (``FUSED_TRACE_COUNT`` must move by exactly
+  one — the one-launch acceptance pin).
+
+The bench checks per-cell **decision parity** — identical slot plans,
+switch boundaries, incumbent sequences, scores and migration bytes in
+every cell — and **fails hard on deviation or on a multi-trace grid**
+(CI runs it as the control-plane regression gate).  Wall-clock speedup
+(the PR targets >=5x steady-state over the host loop) is reported and
+tracked as an artifact, not gated: it is machine-dependent.
+
+    PYTHONPATH=src python -m benchmarks.run --fast --only ctrl
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        rand_intra_cg_plan, sample_topology, spacemoe_plan)
+from repro.traffic import (AdmissionConfig, FleetSim, QueueConfig,
+                           ReplanConfig, replan_traffic, sample_requests)
+from repro.traffic import queueing
+from repro.traffic.replan import build_replan_schedule, replan_base_scores
+
+from .common import Timer, emit
+
+#: The controller grid (cells = cadence-major product, 27 points).
+CADENCES = (1, 2, 3)
+MIG_WEIGHTS = (0.0, 0.01, 0.1)
+TTFT_TARGETS = (30.0, 60.0, 90.0)
+
+
+def _world(fast: bool):
+    """A congested three-candidate world with admission on: every grid
+    axis has to matter (switches happen, the gates bite, the TTFT
+    target moves the AIMD window)."""
+    cfg = ConstellationConfig.scaled(8, 12, n_slots=10, survival_prob=1.0)
+    con = Constellation(cfg)
+    topo = sample_topology(con, LinkConfig(), np.random.default_rng(0))
+    activ = ActivationModel.zipf(4, 4, 2, seed=1)
+    plans = [rand_intra_cg_plan(con.cfg, 4, 4, np.random.default_rng(7)),
+             spacemoe_plan(con, topo, activ),
+             rand_intra_cg_plan(con.cfg, 4, 4, np.random.default_rng(11))]
+    req = sample_requests(np.random.default_rng(2),
+                          rate_rps=20.0 if fast else 40.0,
+                          horizon_s=60.0 if fast else 120.0,
+                          n_stations=2, prompt_median=8, prompt_max=32,
+                          decode_mean=8, decode_max=16)
+    qcfg = QueueConfig(dt_s=0.05, tail_s=30.0, slot_period_s=10.0,
+                       buffer_s=6.0,
+                       admission=AdmissionConfig(policy="aimd",
+                                                 ttft_target_s=60.0))
+    return topo, activ, plans, req, qcfg
+
+
+def _cells():
+    """Cadence-major grid cells, the fused launch's cell order."""
+    return [(c, w, t) for c in CADENCES for w in MIG_WEIGHTS
+            for t in TTFT_TARGETS]
+
+
+def _host_cell(plans, topo, activ, wl, comp, req, qcfg, rcfg, cell):
+    """One host-controller run at one grid point."""
+    cad, w, tt = cell
+    qc = dataclasses.replace(
+        qcfg, admission=dataclasses.replace(qcfg.admission,
+                                            ttft_target_s=tt))
+    rc = dataclasses.replace(rcfg, period_slots=cad,
+                             migration_weight_s_per_mb=w)
+    return replan_traffic(plans, topo, activ, wl, comp, req,
+                          np.random.default_rng(4), rc, qc)
+
+
+def _host_stage_times(plans, topo, activ, wl, comp, req, qcfg, rcfg,
+                      cell) -> dict:
+    """Warm per-stage wall times of ONE host-controller cell — the
+    decomposition behind ``host_loop_s``, so the headline ratio is
+    auditable: the build stages carry the per-cell table construction
+    and any jit cache misses, the run stages the device fixed points,
+    the decide walk the pure-python boundary loop.  Mirrors
+    ``replan_traffic``'s exact stage order and seed discipline."""
+    cad, w, tt = cell
+    qc = dataclasses.replace(
+        qcfg, admission=dataclasses.replace(qcfg.admission,
+                                            ttft_target_s=tt))
+    rc = dataclasses.replace(
+        rcfg, period_slots=cad, migration_weight_s_per_mb=w,
+        bytes_per_expert=qc.migration_bytes_per_expert)
+    seed = int(np.random.default_rng(4).integers(0, 2**31 - 1))
+    with Timer() as t_pb:
+        probe_sim = FleetSim(plans, topo, activ, wl, comp, req,
+                             np.random.default_rng(seed), qcfg=qc)
+    with Timer() as t_pr:
+        probe_sim.run()
+    with Timer() as t_dw:
+        report = build_replan_schedule(
+            plans, topo, activ, wl, comp,
+            np.random.default_rng(seed + 1), rc,
+            horizon_s=probe_sim.n_bins * qc.dt_s,
+            slot_period_s=qc.slot_period_s,
+            backlog_at=lambda _k, t_s, cur:
+                probe_sim.satellite_backlog(max(cur, 0), t_s))
+    with Timer() as t_eb:
+        ev = FleetSim(list(plans) + [report.schedule], topo, activ, wl,
+                      comp, req, np.random.default_rng(seed), qcfg=qc)
+    with Timer() as t_er:
+        ev.run()
+    return {"probe_build_s": round(t_pb.seconds, 3),
+            "probe_run_s": round(t_pr.seconds, 3),
+            "decide_walk_s": round(t_dw.seconds, 3),
+            "eval_build_s": round(t_eb.seconds, 3),
+            "eval_run_s": round(t_er.seconds, 3)}
+
+
+def _compare_cell(tag: str, host, fused) -> list[str]:
+    """Decision parity for one grid cell; returns problem strings."""
+    problems = []
+    hr, fr = host.report, fused.report
+    if not np.array_equal(hr.schedule.slot_plan, fr.schedule.slot_plan):
+        problems.append(f"{tag}: slot plans differ "
+                        f"{hr.schedule.slot_plan.tolist()} vs "
+                        f"{fr.schedule.slot_plan.tolist()}")
+    if len(hr.decisions) != len(fr.decisions):
+        problems.append(f"{tag}: {len(hr.decisions)} host decisions vs "
+                        f"{len(fr.decisions)} fused")
+        return problems
+    for dh, df in zip(hr.decisions, fr.decisions):
+        if (dh.boundary, dh.slot, dh.chosen, dh.switched) != \
+                (df.boundary, df.slot, df.chosen, df.switched):
+            problems.append(f"{tag} k={dh.boundary}: decision "
+                            f"{(dh.chosen, dh.switched)} vs "
+                            f"{(df.chosen, df.switched)}")
+        if not np.array_equal(dh.scores, df.scores):
+            problems.append(f"{tag} k={dh.boundary}: scores "
+                            f"{dh.scores} vs {df.scores}")
+        if dh.migration_bytes != df.migration_bytes:
+            problems.append(f"{tag} k={dh.boundary}: migration "
+                            f"{dh.migration_bytes} vs {df.migration_bytes}")
+    return problems
+
+
+def run(fast: bool = True, json_path: str | None = None) -> dict:
+    """Time host loop vs fused grid; gate decision parity + one-launch.
+
+    Raises SystemExit when any grid cell's fused decisions deviate from
+    the host walk or when the grid costs more than one trace.
+    """
+    wl, comp = MoEWorkload.llama_moe_3p5b(), ComputeConfig()
+    topo, activ, plans, req, qcfg = _world(fast)
+    # One decide round: the host loop's early-exit on a converged second
+    # round would otherwise make the two sides run different amounts of
+    # device work per cell — with controller_iterations=1 both execute
+    # exactly probe + decide walk + evaluate, so the wall-clock ratio
+    # isolates the launch structure (27 programs vs one batched one).
+    rcfg = ReplanConfig(mode="backlog", controller_iterations=1)
+    cells = _cells()
+
+    # The host loop's seed discipline (replan_traffic): one integer draw
+    # seeds every fleet run, seed+1 seeds the base-score draws — common
+    # random numbers per cell, so decisions must match bit for bit.
+    seed = int(np.random.default_rng(4).integers(0, 2**31 - 1))
+    rc_full = dataclasses.replace(
+        rcfg, bytes_per_expert=qcfg.migration_bytes_per_expert)
+    with Timer() as t_build:
+        sim = FleetSim(plans, topo, activ, wl, comp, req,
+                       np.random.default_rng(seed), qcfg)
+    scores = replan_base_scores(plans, topo, activ, wl, comp,
+                                np.random.default_rng(seed + 1), rc_full)
+    grid = dict(base_scores=scores, cadences=list(CADENCES),
+                mig_weights=list(MIG_WEIGHTS),
+                ttft_targets=list(TTFT_TARGETS))
+    before = queueing.FUSED_TRACE_COUNT
+    with Timer() as t_first:             # compile + launch
+        fused = sim.run_replan_grid(rc_full, **grid)
+    trace_delta = queueing.FUSED_TRACE_COUNT - before
+    with Timer() as t_steady:            # cached compile, one launch
+        fused = sim.run_replan_grid(rc_full, **grid)
+
+    with Timer() as t_host:
+        host = [_host_cell(plans, topo, activ, wl, comp, req, qcfg,
+                           rcfg, cell) for cell in cells]
+    # One warm cell decomposed stage by stage (the loop above warmed
+    # every jit cache): host_loop_s minus 27x these stage sums is the
+    # per-cell recompile + dispatch overhead the fused launch removes.
+    stages = _host_stage_times(plans, topo, activ, wl, comp, req, qcfg,
+                               rcfg, cells[0])
+
+    problems: list[str] = []
+    if trace_delta != 1:
+        problems.append(f"grid cost {trace_delta} traces, not 1 — the "
+                        "control grid no longer batches as one program")
+    rows = []
+    for cell, h, f in zip(cells, host, fused):
+        cad, w, tt = cell
+        tag = f"cad={cad} w={w} ttft={tt:g}"
+        problems += _compare_cell(tag, h, f)
+        rep = f.report
+        rows.append({
+            "cadence": cad, "mig_weight": w, "ttft_target": tt,
+            "n_decisions": len(rep.decisions),
+            "n_switches": rep.n_switches,
+            "migration_mb": round(rep.total_migration_bytes / 1e6, 3),
+            "replan_goodput_tok_s": round(
+                f.replanned.goodput_tok_s, 3),
+        })
+
+    speedup = t_host.seconds / max(t_steady.seconds, 1e-9)
+    speedup_cold = t_host.seconds / max(t_first.seconds, 1e-9)
+    out = {
+        "fast": fast,
+        "n_cells": len(cells),
+        "n_candidates": len(plans),
+        "n_requests": req.n_requests,
+        "trace_count_delta": trace_delta,
+        "build_s": round(t_build.seconds, 3),
+        "host_loop_s": round(t_host.seconds, 3),
+        "host_cell_mean_s": round(t_host.seconds / len(cells), 3),
+        "fused_first_s": round(t_first.seconds, 3),
+        "fused_steady_s": round(t_steady.seconds, 3),
+        "speedup_steady": round(speedup, 2),
+        "speedup_with_compile": round(speedup_cold, 2),
+        "host_cell_stages": stages,
+        "any_switches": bool(any(r["n_switches"] for r in rows)),
+        "cells": rows,
+        "parity_ok": not problems,
+        "parity_problems": problems,
+    }
+    emit("ctrl/host_loop", t_host.seconds * 1e6, f"n_cells={len(cells)}")
+    emit("ctrl/fused_grid", t_steady.seconds * 1e6,
+         f"speedup={speedup:.1f}x;with_compile={speedup_cold:.1f}x;"
+         f"traces={trace_delta}")
+    print(f"# fused control grid: {len(cells)} cells in {trace_delta} "
+          f"trace(s), {speedup:.1f}x over the host loop "
+          f"({t_host.seconds:.2f}s -> {t_steady.seconds:.2f}s steady, "
+          f"{t_first.seconds:.2f}s incl. compile); warm host cell "
+          f"stages {stages}")
+
+    if json_path:
+        import json
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+    if problems:
+        for p in problems:
+            print(f"# PARITY DEVIATION: {p}")
+        raise SystemExit("bench_ctrl: fused/host decision parity failed")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -15,7 +15,12 @@ The bench asserts fused<->legacy parity (identical served/shed sets,
 goodput equal to 1e-9, TTFT/E2E quantiles within rtol 1e-5) and **fails
 hard on deviation** — CI runs it as the fleet-path regression gate.  It
 also reports per-stage legacy timings (schedule / bin / scan / gather)
-so the JSON artifact tracks where the host loop spends its time.
+so the JSON artifact tracks where the host loop spends its time, and a
+before/after timing of the off-TPU deposit stage: the inline
+``.at[].add`` scatter ("ref", the default off TPU) vs the row-bucketed
+``segment_sum`` path (``deposit_impl="segments"``) over the sweep's
+real compacted chunk triples — the measurement that keeps the segments
+path opt-in.
 
     PYTHONPATH=src python -m benchmarks.run --fast --only fleet
 """
@@ -66,6 +71,56 @@ def _stage_times(sim: FleetSim, active: np.ndarray) -> dict:
         "bin_work_s": round(t_bin.seconds, 4),
         "scan_s": round(t_scan.seconds, 4),
         "gather_s": round(t_gather.seconds, 4),
+    }
+
+
+def _deposit_stage_times(sim: FleetSim, masks: np.ndarray) -> dict:
+    """Before/after wall time of the fused deposit stage off TPU.
+
+    Rebuilds the sweep's compacted chunk table exactly as ``_launch``
+    does (the iteration-1 static bins), then times the inline
+    scatter-add ("ref" — the off-TPU default) against the row-bucketed
+    ``segment_sum`` path ("segments") on the identical COO triples.
+    Both run under x64 like the fused launch itself.
+    """
+    from jax.experimental import enable_x64
+
+    from repro.kernels import ops as kernel_ops
+
+    F = masks.shape[0]
+    T, SR = sim.n_bins, sim.n_rows
+    f_id, cid = np.nonzero(masks[:, sim._f_req])
+    fprow = (f_id.astype(np.int32) * SR
+             + sim._f_rowc[cid].astype(np.int32))
+    bins = sim._f_bins0[cid]
+    vals = sim._f_work[cid] * sim._f_fin0[cid]
+    with enable_x64():
+        rows_d = jnp.asarray(fprow)
+        bins_d = jnp.asarray(bins.astype(np.int64))
+        vals_d = jnp.asarray(vals)
+        flat = rows_d.astype(jnp.int64) * T + bins_d
+
+        @jax.jit
+        def ref_scat(fl, v):
+            return jnp.zeros(F * SR * T).at[fl].add(
+                v, mode="promise_in_bounds")
+
+        def seg_scat(r, b, v):
+            return kernel_ops.deposit_segments(r, b, v, F * SR, T)
+
+        t_ref = kernel_ops.timed_call(ref_scat, flat, vals_d)
+        t_seg = kernel_ops.timed_call(seg_scat, rows_d, bins_d, vals_d)
+        parity = bool(np.array_equal(
+            np.asarray(ref_scat(flat, vals_d)).reshape(F * SR, T),
+            np.asarray(seg_scat(rows_d, bins_d, vals_d))))
+    return {
+        "n_chunks": int(cid.size),
+        "n_rows": F * SR,
+        "n_bins": T,
+        "ref_s": round(t_ref, 4),
+        "segments_s": round(t_seg, 4),
+        "speedup": round(t_ref / max(t_seg, 1e-9), 2),
+        "bitwise_ok": parity,
     }
 
 
@@ -122,12 +177,15 @@ def run(fast: bool = True, json_path: str | None = None) -> dict:
     with Timer() as t_legacy:
         legacy = [sim.run_legacy(active=m) for m in masks]
     stages = _stage_times(sim, masks[-1])
+    deposit_stage = _deposit_stage_times(sim, masks)
     with Timer() as t_first:             # compile + launch
         fused = sim.run_many(masks)
     with Timer() as t_steady:            # cached compile, one launch
         fused = sim.run_many(masks)
 
     problems = _check_parity(legacy, fused)
+    if not deposit_stage["bitwise_ok"]:
+        problems.append("deposit segments path deviates from ref scatter")
     speedup = t_legacy.seconds / max(t_steady.seconds, 1e-9)
     speedup_cold = t_legacy.seconds / max(t_first.seconds, 1e-9)
     out = {
@@ -142,6 +200,7 @@ def run(fast: bool = True, json_path: str | None = None) -> dict:
         "speedup_steady": round(speedup, 2),
         "speedup_with_compile": round(speedup_cold, 2),
         "legacy_stages": stages,
+        "deposit_stage": deposit_stage,
         "parity_ok": not problems,
         "parity_problems": problems,
     }
@@ -152,6 +211,11 @@ def run(fast: bool = True, json_path: str | None = None) -> dict:
     print(f"# fused fleet sweep: {speedup:.1f}x over the legacy loop "
           f"({t_legacy.seconds:.2f}s -> {t_steady.seconds:.2f}s steady, "
           f"{t_first.seconds:.2f}s incl. compile); legacy stages {stages}")
+    print(f"# deposit stage (off-TPU scatter relief): "
+          f"ref {deposit_stage['ref_s']}s -> segments "
+          f"{deposit_stage['segments_s']}s "
+          f"({deposit_stage['speedup']}x, "
+          f"bitwise_ok={deposit_stage['bitwise_ok']})")
 
     if json_path:
         import json

@@ -13,11 +13,16 @@ its two knobs —
 
 and every point lands on a goodput vs p99-TTFT frontier next to the
 static candidates (which ride along in the same fleet sweep, common
-random numbers).  A ``periodic`` (backlog-blind) point isolates what
-the live backlog signal buys.  The headline check is the PR's
-acceptance criterion: backlog-driven replanning beats the best static
-plan on goodput at matched (no worse) p99 TTFT under both scenarios,
-storm phases combined.  CI uploads ``BENCH_replan.json``.
+random numbers).  The whole cadence x budget grid runs as **one fused
+control-grid launch per scenario phase**
+(:func:`~repro.traffic.replan.replan_traffic_fused` with the
+``cadences`` / ``mig_weights`` axes — the joint control plane batches
+the knob grid along the leading device axis) instead of the old
+per-cell host-controller loop.  A ``periodic`` (backlog-blind) point
+isolates what the live backlog signal buys.  The headline check is the
+PR's acceptance criterion: backlog-driven replanning beats the best
+static plan on goodput at matched (no worse) p99 TTFT under both
+scenarios, storm phases combined.  CI uploads ``BENCH_replan.json``.
 
     PYTHONPATH=src python -m benchmarks.run --fast --only replan
 """
@@ -30,8 +35,9 @@ import numpy as np
 from repro.core import (ActivationModel, ComputeConfig, Constellation,
                         ConstellationConfig, LinkConfig, MoEWorkload,
                         baseline_plans, sample_topology)
-from repro.traffic import (ReplanConfig, build_ground_segment, format_table,
-                           get_scenario, run_scenario)
+from repro.traffic import (ReplanConfig, apply_failure_storm,
+                           build_ground_segment, format_table, get_scenario,
+                           replan_traffic_fused)
 
 from .common import Timer, emit
 
@@ -69,11 +75,21 @@ def _scenario(name: str, fast: bool):
                       else None))
 
 
-def _phases(out):
-    """(tag, TrafficResult, ReplanReport|None) per phase of an outcome."""
-    phases = [("main", out.result, out.replan)]
-    if out.post_failure is not None:
-        phases.append(("post", out.post_failure, out.post_replan))
+def _phase_inputs(sc, plans, activ, rng, n_stations):
+    """(tag, candidate pool, requests) per phase, mirroring
+    ``run_scenario``'s storm split (requests drawn first, then the storm,
+    so the rng stream matches the scenario runner's)."""
+    requests = sc.requests(rng, n_stations, rate_scale=RATE_SCALE)
+    if sc.failure_at_s is None:
+        return [("main", plans, requests)]
+    pre = requests.subset(requests.arrival_s < sc.failure_at_s)
+    post = requests.subset(requests.arrival_s >= sc.failure_at_s)
+    storm = apply_failure_storm(plans, activ, rng,
+                                failure_frac=sc.failure_frac,
+                                bytes_per_expert=1e6)
+    phases = [("main", plans, pre)]
+    if post.n_requests:
+        phases.append(("post", storm.degraded_plans, post))
     return phases
 
 
@@ -87,26 +103,25 @@ def _combined(rows_by_phase: list[dict]) -> tuple[float, float]:
     return tok / span if span else 0.0, max(p99s) if p99s else float("nan")
 
 
-def _collect(out, policy: str, knobs: dict) -> list[dict]:
-    """Flatten one scenario outcome into frontier rows (replan row and
-    every static candidate, per phase)."""
+def _collect(tag, res, rep, policy: str, knobs: dict) -> list[dict]:
+    """Flatten one grid cell into frontier rows (replan row and every
+    static candidate of the cell's common-random-numbers sweep)."""
     rows = []
-    for tag, res, rep in _phases(out):
-        for p in res.plans:
-            is_replan = p.plan_name.startswith("replan/")
-            rows.append({
-                "policy": policy if is_replan else "static",
-                **(knobs if is_replan else
-                   {k: None for k in knobs}),
-                "phase": tag,
-                "plan": p.plan_name,
-                "goodput_tok_s": round(p.goodput_tok_s, 3),
-                "ttft_p99_s": round(p.quantile("ttft", 0.99), 3),
-                "drop_rate": round(p.drop_rate, 4),
-                "span_s": round(p.span_s, 3),
-                "migration_mb": round(p.migration_bytes / 1e6, 3),
-                "switches": rep.n_switches if (is_replan and rep) else 0,
-            })
+    for p in res.plans:
+        is_replan = p.plan_name.startswith("replan/")
+        rows.append({
+            "policy": policy if is_replan else "static",
+            **(knobs if is_replan else
+               {k: None for k in knobs}),
+            "phase": tag,
+            "plan": p.plan_name,
+            "goodput_tok_s": round(p.goodput_tok_s, 3),
+            "ttft_p99_s": round(p.quantile("ttft", 0.99), 3),
+            "drop_rate": round(p.drop_rate, 4),
+            "span_s": round(p.span_s, 3),
+            "migration_mb": round(p.migration_bytes / 1e6, 3),
+            "switches": rep.n_switches if (is_replan and rep) else 0,
+        })
     return rows
 
 
@@ -121,29 +136,39 @@ def run(fast: bool = True, json_path: str | None = None) -> dict:
 
     out: dict = {"fast": fast, "rate_scale": RATE_SCALE,
                  "candidates": [p.name for p in plans],
-                 "cadences": list(cadences), "mig_weights": list(weights)}
+                 "cadences": list(cadences), "mig_weights": list(weights),
+                 "grid_cells_per_launch": len(cadences) * len(weights)}
     all_rows: list[dict] = []
     headline = {}
+    slot_period = con.cfg.orbital_period_s / topo.n_slots
     for name in ("regional-hotspot-replan", "failure-storm-replan"):
-        sc0 = _scenario(name, fast)
+        sc = _scenario(name, fast)
+        qcfg = dataclasses.replace(sc.queue_config(slot_period),
+                                   migration_bytes_per_expert=1e6)
+        rng = np.random.default_rng(11)
+        phases = _phase_inputs(sc, plans, activ, rng, ground.n_stations)
         rows: list[dict] = []
 
-        def run_one(rcfg, policy, knobs, sc0=sc0, rows=rows):
-            sc = dataclasses.replace(sc0, replan=rcfg)
-            res = run_scenario(sc, plans, topo, activ, wl, comp,
-                               np.random.default_rng(11), ground=ground,
-                               constellation=con, rate_scale=RATE_SCALE)
-            rows += _collect(res, policy, knobs)
-
         with Timer() as t:
-            for cad in cadences:
-                for w in weights:
-                    run_one(ReplanConfig(mode="backlog", period_slots=cad,
-                                         migration_weight_s_per_mb=w),
-                            "backlog", {"cadence": cad, "mig_weight": w})
-            # Backlog-blind control point: what the live signal buys.
-            run_one(ReplanConfig(mode="periodic"), "periodic",
-                    {"cadence": 1, "mig_weight": 0.01})
+            for tag, phase_plans, phase_req in phases:
+                # The whole cadence x budget grid: ONE fused control
+                # launch, cells cadence-major along the device axis.
+                cells = replan_traffic_fused(
+                    phase_plans, topo, activ, wl, comp, phase_req, rng,
+                    ReplanConfig(mode="backlog"), qcfg, ground=ground,
+                    cadences=list(cadences), mig_weights=list(weights))
+                for ci, cad in enumerate(cadences):
+                    for wi, w in enumerate(weights):
+                        cell = cells[ci * len(weights) + wi]
+                        rows += _collect(tag, cell.result, cell.report,
+                                         "backlog",
+                                         {"cadence": cad, "mig_weight": w})
+                # Backlog-blind control point: what the live signal buys.
+                per = replan_traffic_fused(
+                    phase_plans, topo, activ, wl, comp, phase_req, rng,
+                    ReplanConfig(mode="periodic"), qcfg, ground=ground)
+                rows += _collect(tag, per.result, per.report, "periodic",
+                                 {"cadence": 1, "mig_weight": 0.01})
 
         # Acceptance: best backlog point's combined goodput must beat the
         # best static candidate's at matched (no worse) p99 TTFT.

@@ -67,10 +67,11 @@ def main() -> None:
                   file=sys.stderr)
 
     from . import (bench_admission, bench_batching, bench_calibration,
-                   bench_engine, bench_fig6, bench_fig7, bench_fleet,
-                   bench_kernels, bench_linkstate, bench_multi_expert,
-                   bench_obs, bench_placement, bench_replan,
-                   bench_roofline, bench_table2, bench_traffic)
+                   bench_ctrl, bench_engine, bench_fig6, bench_fig7,
+                   bench_fleet, bench_kernels, bench_linkstate,
+                   bench_multi_expert, bench_obs, bench_placement,
+                   bench_replan, bench_roofline, bench_table2,
+                   bench_traffic)
 
     n_tok = 120 if args.fast else 400
     suite = {
@@ -86,6 +87,8 @@ def main() -> None:
                      lambda: bench_batching.run(fast=args.fast)),
         "replan": (bench_replan,
                    lambda: bench_replan.run(fast=args.fast)),
+        "ctrl": (bench_ctrl,
+                 lambda: bench_ctrl.run(fast=args.fast)),
         "fleet": (bench_fleet,
                   lambda: bench_fleet.run(fast=args.fast)),
         "table2": (bench_table2, lambda: bench_table2.run(

@@ -85,6 +85,45 @@ def migration_between(old_plan, new_plan, bytes_per_expert: float,
     )
 
 
+def migration_matrix(plans: list, bytes_per_expert: float,
+                     n_stations: int) -> tuple[np.ndarray, np.ndarray]:
+    """All-pairs migration accounting for a candidate pool.
+
+    The on-device re-placement controller decides plan switches inside
+    one fused launch, so the per-switch quantities —
+    :func:`migration_between` applied to every ordered (incumbent,
+    successor) pair — must be precomputed as dense tables it can gather
+    from.  Entry [i, j] prices the switch plans[i] -> plans[j] with
+    exactly the walk's arithmetic (``n_moved * bytes_per_expert`` in one
+    float64 product; diagonal entries are zero).
+
+    Args:
+        plans: Candidate pool (shared (n_layers, n_experts)).
+        bytes_per_expert: Weight bytes one moved expert drags.
+        n_stations: Satellite count V (the destination-count axis).
+
+    Returns:
+        ``(bytes_mat, dest_count)``: bytes_mat is (C, C) float64 bytes
+        moved per ordered pair; dest_count is (C, C, V) float64 — how
+        many moved experts land on each destination satellite (the
+        per-boundary occupancy multiplier for the migration background
+        load).
+    """
+    C = len(plans)
+    bytes_mat = np.zeros((C, C))
+    dest_count = np.zeros((C, C, n_stations))
+    for i in range(C):
+        for j in range(C):
+            if i == j:
+                continue
+            mig = migration_between(plans[i], plans[j], bytes_per_expert)
+            bytes_mat[i, j] = mig.bytes_moved
+            if mig.n_moved:
+                dest_count[i, j] = np.bincount(mig.new_sats,
+                                               minlength=n_stations)
+    return bytes_mat, dest_count
+
+
 @dataclasses.dataclass
 class PlanSchedule:
     """A per-topology-slot plan sequence with migration edges.

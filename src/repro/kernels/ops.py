@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from .decode_attn import decode_attention as _decode_attention
 from .deposit import deposit as _deposit
+from .deposit import deposit_segments as _deposit_segments
 from .moe_gmm import gmm as _gmm
 
 
@@ -68,6 +69,19 @@ def deposit(rows: jnp.ndarray, cols: jnp.ndarray, vals: jnp.ndarray,
         interpret = not on_tpu()
     return _deposit(rows, cols, vals, n_rows, n_cols, block_r=block_r,
                     block_c=block_c, block_t=block_t, interpret=interpret)
+
+
+def deposit_segments(rows: jnp.ndarray, cols: jnp.ndarray,
+                     vals: jnp.ndarray, n_rows: int, n_cols: int, *,
+                     bucketed: bool = True) -> jnp.ndarray:
+    """Row-bucketed segment-sum deposit (non-TPU scatter relief).
+
+    Bitwise identical to ``repro.kernels.ref.deposit_ref``; the fused
+    fleet simulator's opt-in off-TPU deposit (``deposit_impl="segments"``,
+    timed against the inline scatter by ``bench_fleet``).
+    """
+    return _deposit_segments(rows, cols, vals, n_rows, n_cols,
+                             bucketed=bucketed)
 
 
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

@@ -110,10 +110,13 @@ def main(argv=None) -> dict:
     ap.add_argument("--traffic", default=None, metavar="SCENARIO",
                     help="request-level fleet simulation under a named "
                          "repro.traffic scenario (implies --space-sim)")
-    ap.add_argument("--admission", default=None, choices=["static", "aimd"],
+    ap.add_argument("--admission", default=None,
+                    choices=["static", "aimd", "pid"],
                     help="admission policy for --traffic: 'static' forces "
                          "the KV-slot cap (--kv-slots), 'aimd' switches to "
-                         "the latency-target controller with gateway retry")
+                         "the latency-target controller with gateway retry, "
+                         "'pid' swaps in the PID cell on the same qhat "
+                         "signal")
     ap.add_argument("--ttft-target", type=float, default=30.0,
                     help="TTFT target (s) the aimd admission controller "
                          "defends (with --admission aimd)")
@@ -128,6 +131,13 @@ def main(argv=None) -> dict:
                          "topology slot, 'backlog' additionally inflates "
                          "scores with the live per-satellite backlog "
                          "(adds a replan/<mode> row to the table)")
+    ap.add_argument("--ctrl", default="host", choices=["host", "fused"],
+                    help="controller implementation for --replan "
+                         "scenarios: 'host' walks the decide law round "
+                         "by round, 'fused' runs the joint "
+                         "replan+admission decide loop in one device "
+                         "launch (same decisions; the exported trace "
+                         "gains the joint decision-event channel)")
     ap.add_argument("--rate-scale", type=float, default=1.0,
                     help="multiply the --traffic scenario's arrival "
                          "rates (overload knob for admission/replan "
@@ -256,10 +266,11 @@ def main(argv=None) -> dict:
                     replan=(None if args.replan == "off"
                             else ReplanConfig(mode=args.replan)),
                     slot_period_s=sc.slot_period_s or 60.0)
-            if args.admission == "aimd":
+            if args.admission in ("aimd", "pid"):
                 sc = dataclasses.replace(
                     sc, kv_slots=0,
                     admission=AdmissionConfig(
+                        policy=args.admission,
                         ttft_target_s=args.ttft_target),
                     slo=dataclasses.replace(sc.slo,
                                             ttft_s=args.ttft_target))
@@ -276,16 +287,26 @@ def main(argv=None) -> dict:
                 con, LinkConfig(token_dim=cfg.d_model),
                 min_elevation_deg=10.0)
             sim_kwargs = {}
+            fused_replan = args.ctrl == "fused" and sc.replan is not None
             if args.trace:
-                from repro.obs import ProbeConfig
-                sim_kwargs["probes"] = ProbeConfig()
+                if fused_replan:
+                    # The control launch records no probe rings (the
+                    # decide loop owns the device pass); the exported
+                    # trace carries the request spans plus the joint
+                    # decision-event channel instead.
+                    print("[trace] fused controller: probe rings off, "
+                          "joint decision channel on")
+                else:
+                    from repro.obs import ProbeConfig
+                    sim_kwargs["probes"] = ProbeConfig()
             if args.batching > 0:
                 from repro.traffic import BatchingConfig
                 sim_kwargs["batching"] = BatchingConfig(b_max=args.batching)
             res = run_scenario(sc, sweep, topo, activ, wl, comp,
                                np.random.default_rng(4), ground=ground,
                                constellation=con,
-                               rate_scale=args.rate_scale, **sim_kwargs)
+                               rate_scale=args.rate_scale, ctrl=args.ctrl,
+                               **sim_kwargs)
             rows = res.result.table(sc.slo, scenario=sc.name)
             if res.post_failure is not None:
                 rows += res.post_failure.table(

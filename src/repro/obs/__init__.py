@@ -20,16 +20,18 @@ Typical use::
     write_trace("out.json", log)          # open in ui.perfetto.dev
 """
 from .export import chrome_trace, write_trace
-from .probes import ProbeConfig, ProbeRecord, ring_bins
+from .probes import DecisionTrace, ProbeConfig, ProbeRecord, ring_bins
 from .recorder import (ControlEvent, FlightLog, RequestRecord,
                        aimd_events, build_flight_log, eq43_breakdown,
-                       replan_events, summarize_timeseries)
+                       joint_decision_events, replan_events,
+                       summarize_timeseries)
 from .schema import SCHEMA_VERSION, count_events, validate_trace
 
 __all__ = [
-    "ProbeConfig", "ProbeRecord", "ring_bins",
+    "DecisionTrace", "ProbeConfig", "ProbeRecord", "ring_bins",
     "ControlEvent", "FlightLog", "RequestRecord",
-    "aimd_events", "build_flight_log", "eq43_breakdown", "replan_events",
+    "aimd_events", "build_flight_log", "eq43_breakdown",
+    "joint_decision_events", "replan_events",
     "summarize_timeseries",
     "chrome_trace", "write_trace",
     "SCHEMA_VERSION", "count_events", "validate_trace",

@@ -135,7 +135,7 @@ def _satellite_events(log: FlightLog, max_sats: int) -> list[dict]:
 
 def _control_events(log: FlightLog) -> list[dict]:
     events: list[dict] = []
-    tids = {"aimd": 1, "replan": 2}
+    tids = {"aimd": 1, "replan": 2, "joint": 3}
     for ev in log.events:
         events.append({
             "name": ev.name, "cat": ev.kind, "ph": "i", "s": "g",
@@ -168,6 +168,7 @@ def chrome_trace(log: FlightLog, max_requests: int = 200,
         _meta(PID_CONTROL, "control plane"),
         _meta(PID_CONTROL, "", tid=1, thread="admission (AIMD)"),
         _meta(PID_CONTROL, "", tid=2, thread="replan"),
+        _meta(PID_CONTROL, "", tid=3, thread="joint control"),
     ]
     events += _request_events(log, max_requests)
     events += _satellite_events(log, max_sats)

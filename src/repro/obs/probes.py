@@ -33,6 +33,54 @@ ROW_CHANNELS = ("backlog", "util", "drops")
 BATCH_CHANNEL = "batch_b"
 #: Extra channels recorded under AIMD admission.
 ADMISSION_CHANNELS = ("qhat", "admit", "win")
+#: Decision-event channel emitted by the joint control plane — one
+#: entry per decide boundary of the fused replan walk.
+DECISION_CHANNELS = ("scores", "chosen", "switched", "mig_bytes")
+
+
+@dataclasses.dataclass
+class DecisionTrace:
+    """The joint controller's decision-event channel, host-unwrapped.
+
+    One entry per decide boundary of one fused control launch (the
+    replan walk of :meth:`repro.traffic.queueing.FleetSim
+    .run_replan_grid`) — the device telemetry of the decide loop, not a
+    host re-derivation, so an exported trace shows exactly what the
+    launch chose.  D decisions, C candidates.
+
+    Attributes:
+        period_s: Wall-clock seconds per slot boundary.
+        boundaries: (D,) boundary index k of each decision (t = k *
+            ``period_s``).
+        slots: (D,) topology slot entered at each boundary.
+        scores: (D, C) backlog-inflated predicted cost per candidate.
+        chosen: (D,) candidate index in effect after each boundary.
+        switched: (D,) bool — the boundary changed the incumbent.
+        migration_bytes: (D,) bytes the switch moved (0.0 on holds).
+    """
+
+    period_s: float
+    boundaries: np.ndarray
+    slots: np.ndarray
+    scores: np.ndarray
+    chosen: np.ndarray
+    switched: np.ndarray
+    migration_bytes: np.ndarray
+
+    @property
+    def n_decisions(self) -> int:
+        """Decide boundaries recorded (D)."""
+        return int(self.boundaries.size)
+
+    @property
+    def n_switches(self) -> int:
+        """Boundaries whose decision changed the incumbent plan."""
+        return int(self.switched.sum())
+
+    @property
+    def t_s(self) -> np.ndarray:
+        """(D,) wall-clock seconds of each decision's boundary."""
+        return self.boundaries.astype(np.float64) * self.period_s
 
 
 @dataclasses.dataclass(frozen=True)

@@ -106,7 +106,7 @@ class ControlEvent:
     """One control-plane instant (AIMD step, replan decision, ...)."""
 
     t_s: float
-    kind: str                  # "aimd" | "replan"
+    kind: str                  # "aimd" | "replan" | "joint"
     name: str                  # short display label
     plan: str                  # plan/schedule name the event belongs to
     args: dict                 # numeric/string payload for the exporter
@@ -196,6 +196,41 @@ def replan_events(report: "ReplanReport",
     return events
 
 
+def joint_decision_events(report: "ReplanReport") -> list[ControlEvent]:
+    """The joint control plane's decision-event channel as instants.
+
+    Emitted only for reports carrying a
+    :class:`~repro.obs.probes.DecisionTrace` (the fused grid path):
+    one ``joint`` instant per decide boundary, with the full
+    per-candidate score vector the on-device decide loop compared —
+    the host controller's ``replan`` instants only carry the winner.
+    """
+    trace = getattr(report, "trace", None)
+    if trace is None:
+        return []
+    names = [getattr(c, "name", f"cand{i}")
+             for i, c in enumerate(report.candidates)]
+    events: list[ControlEvent] = []
+    t = trace.t_s
+    for d in range(trace.n_decisions):
+        switched = bool(trace.switched[d])
+        events.append(ControlEvent(
+            t_s=float(t[d]),
+            kind="joint",
+            name="joint switch" if switched else "joint decide",
+            plan=report.schedule.name,
+            args={
+                "boundary": int(trace.boundaries[d]),
+                "slot": int(trace.slots[d]),
+                "chosen": names[int(trace.chosen[d])],
+                "switched": switched,
+                "migration_bytes": float(trace.migration_bytes[d]),
+                "scores_s": [round(float(s), 6)
+                             for s in trace.scores[d]],
+            }))
+    return events
+
+
 def build_flight_log(
     sim: "FleetSim",
     result: "TrafficResult",
@@ -223,6 +258,20 @@ def build_flight_log(
     pt = result.plans[p]
     req = sim.requests
     probes = getattr(sim, "last_probes", None)
+    # Per-request row into the simulator's per-plan tables.  A fused
+    # joint-control outcome stitches the decided schedule row onto the
+    # *probe* simulator's result, so the schedule row has no row of its
+    # own there — its per-request values are gathers of the decided
+    # candidate's row (the same identity run_replan_grid uses).
+    n_sim_rows = np.asarray(sim.ingress_extra).shape[0]
+    row_of_req = np.full(req.n_requests, p, dtype=np.int64)
+    if p >= n_sim_rows:
+        if replan is None:
+            raise ValueError(
+                f"plan row {p} not in the simulator ({n_sim_rows} rows) "
+                "and no replan report to resolve it from")
+        row_of_req = np.asarray(replan.schedule.slot_plan)[
+            np.asarray(sim.slots)[:req.n_requests]]
     retries = pt.retries if pt.retries is not None \
         else np.zeros(req.n_requests, dtype=np.int64)
     shed = pt.shed if pt.shed is not None \
@@ -232,10 +281,11 @@ def build_flight_log(
     batching_on = probes is not None and probes.batch_b is not None
     probe_t = probes.t_s if probes is not None else None
     for r in range(req.n_requests):
+        pr = int(row_of_req[r])
         gw_wait = ex_wait = None
         if probes is not None and probes.gw_wait_s is not None:
-            gw_wait = probes.gw_wait_s[sweep, p, r]
-            ex_wait = probes.ex_wait_s[sweep, p, r]
+            gw_wait = probes.gw_wait_s[sweep, pr, r]
+            ex_wait = probes.ex_wait_s[sweep, pr, r]
         batch_b = float("nan")
         if batching_on and pt.served[r] and np.isfinite(pt.e2e_s[r]):
             # Per-request batch span: mean B_eff over the recorded bins
@@ -245,9 +295,9 @@ def build_flight_log(
             hi = req.arrival_s[r] + pt.e2e_s[r]
             m = (probe_t >= lo) & (probe_t <= hi)
             if m.any():
-                sats = sim.gateways_slot[p, sim.slots[r]]      # (L,)
+                sats = sim.gateways_slot[pr, sim.slots[r]]     # (L,)
                 batch_b = float(
-                    probes.batch_b[m][:, sweep, p][:, sats].mean())
+                    probes.batch_b[m][:, sweep, pr][:, sats].mean())
         records.append(RequestRecord(
             rid=r,
             station=int(req.station[r]),
@@ -258,11 +308,11 @@ def build_flight_log(
             served=bool(pt.served[r]),
             shed=bool(shed[r]),
             retries=int(retries[r]),
-            ingress_s=float(sim.ingress_extra[p, r]),
+            ingress_s=float(sim.ingress_extra[pr, r]),
             ttft_s=float(pt.ttft_s[r]),
             tpot_s=float(pt.tpot_s[r]),
             e2e_s=float(pt.e2e_s[r]),
-            layer_zero_s=np.asarray(sim.eff_layer[p, r]),
+            layer_zero_s=np.asarray(sim.eff_layer[pr, r]),
             layer_gw_wait_s=gw_wait,
             layer_ex_wait_s=ex_wait,
             batch_b=batch_b,
@@ -272,6 +322,7 @@ def build_flight_log(
     events = aimd_events(probes, names, sweep=sweep)
     if replan is not None:
         events += replan_events(replan, sim.qcfg.slot_period_s)
+        events += joint_decision_events(replan)
     events.sort(key=lambda e: e.t_s)
     return FlightLog(plan_names=names, plan=p, dt_s=result.dt_s,
                      n_bins=result.n_bins, requests=records,

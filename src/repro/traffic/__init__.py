@@ -31,7 +31,8 @@ from .queueing import (FleetSim, QueueConfig, simulate_traffic,
                        station_waiting_times)
 from .replan import (ReplanConfig, ReplanDecision, ReplanOutcome,
                      ReplanReport, backlog_penalty_s, build_replan_schedule,
-                     replan_traffic)
+                     replan_base_scores, replan_traffic,
+                     replan_traffic_fused)
 from .requests import (RequestBatch, diurnal_rate, hotspot_rate,
                        poisson_arrivals, sample_decode_lens,
                        sample_prompt_lens, sample_requests, thinned_arrivals)
@@ -50,7 +51,8 @@ __all__ = [
     "format_table", "saturation_sweep",
     "FleetSim", "QueueConfig", "simulate_traffic", "station_waiting_times",
     "ReplanConfig", "ReplanDecision", "ReplanOutcome", "ReplanReport",
-    "backlog_penalty_s", "build_replan_schedule", "replan_traffic",
+    "backlog_penalty_s", "build_replan_schedule", "replan_base_scores",
+    "replan_traffic", "replan_traffic_fused",
     "RequestBatch", "diurnal_rate", "hotspot_rate", "poisson_arrivals",
     "sample_decode_lens", "sample_prompt_lens", "sample_requests",
     "thinned_arrivals",

@@ -48,6 +48,25 @@ schedule<->queue fixed-point iterations from the emitted admission
 trace (monotone outer iteration: the trace is accumulated as a running
 minimum, so the shed set only grows and the fixed point converges from
 the congested side).
+
+PID variant (pinned)
+--------------------
+``policy="pid"`` replaces the AIMD cell with a PID step on the
+normalized latency *headroom*.  At each control-interval close::
+
+    err      = min((ttft_target - ttft_hat) / ttft_target,
+                   (tpot_target - tpot_hat) / tpot_target)   # (P, G)
+    integ    = clip(integ + err, -_PID_WINDUP, _PID_WINDUP)
+    delta    = kp * err + ki * integ + kd * (err - prev_err)
+    admit    = clip(admit + gain[p] * delta, admit_min, 1.0)
+
+An infinite target contributes +inf headroom (the term drops out, same
+as AIMD's never-breaching comparison).  ``gain`` is the per-plan
+``gain_scale`` vector (ones when unset) — the joint control plane uses
+it to give each placement candidate its own loop stiffness while the
+error signal stays the shared ``qhat`` critical-path estimate.  The
+integral clamp is the standard anti-windup guard: a long breach cannot
+bank so much deficit that recovery overshoots.
 """
 from __future__ import annotations
 
@@ -57,6 +76,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+#: Anti-windup clamp on the PID integral term (units of normalized
+#: headroom-intervals); pinned so the fused and host scans agree bitwise.
+_PID_WINDUP = 10.0
+
 
 @dataclasses.dataclass(frozen=True)
 class AdmissionConfig:
@@ -64,6 +87,7 @@ class AdmissionConfig:
 
     Attributes:
         policy: ``"aimd"`` enables the closed-loop controller;
+            ``"pid"`` swaps in the PID cell (module docstring);
             ``"static"`` keeps the legacy ``kv_slots`` cap (the
             controller machinery is bypassed entirely).
         ttft_target_s: TTFT latency target the controller defends.
@@ -88,6 +112,14 @@ class AdmissionConfig:
             before it is shed.
         retry_backoff_s: Delay between consecutive attempts, paid in
             TTFT/E2E by retried requests.
+        kp: PID proportional gain on the normalized headroom
+            (``policy="pid"`` only).
+        ki: PID integral gain (anti-windup clamped at ``_PID_WINDUP``).
+        kd: PID derivative gain.
+        gain_scale: Optional per-plan multipliers on the PID output —
+            one entry per plan of the sweep, letting each placement
+            candidate run its own loop stiffness over the shared qhat
+            signal.  ``None`` means ones.
     """
 
     policy: str = "aimd"
@@ -101,11 +133,23 @@ class AdmissionConfig:
     reference_quantile: float = 0.99
     max_retries: int = 2
     retry_backoff_s: float = 1.0
+    kp: float = 0.4
+    ki: float = 0.05
+    kd: float = 0.0
+    gain_scale: tuple | None = None
 
     def __post_init__(self):
         """Validate the law's parameters."""
-        if self.policy not in ("aimd", "static"):
+        if self.policy not in ("aimd", "pid", "static"):
             raise ValueError(f"unknown admission policy {self.policy!r}")
+        if self.policy == "pid":
+            if self.kp <= 0.0:
+                raise ValueError("kp must be positive")
+            if self.ki < 0.0 or self.kd < 0.0:
+                raise ValueError("ki/kd must be non-negative")
+            if self.gain_scale is not None \
+                    and any(g <= 0.0 for g in self.gain_scale):
+                raise ValueError("gain_scale entries must be positive")
         if not 0.0 < self.decrease < 1.0:
             raise ValueError("decrease must be in (0, 1)")
         if self.increase <= 0.0:
@@ -128,7 +172,7 @@ class AdmissionConfig:
 @jax.jit
 def admission_queue_scan(work, cap, dt, ttft0, tpot0, ctrl, gw_idx, exp_idx,
                          admit0, ttft_target, tpot_target, increase,
-                         decrease, admit_min, batching=None):
+                         decrease, admit_min, batching=None, pid=None):
     """Fleet backlog scan with the AIMD controller in the carry.
 
     The backlog recursion is identical to
@@ -167,6 +211,10 @@ def admission_queue_scan(work, cap, dt, ttft0, tpot0, ctrl, gw_idx, exp_idx,
             (:func:`repro.traffic.batching.batched_effective_work`)
             rewrites ``work`` before the scan; ``None`` (a distinct
             trace) leaves the FIFO kernel untouched.
+        pid: Optional PID parameter pytree —
+            ``kp``/``ki``/``kd`` scalars and ``gain`` (P,) per-plan
+            multipliers.  ``None`` (a distinct trace) keeps the AIMD
+            cell byte-identical to the pre-PID scan.
 
     Returns:
         (wait, dropped, admit): wait/dropped are (P, S, T) exactly as in
@@ -182,7 +230,10 @@ def admission_queue_scan(work, cap, dt, ttft0, tpot0, ctrl, gw_idx, exp_idx,
     n_layers = gw_idx.shape[2]
 
     def _step(carry, xs):
-        backlog, admit, win = carry
+        if pid is None:
+            backlog, admit, win = carry
+        else:
+            backlog, admit, win, integ, prev = carry
         w_t, is_ctrl, gw_t, exp_t = xs
         wait = backlog
         total = backlog + w_t
@@ -194,19 +245,48 @@ def admission_queue_scan(work, cap, dt, ttft0, tpot0, ctrl, gw_idx, exp_idx,
         exp = jnp.take_along_axis(backlog, exp_t, axis=1) \
             .reshape(p, n_layers, -1).max(axis=2).sum(axis=1)
         win = jnp.maximum(win, gw + exp)                         # (P,)
-        over = ((ttft0 + win[:, None]) > ttft_target) \
-            | ((tpot0 + win) > tpot_target)[:, None]             # (P, G)
-        stepped = jnp.where(over,
-                            jnp.maximum(admit * decrease, admit_min),
-                            jnp.minimum(admit + increase, 1.0))
+        if pid is None:
+            over = ((ttft0 + win[:, None]) > ttft_target) \
+                | ((tpot0 + win) > tpot_target)[:, None]         # (P, G)
+            stepped = jnp.where(over,
+                                jnp.maximum(admit * decrease, admit_min),
+                                jnp.minimum(admit + increase, 1.0))
+            admit_next = jnp.where(is_ctrl, stepped, admit)
+            win_next = jnp.where(is_ctrl, 0.0, win)
+            return ((backlog, admit_next, win_next),
+                    (wait, dropped, admit))
+        # PID cell (module docstring): normalized headroom error; an
+        # infinite target contributes +inf headroom so its term drops.
+        h_t = jnp.where(jnp.isfinite(ttft_target),
+                        (ttft_target - (ttft0 + win[:, None]))
+                        / ttft_target, jnp.inf)                  # (P, G)
+        h_p = jnp.where(jnp.isfinite(tpot_target),
+                        (tpot_target - (tpot0 + win))
+                        / tpot_target, jnp.inf)[:, None]         # (P, 1)
+        err = jnp.minimum(h_t, h_p)                              # (P, G)
+        integ2 = jnp.minimum(jnp.maximum(integ + err, -_PID_WINDUP),
+                             _PID_WINDUP)
+        delta = (pid["kp"] * err + pid["ki"] * integ2
+                 + pid["kd"] * (err - prev))
+        stepped = jnp.minimum(
+            jnp.maximum(admit + pid["gain"][:, None] * delta, admit_min),
+            1.0)
         admit_next = jnp.where(is_ctrl, stepped, admit)
         win_next = jnp.where(is_ctrl, 0.0, win)
-        return (backlog, admit_next, win_next), (wait, dropped, admit)
+        return ((backlog, admit_next, win_next,
+                 jnp.where(is_ctrl, integ2, integ),
+                 jnp.where(is_ctrl, err, prev)),
+                (wait, dropped, admit))
 
     backlog0 = jnp.zeros((p, s), dtype=work.dtype)
     win0 = jnp.zeros((p,), dtype=work.dtype)
+    carry0 = (backlog0, jnp.asarray(admit0, dtype=work.dtype), win0)
+    if pid is not None:
+        n_gw = np.shape(ttft0)[1]
+        carry0 = carry0 + (jnp.zeros((p, n_gw), dtype=work.dtype),
+                           jnp.zeros((p, n_gw), dtype=work.dtype))
     _, (wait, dropped, admit) = jax.lax.scan(
-        _step, (backlog0, jnp.asarray(admit0, dtype=work.dtype), win0),
+        _step, carry0,
         (jnp.moveaxis(work, 2, 0), ctrl, gw_idx, exp_idx))
     return (jnp.moveaxis(wait, 0, 2), jnp.moveaxis(dropped, 0, 2),
             jnp.moveaxis(admit, 0, 2))

@@ -58,8 +58,10 @@ Two execution paths share that precompute:
 * the **fused device path** (``run`` / ``run_many``) — the whole
   schedule -> bin -> scan -> gather fixed point is one jitted
   ``lax.fori_loop`` (:func:`_fused_core`): the dense work tensor is
-  built on device by a scatter-add deposit
-  (:mod:`repro.kernels.deposit` on TPU, its jnp reference elsewhere),
+  built on device by a scatter-add deposit (:mod:`repro.kernels.deposit`:
+  the one-hot-matmul kernel on TPU, the jnp reference scatter elsewhere,
+  with a bitwise-identical row-bucketed ``segment_sum`` variant behind
+  ``deposit_impl="segments"``),
   lives time-major, and never crosses the host boundary between
   iterations.  ``run_many`` vmaps the same core over a
   thinning-fraction (or admission-target) axis, so an entire saturation
@@ -81,6 +83,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -89,15 +92,17 @@ from jax.experimental import enable_x64 as _x64
 
 from repro.core import (ScheduleBatch, evaluate_schedules,
                         schedule_ingress_offsets)
-from repro.obs.probes import ProbeConfig, ProbeRecord, make_buffers
+from repro.obs.probes import (DecisionTrace, ProbeConfig, ProbeRecord,
+                              make_buffers)
 from repro.kernels import ops as _kernel_ops
 from repro.core.activation import ActivationModel
 from repro.core.calibration import resolve_service_model
 from repro.core.latency import ComputeConfig, TopologySample
-from repro.core.schedule import as_schedule, slot_of_time
+from repro.core.schedule import (PlanSchedule, as_schedule,
+                                 migration_matrix, slot_of_time)
 from repro.core.workload import MoEWorkload
 
-from .admission import (AdmissionConfig, admission_queue_scan,
+from .admission import (_PID_WINDUP, AdmissionConfig, admission_queue_scan,
                         control_bin_flags, resolve_admission)
 from .batching import (BatchingConfig, batch_speedup_at,
                        batched_effective_work, effective_work_np,
@@ -303,9 +308,10 @@ FUSED_TRACE_COUNT = 0
 _CHUNK_BLOCK = 8192
 
 
-def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
-                pbuf, batch, n_iter, n_bins, n_rows, adm_on, use_pallas,
-                want_wait, probes, batch_window):
+def _fleet_fixed_point(consts, chunks, work0, work0_sum, ttft_target,
+                       tpot_target, pbuf, batch, n_iter, n_bins, n_rows,
+                       adm_on, deposit_mode, want_wait, probes,
+                       batch_window):
     """Single-launch fleet fixed point (the device half of ``FleetSim.run``).
 
     Rolls the legacy schedule -> bin -> scan -> gather iteration into one
@@ -364,8 +370,11 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
         n_bins: Static — T, the time-bin count.
         n_rows: Static — compacted queue-row count.
         adm_on: Static — run the AIMD admission regime.
-        use_pallas: Static — deposit via the Pallas kernel (TPU; f32
-            accumulation) instead of the jnp scatter-add reference.
+        deposit_mode: Static — ``"pallas"`` (the one-hot-matmul TPU
+            kernel; f32 accumulation), ``"segments"`` (row-bucketed
+            sorted ``segment_sum`` — the non-TPU scatter relief, bitwise
+            identical to the reference) or ``"ref"`` (the inline jnp
+            scatter-add).
         want_wait: Static — carry and return the final backlog trace
             (the re-placement controller's observation).
         pbuf: Probe ring buffers (:func:`repro.obs.probes.make_buffers`
@@ -404,13 +413,25 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
         ``want_wait`` — ``wait`` (T, F, rows) float32 — and iff
         ``probes`` the probe outputs described above.
     """
-    global FUSED_TRACE_COUNT
-    FUSED_TRACE_COUNT += 1
     q = consts
     first_tok, tok_req = q["first_tok"], q["tok_req"]
     F = ttft_target.shape[0]
     R = first_tok.shape[0]
-    P, M, L = q["eff_layer"].shape
+    # Consts arrive plan-leading (shared across the sweep) on the
+    # standard path and F-leading (per-sweep-entry gathers, the fused
+    # control plane's schedule-row evaluation) on the joint-controller
+    # path; ``lead`` gives the closures a broadcastable (F, P, ...) view
+    # either way, and the plan-leading branch traces exactly the
+    # pre-control-plane computation.
+    fb = q["eff_layer"].ndim == 4
+    if fb:
+        _, P, M, L = q["eff_layer"].shape
+    else:
+        P, M, L = q["eff_layer"].shape
+
+    def lead(x):
+        return x if fb else x[None]
+
     T, SR = n_bins, n_rows
     dt = q["dt"]
     cap32, dt32 = q["cap32"], q["dt32"]
@@ -451,8 +472,8 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
     def schedule(gw_wait, ex_max, start_pref):
         # jnp port of FleetSim._schedule + ._chain (identical math),
         # batched over the leading F axis.
-        lay_cost = q["eff_layer"][None] + gw_wait + ex_max
-        tok_total = q["tok_base"][None] + gw_wait.sum(3) + ex_max.sum(3)
+        lay_cost = lead(q["eff_layer"]) + gw_wait + ex_max
+        tok_total = lead(q["tok_base"]) + gw_wait.sum(3) + ex_max.sum(3)
         dec = tok_total[:, :, R:]
         cs = jnp.cumsum(dec, axis=2)
         excl = cs - dec
@@ -479,12 +500,19 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
         bins = jnp.minimum(b_ch + chunks["offs"], T - 1)
 
         def scat(vals):
-            if use_pallas:
+            if deposit_mode == "pallas":
                 # TPU: one-hot-matmul deposit kernel (f32 accumulation —
-                # TPUs have no f64; CPU CI parity runs the reference path).
+                # TPUs have no f64; CPU CI parity runs the f64 paths).
                 return _kernel_ops.deposit(
                     chunks["fprow"], bins.astype(jnp.int32),
                     vals.astype(f32), F * SR, T).astype(f64)
+            if deposit_mode == "segments":
+                # Non-TPU scatter relief: the chunk table is statically
+                # row-grouped, so the flat ids are row-bucketed and one
+                # stable sort feeds the sorted segment reduction —
+                # bitwise identical to the reference scatter.
+                return _kernel_ops.deposit_segments(
+                    chunks["fprow"], bins, vals, F * SR, T)
             # int64 flat index: F * rows * T can exceed 2^31 on large
             # worlds/sweeps (x64 is enabled for every fused launch).
             flat = chunks["fprow"].astype(jnp.int64) * T + bins
@@ -500,6 +528,11 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
         work = scat(vals).reshape(F, SR, T)
         if "mig_dense" in q:
             work = work + q["mig_dense"][None]
+        elif "mig_dense_f" in q:
+            # Joint-controller evaluation: the migration background load
+            # depends on the device-decided schedule, so it arrives as a
+            # traced (F, rows, T) plane instead of a shared const.
+            work = work + q["mig_dense_f"]
         if not batch:
             return work, work, None
         # Continuous batching (deposit-time scaling): the decode-work
@@ -563,68 +596,110 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
         # is byte-identical to the legacy scan.
         tt32 = ttft_target.astype(f32)[:, None, None]     # (F, 1, 1)
         tp32 = tpot_target.astype(f32)[:, None]           # (F, 1)
-        n_layers = q["gw_rows_bin"].shape[2]
+        n_layers = q["gw_rows_bin"].shape[-1]
+        pid_on = "pid_kp" in q        # static: AIMD trace byte-identical
 
-        def cell(backlog, admit, win, w_t, is_ctrl, gw_t, exp_t):
+        def cell(state, w_t, is_ctrl, gw_t, exp_t):
+            if pid_on:
+                backlog, admit, win, integ, prev = state
+            else:
+                backlog, admit, win = state
             wait = backlog
             offered = backlog + w_t
             backlog = jnp.maximum(jnp.minimum(offered, cap32) - dt32, 0.0)
-            gw = backlog[:, gw_t].sum(axis=2)                    # (F, P)
-            exp = backlog[:, exp_t] \
-                .reshape(F, P, n_layers, -1).max(axis=3).sum(axis=2)
+            if fb:
+                # F-leading station maps: gw_t (F, P, L), exp_t (F, P, LI).
+                fi = jnp.arange(F)[:, None, None]
+                gw = backlog[fi, gw_t].sum(axis=2)               # (F, P)
+                exp = backlog[fi, exp_t] \
+                    .reshape(F, P, n_layers, -1).max(axis=3).sum(axis=2)
+            else:
+                gw = backlog[:, gw_t].sum(axis=2)                # (F, P)
+                exp = backlog[:, exp_t] \
+                    .reshape(F, P, n_layers, -1).max(axis=3).sum(axis=2)
             win = jnp.maximum(win, gw + exp)
-            over = ((q["ttft0"][None] + win[..., None]) > tt32) \
-                | ((q["tpot0"][None] + win) > tp32)[..., None]   # (F,P,G)
-            stepped = jnp.where(
-                over,
-                jnp.maximum(admit * q["decrease"], q["admit_min"]),
-                jnp.minimum(admit + q["increase"], 1.0))
-            admit_next = jnp.where(is_ctrl, stepped, admit)
-            win_next = jnp.where(is_ctrl, 0.0, win)
-            return backlog, admit_next, win_next, wait, offered, gw + exp
+            if pid_on:
+                # PID cell (admission module docstring): same formula
+                # order as the host scan so the laws agree bitwise.
+                h_t = jnp.where(
+                    jnp.isfinite(tt32),
+                    (tt32 - (lead(q["ttft0"]) + win[..., None])) / tt32,
+                    jnp.inf)                                     # (F,P,G)
+                h_p = jnp.where(
+                    jnp.isfinite(tp32),
+                    (tp32 - (lead(q["tpot0"]) + win)) / tp32,
+                    jnp.inf)[..., None]                          # (F,P,1)
+                err = jnp.minimum(h_t, h_p)
+                integ2 = jnp.minimum(
+                    jnp.maximum(integ + err, -f32(_PID_WINDUP)),
+                    f32(_PID_WINDUP))
+                delta = (q["pid_kp"] * err + q["pid_ki"] * integ2
+                         + q["pid_kd"] * (err - prev))
+                stepped = jnp.minimum(
+                    jnp.maximum(admit + q["pid_gain"][None, :, None]
+                                * delta, q["admit_min"]), 1.0)
+                admit_next = jnp.where(is_ctrl, stepped, admit)
+                win_next = jnp.where(is_ctrl, 0.0, win)
+                nstate = (backlog, admit_next, win_next,
+                          jnp.where(is_ctrl, integ2, integ),
+                          jnp.where(is_ctrl, err, prev))
+            else:
+                over = ((lead(q["ttft0"]) + win[..., None]) > tt32) \
+                    | ((lead(q["tpot0"]) + win) > tp32)[..., None]
+                stepped = jnp.where(
+                    over,
+                    jnp.maximum(admit * q["decrease"], q["admit_min"]),
+                    jnp.minimum(admit + q["increase"], 1.0))
+                admit_next = jnp.where(is_ctrl, stepped, admit)
+                win_next = jnp.where(is_ctrl, 0.0, win)
+                nstate = (backlog, admit_next, win_next)
+            return nstate, wait, offered, gw + exp
 
-        n_gw = q["ttft0"].shape[1]
+        n_gw = q["ttft0"].shape[-1]
         carry0 = (jnp.zeros((F, SR), f32), jnp.ones((F, P, n_gw), f32),
                   jnp.zeros((F, P), f32))
+        if pid_on:
+            carry0 = carry0 + (jnp.zeros((F, P, n_gw), f32),
+                               jnp.zeros((F, P, n_gw), f32))
         if bufs is None:
-            def step(carry, xs):
-                backlog, admit, win = carry
+            def step(state, xs):
                 w_t, is_ctrl, gw_t, exp_t = xs
-                backlog, admit_next, win_next, wait, _, _ = cell(
-                    backlog, admit, win, w_t, is_ctrl, gw_t, exp_t)
-                return (backlog, admit_next, win_next), (wait, admit)
+                admit = state[1]
+                state, wait, _, _ = cell(state, w_t, is_ctrl, gw_t, exp_t)
+                return state, (wait, admit)
             _, (wait, admit) = jax.lax.scan(
                 step, carry0,
                 (work32, q["ctrl"], q["gw_rows_bin"], q["exp_rows_bin"]))
             return wait, admit             # (T, F, SR), (T, F, P, G)
 
         def step(carry, xs):
-            backlog, admit, win, pb = carry
+            state, pb = carry[:-1], carry[-1]
             if beff_t is None:
                 (w_t, is_ctrl, gw_t, exp_t, t), be = xs, None
             else:
                 w_t, is_ctrl, gw_t, exp_t, t, be = xs
-            backlog, admit_next, win_next, wait, offered, qhat = cell(
-                backlog, admit, win, w_t, is_ctrl, gw_t, exp_t)
+            admit = state[1]
+            state, wait, offered, qhat = cell(
+                state, w_t, is_ctrl, gw_t, exp_t)
             drop = jnp.maximum(offered - cap32, 0.0)
             pb = probe_write(pb, t, wait, w_t, drop, qhat=qhat,
-                             admit=admit_next, win=win_next, beff=be)
-            return (backlog, admit_next, win_next, pb), (wait, admit)
+                             admit=state[1], win=state[2], beff=be)
+            return state + (pb,), (wait, admit)
         xs = (work32, q["ctrl"], q["gw_rows_bin"], q["exp_rows_bin"],
               jnp.arange(T))
         if beff_t is not None:
             xs = xs + (beff_t,)
-        (_, _, _, bufs), (wait, admit) = jax.lax.scan(
+        out_carry, (wait, admit) = jax.lax.scan(
             step, carry0 + (bufs,), xs)
-        return wait, admit, bufs
+        return wait, admit, out_carry[-1]
 
     def gather(wait_t, work32, gw_b, gw_fin, ex_b, ex_fin):
         # jnp port of FleetSim._gather: wait read from the time-major
         # trace, work from the row-major plane; overload =
         # wait + work > cap is the legacy dropped > 0 flag.
         f_idx = jnp.arange(F)[:, None, None, None]
-        gw_rows = q["gw_rows"][None]                  # (1, P, M, L)
-        ex_rows = q["ex_rows"][None]                  # (1, P, M, L, K)
+        gw_rows = lead(q["gw_rows"])                  # (1|F, P, M, L)
+        ex_rows = lead(q["ex_rows"])                  # (1|F, P, M, L, K)
         w_g = wait_t[gw_b, f_idx, gw_rows]
         gw_wait = jnp.where(gw_fin, w_g, 0.0).astype(f64)
         gw_over = gw_fin & ((w_g + work32[f_idx, gw_rows, gw_b]) > cap32)
@@ -663,13 +738,13 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
             adm = jnp.transpose(
                 admit_floor[q["att_bin"], :, :, q["att_station"]],
                 (2, 3, 0, 1))                             # (F, P, A, R)
-            ok = (q["adm_u"][None, None] < adm) & q["att_feasible"][None]
+            ok = (q["adm_u"][None, None] < adm) & lead(q["att_feasible"])
             shed = ~ok.any(axis=2)                        # (F, P, R)
             retries = jnp.where(shed, 0, jnp.argmax(ok, axis=2))
+            att_x = q["att_extra"] if fb else jnp.broadcast_to(
+                q["att_extra"][None], (F,) + q["att_extra"].shape)
             ingress_extra = jnp.take_along_axis(
-                jnp.broadcast_to(q["att_extra"][None],
-                                 (F,) + q["att_extra"].shape),
-                retries[:, :, None, :], axis=2)[:, :, 0, :]
+                att_x, retries[:, :, None, :], axis=2)[:, :, 0, :]
         else:
             if not record:
                 wait_t = fleet_scan(work32_t)
@@ -702,7 +777,7 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
                            gw_b, gw_fin, ex_b, ex_fin, c, record=record,
                            beff=beff)
 
-    n_gw = q["ttft0"].shape[1] if adm_on else 1
+    n_gw = q["ttft0"].shape[-1] if adm_on else 1
     carry = dict(
         gw_wait=jnp.zeros((F, P, M, L)), ex_max=jnp.zeros((F, P, M, L)),
         gw_over=jnp.zeros((F, P, M, L), bool),
@@ -710,8 +785,8 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
         shed=jnp.zeros((F, P, R), bool),
         retries=jnp.zeros((F, P, R), jnp.int64),
         admit_floor=jnp.ones((T, F, P, n_gw), jnp.float32),
-        ingress_extra=jnp.broadcast_to(q["ingress_extra0"][None],
-                                       (F, P, R)) + 0.0,
+        ingress_extra=(q["ingress_extra0"] + 0.0) if fb
+        else jnp.broadcast_to(q["ingress_extra0"][None], (F, P, R)) + 0.0,
         work_sum=jnp.zeros((F, SR)),
     )
     if want_wait:
@@ -723,8 +798,8 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
     # separately), so ring writes happen exactly once per launch.
     if probes is None:
         carry = finish_iter(work0, work0_sum,
-                            q["gw_b0"][None], q["gw_fin0"][None],
-                            q["ex_b0"][None], q["ex_fin0"][None], carry)
+                            lead(q["gw_b0"]), lead(q["gw_fin0"]),
+                            lead(q["ex_b0"]), lead(q["ex_fin0"]), carry)
         c = jax.lax.fori_loop(0, n_iter - 1, body, carry)
     elif n_iter == 1:
         carry["probes"] = pbuf
@@ -732,13 +807,13 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
         # occupancy (batch["beff0"]) for the probe channel; work0 itself
         # is already the host-computed effective plane.
         c = finish_iter(work0, work0_sum,
-                        q["gw_b0"][None], q["gw_fin0"][None],
-                        q["ex_b0"][None], q["ex_fin0"][None], carry,
+                        lead(q["gw_b0"]), lead(q["gw_fin0"]),
+                        lead(q["ex_b0"]), lead(q["ex_fin0"]), carry,
                         record=True, beff=batch.get("beff0"))
     else:
         carry = finish_iter(work0, work0_sum,
-                            q["gw_b0"][None], q["gw_fin0"][None],
-                            q["ex_b0"][None], q["ex_fin0"][None], carry)
+                            lead(q["gw_b0"]), lead(q["gw_fin0"]),
+                            lead(q["ex_b0"]), lead(q["ex_fin0"]), carry)
         c = jax.lax.fori_loop(0, n_iter - 2, body, carry)
         c["probes"] = pbuf
         c = body(0, c, record=True)
@@ -761,8 +836,24 @@ def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
     return out
 
 
+def _fused_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
+                pbuf, batch, n_iter, n_bins, n_rows, adm_on, deposit_mode,
+                want_wait, probes, batch_window):
+    """Counting wrapper around :func:`_fleet_fixed_point` — the body the
+    standalone jits below trace.  The trace counter lives here (not in
+    the fixed point itself) so the joint-controller kernel, which embeds
+    several fixed points in one program, still counts one trace per
+    launch shape."""
+    global FUSED_TRACE_COUNT
+    FUSED_TRACE_COUNT += 1
+    return _fleet_fixed_point(
+        consts, chunks, work0, work0_sum, ttft_target, tpot_target, pbuf,
+        batch, n_iter, n_bins, n_rows, adm_on, deposit_mode, want_wait,
+        probes, batch_window)
+
+
 #: The jitted fused fixed point.  Statics: (n_iter, n_bins, n_rows,
-#: adm_on, use_pallas, want_wait, probes, batch_window); everything else
+#: adm_on, deposit_mode, want_wait, probes, batch_window); everything else
 #: rides the pytrees, so any fleet run with equal shapes — every rate of
 #: a sweep, every re-placement decide/evaluate round — hits one compile
 #: cache entry.  Probe-free launches pass ``probes=None`` and an empty
@@ -778,6 +869,348 @@ _fused_exec = jax.jit(_fused_core,
 _fused_exec_probed = jax.jit(_fused_core,
                              static_argnums=(8, 9, 10, 11, 12, 13, 14, 15),
                              donate_argnums=(6,))
+
+
+class _CtrlMeta(NamedTuple):
+    """Static (hashable) configuration of the joint-controller kernel.
+
+    One value per compile-relevant scalar of :func:`_ctrl_core`; grids
+    that share a meta share one trace, which is what the
+    ``FUSED_TRACE_COUNT`` acceptance pin counts.
+    """
+
+    n_iter: int          #: schedule<->queue fixed-point iterations
+    n_bins: int          #: T, time bins
+    n_rows: int          #: compact (plan, satellite) rows of the probe
+    n_rows_sched: int    #: compact satellite rows of the schedule row
+    n_cand: int          #: C, candidate-pool size
+    n_slots: int         #: N_T, topology slots
+    n_bounds: int        #: last decision boundary index (see replan.py)
+    n_rounds: int        #: controller decide+evaluate rounds
+    adm_on: bool         #: admission regime active
+    deposit_mode: str    #: "pallas" | "segments" | "ref" (see _launch)
+    mode_backlog: bool   #: backlog-inflated scoring (vs base-only)
+    hysteresis: float    #: relative switching threshold
+    ref_q: float         #: admission reference quantile (0 if adm off)
+    decide_bins: tuple   #: per-boundary backlog observation bin
+    n_mig_chunks: int    #: dt-chunks one migration transfer spans
+    mig_bounds: tuple    #: (prev_slot, cur_slot, first_bin) per boundary
+
+
+def _ctrl_core(consts, chunks, work0, work0_sum, ttft_target, tpot_target,
+               cc, meta):
+    """The joint control plane: probe -> decide -> evaluate in ONE launch.
+
+    Embeds several :func:`_fleet_fixed_point` fixed points in a single
+    device program, batched over a leading controller-grid axis F
+    (cadence x migration-budget x admission-target cells):
+
+    1. **probe** — the candidate pool's fleet fixed point (exactly the
+       ``_fused_core`` computation ``FleetSim.run`` launches), whose
+       backlog trace is the controller's observation *and* the shared
+       qhat signal the admission scan reads;
+    2. **decide** — the pinned re-placement law of
+       ``repro.traffic.replan`` (backlog-inflated scores, hysteresis
+       gate, migration-cost gate) as array ops over that trace, walking
+       the slot boundaries with a per-cell cadence mask;
+    3. **evaluate** — a second fixed point over the decided
+       schedule row, whose consts are *gathers* of the candidate
+       tables by the decided plan-per-slot (tokens of slot n traverse
+       plan ``slot_plan[n]``), with the migration background load
+       deposited from the decided switch pairs in the same pass.
+
+    Backlog mode refines: rounds 2..n_rounds re-decide against the
+    evaluation's own backlog and re-evaluate — the device always runs
+    the full ``controller_iterations`` rounds where the host loop may
+    break early on a fixed point, which is equivalent because the
+    evaluation is a deterministic function of the slot plan.
+
+    Every arithmetic step replicates the host controller bit-for-bit on
+    CPU: the score penalty reproduces numpy's pairwise summation, the
+    admission anchors reproduce ``np.quantile``'s interpolation, and the
+    schedule row's chunk table is ordered event-major so each
+    (row, bin) accumulates its float64 deposits in the exact order of a
+    host-built evaluation simulator.
+
+    Args:
+        consts: The probe's device tables (plan-leading).
+        chunks: The probe's all-active compacted chunk table, built at
+            the deduplicated admission-cell width F_u (see the probe
+            dedup note in the body).
+        work0/work0_sum: Probe peeled-iteration planes (F_u-wide).
+        ttft_target/tpot_target: (F,) margin-scaled admission targets
+            (the evaluation fixed points still need per-cell targets).
+        cc: Controller tables pytree (:meth:`FleetSim._ctrl_tables`
+            plus per-grid arrays: base scores, decide mask, migration
+            weights and priced byte matrix).
+        meta: Static :class:`_CtrlMeta`.
+
+    Returns:
+        ``slot_plan`` (F, N_T), the decision ``telem`` pytree
+        (scores/chosen/switched/mig_bytes over boundaries), and the
+        kept outputs of the probe and schedule-row fixed points.
+    """
+    global FUSED_TRACE_COUNT
+    FUSED_TRACE_COUNT += 1
+    q = consts
+    F = ttft_target.shape[0]
+    C, T, SRs = meta.n_cand, meta.n_bins, meta.n_rows_sched
+    P, M, L = q["eff_layer"].shape
+    R = q["first_tok"].shape[0]
+    f32, f64 = jnp.float32, jnp.float64
+    f_i = jnp.arange(F)
+
+    # The probe depends on the admission-target axis alone — cells that
+    # share a (TTFT, TPOT) target share a probe fixed point.  The host
+    # side deduplicated the targets (``probe_ttft``/``probe_tpot``,
+    # width F_u <= F) and supplies the inverse map ``probe_gather``:
+    # the probe runs F_u-wide and its outputs are gathered back to F,
+    # bitwise identical to computing every duplicate (each cell's row
+    # is an independent, deterministic batch lane).  A cadence x
+    # migration-budget grid with one admission target probes ONCE.
+    probe = _fleet_fixed_point(
+        q, chunks, work0, work0_sum, cc["probe_ttft"], cc["probe_tpot"],
+        {}, {}, meta.n_iter, T, meta.n_rows, meta.adm_on,
+        meta.deposit_mode, True, None, 0)
+    pg = cc["probe_gather"]
+    probe = {k: (v[:, pg] if k == "wait" else v[pg])
+             for k, v in probe.items()}
+
+    def np_sum(x):
+        # numpy pairwise-summation replica over the last axis (the host
+        # score penalty sums float32 backlog slices with np.sum; the
+        # parity pin needs the identical partial-sum tree).
+        def pair(y, n):
+            if n < 8:
+                res = jnp.zeros(y.shape[:-1], y.dtype)
+                for i in range(n):
+                    res = res + y[..., i]
+                return res
+            if n <= 128:
+                r = [y[..., j] for j in range(8)]
+                i = 8
+                while i + 8 <= n:
+                    for j in range(8):
+                        r[j] = r[j] + y[..., i + j]
+                    i += 8
+                res = ((r[0] + r[1]) + (r[2] + r[3])) \
+                    + ((r[4] + r[5]) + (r[6] + r[7]))
+                while i < n:
+                    res = res + y[..., i]
+                    i += 1
+                return res
+            n2 = (n // 2) - ((n // 2) % 8)
+            return pair(y[..., :n2], n2) + pair(y[..., n2:], n - n2)
+        return pair(x, x.shape[-1])
+
+    zero_col = jnp.zeros((F, 1), f32)
+
+    def penalty(wait_b, rows_gw, rows_ex):
+        # replan.backlog_penalty_s: gateway backlog sum + per-layer max
+        # expert backlog sum, read off one backlog snapshot.  A sentinel
+        # row (== n_rows) indexes the appended zero column — the host's
+        # expansion to all satellites reads 0.0 at compacted-out rows.
+        w = jnp.concatenate([wait_b, zero_col], axis=1)
+        g = w[f_i[:, None, None], rows_gw]                  # (F, C, L)
+        e = w[f_i[:, None, None, None], rows_ex]            # (F, C, L, I)
+        return (np_sum(g) + np_sum(e.max(axis=3))).astype(f64)
+
+    def decide(wait, rows_gw_of, rows_ex_of):
+        # The verbatim decide law of replan.build_replan_schedule,
+        # vectorized over grid cells: per boundary k the cell's cadence
+        # mask arbitrates whether the (hysteresis + migration-cost)
+        # gated argmin replaces the incumbent.
+        cur = jnp.zeros(F, dtype=jnp.int64)
+        plan_cols, t_sc, t_cur, t_sw, t_mb = [], [], [], [], []
+        for k in range(meta.n_bounds + 1):
+            scores = jnp.broadcast_to(cc["base_scores"][k][None], (F, C))
+            if meta.mode_backlog and k > 0:
+                scores = scores + penalty(wait[meta.decide_bins[k]],
+                                          rows_gw_of(cur), rows_ex_of(cur))
+            best = jnp.argmin(scores, axis=1)
+            if k == 0:
+                nxt, switched, mb = best, jnp.zeros(F, bool), jnp.zeros(F)
+            else:
+                sc_cur = scores[f_i, cur]
+                gain = sc_cur - scores[f_i, best]
+                moved = cc["bytes_mat"][cur, best]
+                gate = meta.hysteresis * sc_cur + moved * cc["mig_w"] / 1e6
+                switched = (best != cur) & (gain > gate)
+                nxt = jnp.where(switched, best, cur)
+                mb = jnp.where(switched, moved, 0.0)
+            dk = cc["decide_mask"][:, k]
+            cur = jnp.where(dk, nxt, cur)
+            plan_cols.append(cur)
+            t_sc.append(scores)
+            t_cur.append(cur)
+            t_sw.append(switched & dk)
+            t_mb.append(jnp.where(dk, mb, 0.0))
+        cols = plan_cols + [cur] * (meta.n_slots - (meta.n_bounds + 1))
+        telem = dict(scores=jnp.stack(t_sc, axis=1),
+                     chosen=jnp.stack(t_cur, axis=1),
+                     switched=jnp.stack(t_sw, axis=1),
+                     mig_bytes=jnp.stack(t_mb, axis=1))
+        return jnp.stack(cols, axis=1), telem
+
+    def masked_quantile(vals, mask):
+        # np.quantile (linear interpolation) over a masked last axis —
+        # including numpy's _lerp asymmetry around t = 0.5, which the
+        # bitwise admission-anchor parity needs.
+        n = vals.shape[-1]
+        s = jnp.sort(jnp.where(mask, vals, jnp.inf), axis=-1)
+        nv = mask.sum(axis=-1)
+        vi = meta.ref_q * (nv - 1).astype(f64)
+        lo = jnp.clip(jnp.floor(vi), 0.0, None)
+        t = vi - lo
+        lo_i = lo.astype(jnp.int64)
+        hi_i = jnp.minimum(lo_i + 1, jnp.maximum(nv - 1, 0))
+        a = jnp.take_along_axis(s, jnp.clip(lo_i, 0, n - 1)[..., None],
+                                axis=-1)[..., 0]
+        b = jnp.take_along_axis(s, jnp.clip(hi_i, 0, n - 1)[..., None],
+                                axis=-1)[..., 0]
+        d = b - a
+        out = jnp.where(t >= 0.5, b - d * (1.0 - t), a + d * t)
+        return jnp.where(nv > 0, out, 0.0)
+
+    mi = jnp.arange(M)[None]
+    ri = jnp.arange(R)[None]
+
+    def eval_consts(sp):
+        # Schedule-row device tables: per-token / per-request gathers of
+        # the candidate tables by the decided plan of the token's slot
+        # (P axis = 1, F-leading — the fixed point's ``fb`` branch).
+        pt = sp[:, cc["slot_tok"]]                          # (F, M)
+        pr = pt[:, :R]
+        eq = dict(dt=q["dt"], cap32=q["cap32"], dt32=q["dt32"],
+                  gw_service=q["gw_service"], arrival_s=q["arrival_s"],
+                  first_tok=q["first_tok"], tok_req=q["tok_req"],
+                  last_tok=q["last_tok"],
+                  eff_layer=q["eff_layer"][pt, mi][:, None],
+                  tok_base=q["tok_base"][pt, mi][:, None],
+                  ingress_extra0=q["ingress_extra0"][pr, ri][:, None],
+                  gw_rows=cc["gw_srow"][pt, mi][:, None],
+                  ex_rows=cc["ex_srow"][pt, mi][:, None],
+                  gw_b0=q["gw_b0"][pt, mi][:, None],
+                  gw_fin0=q["gw_fin0"][pt, mi][:, None],
+                  ex_b0=q["ex_b0"][pt, mi][:, None],
+                  ex_fin0=q["ex_fin0"][pt, mi][:, None])
+        if meta.n_mig_chunks and meta.mig_bounds:
+            # Migration background load of the decided switches: exact
+            # sequential-sum tables per (incumbent, successor) pair,
+            # deposited at each boundary's bins.
+            plane = jnp.zeros((F, SRs, T))
+            for prev_s, cur_s, b0 in meta.mig_bounds:
+                pv = cc["mig_plane"][:, sp[:, prev_s], sp[:, cur_s]]
+                for j in range(meta.n_mig_chunks):
+                    plane = plane.at[:, :, min(b0 + j, T - 1)].add(pv[j])
+            eq["mig_dense_f"] = plane
+        if meta.adm_on:
+            # Re-derive the schedule row's admission anchors (the
+            # reference-quantile zero-load latencies) from the decided
+            # per-request plan — the joint-controller face of
+            # _build_admission_tables.
+            G = q["ttft0"].shape[-1]
+            ok = cc["adm_ok0"][pr, ri]
+            bt = cc["adm_base_ttft"][pr, ri]
+            overall = masked_quantile(bt, ok)
+            selg = ok[:, None, :] & (cc["adm_station"][None, None, :]
+                                     == jnp.arange(G)[None, :, None])
+            per_g = masked_quantile(
+                jnp.broadcast_to(bt[:, None], (F, G, R)), selg)
+            ttft0 = jnp.where(selg.any(axis=2), per_g, overall[:, None])
+            ni = jnp.arange(M - R)[None]
+            pd = pt[:, R:]
+            tpot0 = masked_quantile(cc["adm_dec_vals"][pd, ni],
+                                    cc["adm_dec_ok"][pd, ni])
+            pb = sp[:, cc["slot_of_bin"]]                   # (F, T)
+            ti = jnp.arange(T)[:, None]
+            eq.update(
+                ttft0=ttft0[:, None].astype(f32),
+                tpot0=tpot0[:, None].astype(f32),
+                ctrl=q["ctrl"], increase=q["increase"],
+                decrease=q["decrease"], admit_min=q["admit_min"],
+                att_bin=q["att_bin"], att_station=q["att_station"],
+                adm_u=q["adm_u"],
+                gw_rows_bin=cc["gw_srow_bin"][ti, pb.T][:, :, None],
+                exp_rows_bin=cc["exp_srow_bin"][ti, pb.T][:, :, None],
+                att_feasible=jnp.transpose(
+                    cc["att_feas_c"][pr, :, ri], (0, 2, 1))[:, None],
+                att_extra=jnp.transpose(
+                    cc["att_extra_c"][pr, :, ri], (0, 2, 1))[:, None])
+            if "pid_kp" in q:
+                # Per-plan gains are gated off by run_replan_grid, so
+                # the schedule row runs at unit gain like every plan.
+                eq.update(pid_kp=q["pid_kp"], pid_ki=q["pid_ki"],
+                          pid_kd=q["pid_kd"],
+                          pid_gain=jnp.ones((1,), jnp.float32))
+        return eq
+
+    n_gate = cc["ch_work"].shape[0]
+
+    def eval_launch(sp):
+        # The schedule row's fixed point: the probe's event-major chunk
+        # table rides along gated per chunk by "is this chunk's plan the
+        # decided plan of its request's slot" — multiplying by the 0/1
+        # gate keeps deposits exact (interleaved zero adds are f64
+        # no-ops), so the (row, bin) accumulation order matches a
+        # host-built evaluation simulator bit for bit.
+        eq = eval_consts(sp)
+        gate = (sp[:, cc["ch_slot"]] == cc["ch_plan"][None]).astype(f64)
+        ech = dict(
+            src=(f_i[:, None] * (2 * M * L)
+                 + cc["ch_local"][None]).reshape(-1),
+            offs=jnp.broadcast_to(cc["ch_offs"][None],
+                                  (F, n_gate)).reshape(-1),
+            work=(cc["ch_work"][None] * gate).reshape(-1),
+            fprow=(f_i[:, None] * SRs
+                   + cc["ch_srow"][None]).astype(jnp.int32).reshape(-1))
+        if meta.adm_on:
+            ech["fpr"] = (f_i[:, None] * R
+                          + cc["ch_req"][None]).reshape(-1)
+        v0 = ((cc["ch_work"] * cc["ch_fin0"])[None] * gate).reshape(-1)
+        bins0 = jnp.broadcast_to(cc["ch_bins0"][None],
+                                 (F, n_gate)).reshape(-1)
+        if meta.deposit_mode == "pallas":
+            plane0 = _kernel_ops.deposit(
+                ech["fprow"], bins0.astype(jnp.int32), v0.astype(f32),
+                F * SRs, T).astype(f64).reshape(F, SRs, T)
+        elif meta.deposit_mode == "segments":
+            plane0 = _kernel_ops.deposit_segments(
+                ech["fprow"], bins0, v0, F * SRs, T).reshape(F, SRs, T)
+        else:
+            flat0 = ech["fprow"].astype(jnp.int64) * T + bins0
+            plane0 = jnp.zeros(F * SRs * T).at[flat0].add(
+                v0, mode="promise_in_bounds").reshape(F, SRs, T)
+        if "mig_dense_f" in eq:
+            plane0 = plane0 + eq["mig_dense_f"]
+        return _fleet_fixed_point(
+            eq, ech, plane0.astype(f32), plane0.sum(axis=2),
+            ttft_target, tpot_target, {}, {}, meta.n_iter, T, SRs,
+            meta.adm_on, meta.deposit_mode, True, None, 0)
+
+    # Round 1 decides against the probe's backlog (per incumbent row);
+    # backlog-mode refinement rounds re-decide against the decided
+    # schedule's own backlog (incumbent-independent maps).
+    sp, telem = decide(probe["wait"],
+                       lambda cur: cc["pen1_gw"][cur],
+                       lambda cur: cc["pen1_ex"][cur])
+    ev = eval_launch(sp)
+    for _ in range(meta.n_rounds - 1):
+        sp, telem = decide(ev["wait"],
+                           lambda cur: cc["pen2_gw"][None],
+                           lambda cur: cc["pen2_ex"][None])
+        ev = eval_launch(sp)
+    keep = ("ttft", "e2e", "tok_total", "tok_over", "shed", "retries",
+            "work_sum")
+    return dict(slot_plan=sp, telem=telem,
+                probe={k: probe[k] for k in keep},
+                sched={k: ev[k] for k in keep})
+
+
+#: The jitted joint-controller kernel.  Exactly one trace per
+#: (_CtrlMeta, pytree shape) — a whole cadence x migration-budget x
+#: admission-target grid batches the leading axis of one launch.
+_ctrl_exec = jax.jit(_ctrl_core, static_argnums=(7,))
 
 
 # --------------------------------------------------------------------- #
@@ -898,6 +1331,12 @@ class FleetSim:
         self.requests = requests
         self.qcfg = qcfg
         self.activation = activation
+        # Stashed for the joint control plane (``run(replan=...)`` /
+        # :meth:`run_replan_grid`): the base-score sweep re-enters the
+        # batched plan engine at decision time.
+        self.topo = topo
+        self.workload = workload
+        self.compute = compute
 
         P = len(self.schedules)
         R = requests.n_requests
@@ -1179,8 +1618,11 @@ class FleetSim:
                 0.0) * dec_ch
         #: Lazily-built device-resident precompute (see _device_tables).
         self._dev: dict | None = None
+        #: Lazily-built joint-control-plane precompute (_ctrl_tables).
+        self._ctrl: dict | None = None
         #: Deposit implementation: "auto" (Pallas on TPU, jnp scatter-add
-        #: reference elsewhere), "ref", or "pallas".
+        #: reference elsewhere), "segments" (row-bucketed segment_sum,
+        #: bitwise-identical to "ref"), "ref", or "pallas".
         self.deposit_impl = "auto"
 
         # --- time bins (fixed across runs so the scan compiles once) ------
@@ -1201,8 +1643,14 @@ class FleetSim:
 
         # --- admission controller precompute ------------------------------
         acfg = qcfg.admission
-        self.admission_on = acfg is not None and acfg.policy == "aimd"
+        self.admission_on = acfg is not None \
+            and acfg.policy in ("aimd", "pid")
         if self.admission_on:
+            if acfg.policy == "pid" and acfg.gain_scale is not None \
+                    and len(acfg.gain_scale) != len(self.schedules):
+                raise ValueError(
+                    f"gain_scale has {len(acfg.gain_scale)} entries for "
+                    f"{len(self.schedules)} plans")
             self._build_admission_tables(acfg, ground, slot_r, rng)
 
         # --- fused-path row compaction + static tables --------------------
@@ -1358,6 +1806,13 @@ class FleetSim:
             np.quantile(self.tok_base[i, R:][dec_ok[i]],
                         acfg.reference_quantile)
             if dec_ok[i].any() else 0.0 for i in range(P)])        # (P,)
+        # Stashed for the fused control plane: the schedule row's
+        # admission anchors are re-derived on device from exactly these
+        # masked value tables (gathered per decided plan).
+        self._adm_station = station
+        self._adm_ok0 = ok
+        self._adm_base_ttft = base_ttft
+        self._adm_dec_ok = dec_ok
 
         # Slot-dependent critical-path stations for the in-scan
         # controller: per time bin, the bin's topology slot selects each
@@ -1366,6 +1821,7 @@ class FleetSim:
         slot_of_bin = slot_of_time(np.arange(self.n_bins) * self.qcfg.dt_s,
                                    self.qcfg.slot_period_s,
                                    self.n_topo_slots)
+        self._adm_slot_of_bin = slot_of_bin
         self._adm_gw_idx = np.ascontiguousarray(np.moveaxis(
             self.gateways_slot[:, slot_of_bin], 1, 0)).astype(np.int32)
         self._adm_exp_idx = np.ascontiguousarray(np.moveaxis(
@@ -1438,6 +1894,12 @@ class FleetSim:
         self._ex_b0, self._ex_fin0 = self._to_bins(exp0)
         base0, fin0 = self._to_bins(self._event_times(layer0, exp0))
         bins0 = np.minimum(base0[self._rep] + self._offs, self.n_bins - 1)
+        # Event-ordered copies (pre row-sort) — the joint control plane's
+        # schedule-row chunk table is assembled in event order so the
+        # per-(row, bin) f64 accumulation order matches a host-built
+        # evaluation simulator exactly.
+        self._chunk_bins0 = bins0
+        self._chunk_fin0 = fin0[self._rep]
         perm = np.argsort(self._chunk_rowc, kind="stable")
         self._f_src = self._chunk_src[perm]
         self._f_offs = self._offs[perm]
@@ -1636,14 +2098,174 @@ class FleetSim:
                         np.moveaxis(self._att_extra, 0, 1)),
                     adm_u=jnp.asarray(self._adm_u),
                 )
+                if acfg.policy == "pid":
+                    gain = np.ones(len(self.schedules)) \
+                        if acfg.gain_scale is None \
+                        else np.asarray(acfg.gain_scale, dtype=np.float64)
+                    d.update(
+                        pid_kp=jnp.asarray(f32(acfg.kp)),
+                        pid_ki=jnp.asarray(f32(acfg.ki)),
+                        pid_kd=jnp.asarray(f32(acfg.kd)),
+                        pid_gain=jnp.asarray(gain.astype(f32)),
+                    )
         self._dev = d
         return d
 
-    def _use_pallas(self) -> bool:
-        """Resolve the deposit implementation (see ``deposit_impl``)."""
+    def _deposit_mode(self) -> str:
+        """Resolve the deposit implementation (see ``deposit_impl``).
+
+        ``"auto"`` picks the Pallas one-hot-matmul kernel on TPU and the
+        inline ``"ref"`` scatter everywhere else.  The ``"segments"``
+        row-bucketed ``segment_sum`` path is bitwise identical to
+        ``"ref"`` (so switching never moves a trace) and stays opt-in:
+        ``bench_fleet``'s before/after stage timing shows it winning
+        only on mid-size shuffled tables — the fleet's row-grouped
+        chunk ordering keeps the inline scatter cache-friendly, and
+        XLA:CPU's sort constants dominate beyond ~1M chunks.
+        """
         if self.deposit_impl == "auto":
-            return _kernel_ops.on_tpu()
-        return self.deposit_impl == "pallas"
+            return "pallas" if _kernel_ops.on_tpu() else "ref"
+        if self.deposit_impl not in ("pallas", "segments", "ref"):
+            raise ValueError(
+                f"deposit_impl {self.deposit_impl!r} not in "
+                "('auto', 'pallas', 'segments', 'ref')")
+        return self.deposit_impl
+
+    def _ctrl_tables(self) -> dict:
+        """Host precompute for the joint control plane (lazy, cached).
+
+        Everything here is independent of the controller configuration —
+        the schedule row's compact station universe, the event-major
+        gated chunk table, the decide walk's penalty row maps and the
+        migration tables — so one cache serves every controller grid
+        launched over this simulator.
+        """
+        if self._ctrl is not None:
+            return self._ctrl
+        qcfg = self.qcfg
+        C, S, T = self.n_plans, self.n_stations, self.n_bins
+        M, L, R = self.n_tokens, self.n_layers, self.n_requests
+        N = self.n_decode_tokens
+        K = self.activation.top_k
+        dt, period = qcfg.dt_s, qcfg.slot_period_s
+        n_slots = self.n_topo_slots
+
+        # Schedule-row station universe: every satellite the schedule
+        # row can deposit on, gather from, observe through the admission
+        # maps or receive migrated weights at — the union over the
+        # candidate pool (superset rows carry exactly-zero work, so the
+        # compaction is exact, same argument as _build_row_map).
+        gw_all = np.stack([np.asarray(p.gateways) for p in self.plans])
+        ex_all = np.stack([np.asarray(p.expert_sats) for p in self.plans])
+        used = [self.ev_chunk_station.ravel(), self.gather_gw_station.ravel(),
+                self.gather_exp_station.ravel(), gw_all.ravel(),
+                ex_all.ravel()]
+        if self.admission_on:
+            used += [self._adm_gw_idx.ravel(), self._adm_exp_idx.ravel()]
+        srows = np.unique(np.concatenate(
+            [np.asarray(u, dtype=np.int64) for u in used]))
+        srow_inv = np.full(S, -1, dtype=np.int64)
+        srow_inv[srows] = np.arange(srows.size)
+
+        # Event-major gated chunk table: the probe's chunks re-sorted
+        # (stable) by event, plan within event.  Only one plan's chunks
+        # survive the slot gate per event, so the surviving deposits hit
+        # each (row, bin) in event order — the accumulation order of a
+        # host-built evaluation simulator's row-sorted bincount.
+        E = self._n_events // C
+        gw1 = np.arange(M)[:, None] * L + np.arange(L)[None, :]
+        exp1 = M * L + gw1
+        ev1 = np.concatenate([
+            gw1.ravel(),
+            np.broadcast_to(exp1[R:, :, None], (N, L, K)).ravel(),
+            np.broadcast_to(exp1[:R, :, None],
+                            (R, L, ex_all.shape[2])).ravel()])
+        ev_local = self._rep % E
+        perm = np.lexsort((self.ev_chunk_plan, ev_local))
+        ct = dict(
+            srows=srows, n_rows_sched=int(srows.size),
+            ch_local=ev1[ev_local][perm],
+            ch_work=self.ev_chunk_work[perm],
+            ch_offs=self._offs[perm],
+            ch_srow=srow_inv[self.ev_chunk_station[perm]].astype(np.int32),
+            ch_plan=self.ev_chunk_plan[perm],
+            ch_slot=self.slots[self.ev_chunk_req[perm]],
+            ch_req=self.ev_chunk_req[perm],
+            ch_bins0=self._chunk_bins0[perm],
+            ch_fin0=self._chunk_fin0[perm].astype(np.float64),
+        )
+
+        # Decide-walk penalty row maps.  Round 1 reads the probe's
+        # compact (plan, satellite) rows per incumbent (missing rows hit
+        # the sentinel zero column — the host expansion reads 0.0
+        # there); refinement rounds read the schedule row's universe.
+        SR = self.n_rows
+        pen1_gw = np.empty((C, C, L), dtype=np.int32)
+        pen1_ex = np.empty((C, C) + ex_all.shape[1:], dtype=np.int32)
+        for cur in range(C):
+            rg = self._row_inv[cur * S + gw_all]
+            pen1_gw[cur] = np.where(rg >= 0, rg, SR)
+            re_ = self._row_inv[cur * S + ex_all]
+            pen1_ex[cur] = np.where(re_ >= 0, re_, SR)
+        ct["pen1_gw"] = pen1_gw
+        ct["pen1_ex"] = pen1_ex
+        ct["pen2_gw"] = srow_inv[gw_all].astype(np.int32)
+        ct["pen2_ex"] = srow_inv[ex_all].astype(np.int32)
+
+        # Schedule-row gather maps (stations -> compact schedule rows).
+        ct["gw_srow"] = srow_inv[self.gather_gw_station].astype(np.int32)
+        ct["ex_srow"] = srow_inv[self.gather_exp_station].astype(np.int32)
+
+        # Decision-walk statics: the boundary count and per-boundary
+        # backlog observation bin of replan.build_replan_schedule.
+        horizon = T * dt
+        n_bounds = min(int(np.floor(max(horizon, 0.0) / period)),
+                       n_slots - 1)
+        ct["n_bounds"] = n_bounds
+        ct["decide_bins"] = tuple(
+            min(int((k * period) / dt), T - 1) for k in range(n_bounds + 1))
+
+        # Migration tables: all-pairs switch pricing (the decide gate)
+        # plus the background-load deposit.  The deposit table holds
+        # *sequential* repeated sums of the per-chunk occupancy — n
+        # experts landing on one satellite deposit w added n times, not
+        # n * w, exactly the host bincount's accumulation.
+        n_moved, dest = migration_matrix(self.plans, 1.0, S)
+        ct["n_moved"] = n_moved
+        sec = (qcfg.migration_bytes_per_expert * 8.0
+               / (qcfg.migration_rate_gbps * 1e9))
+        if sec > 0.0:
+            n_chm = max(int(np.ceil(sec / dt)), 1)
+            w_prof = np.minimum(sec - np.arange(n_chm) * dt, dt)
+        else:
+            w_prof = np.zeros(0)
+        max_cnt = int(dest.max())
+        rep = np.zeros((len(w_prof), max_cnt + 1))
+        for j, w in enumerate(w_prof):
+            for n in range(1, max_cnt + 1):
+                rep[j, n] = rep[j, n - 1] + w
+        ct["n_mig_chunks"] = int(len(w_prof))
+        ct["mig_plane"] = rep[:, dest[:, :, srows].astype(np.int64)]
+        nbm = int(np.floor(horizon / period))
+        ct["mig_bounds"] = tuple(
+            (int((k - 1) % n_slots), int(k % n_slots),
+             int((k * period) / dt)) for k in range(1, nbm + 1))
+
+        if self.admission_on:
+            # Masked admission-anchor inputs for the schedule row's
+            # on-device quantiles + per-bin station maps.
+            ct["adm_ok0"] = self._adm_ok0
+            ct["adm_base_ttft"] = self._adm_base_ttft
+            ct["adm_station"] = self._adm_station
+            ct["adm_dec_ok"] = self._adm_dec_ok
+            ct["adm_dec_vals"] = self.tok_base[:, R:]
+            ct["att_feas_c"] = np.moveaxis(self._att_feasible, 1, 0)
+            ct["att_extra_c"] = np.moveaxis(self._att_extra, 0, 1)
+            ct["gw_srow_bin"] = srow_inv[self._adm_gw_idx].astype(np.int32)
+            ct["exp_srow_bin"] = srow_inv[self._adm_exp_idx].astype(np.int32)
+            ct["slot_of_bin"] = self._adm_slot_of_bin
+        self._ctrl = ct
+        return ct
 
     def _launch(self, masks: np.ndarray, ttft_targets, tpot_targets,
                 want_wait: bool) -> dict:
@@ -1778,7 +2400,7 @@ class FleetSim:
                 jnp.asarray(tt), jnp.asarray(tp), pbuf,
                 {k: jnp.asarray(v) for k, v in batch_np.items()},
                 max(1, self.qcfg.iterations), self.n_bins, self.n_rows,
-                self.admission_on, self._use_pallas(), want_wait,
+                self.admission_on, self._deposit_mode(), want_wait,
                 static_probes, batch_window)
             out = {k: jax.tree_util.tree_map(np.asarray, v)
                    for k, v in out.items()}
@@ -1793,7 +2415,8 @@ class FleetSim:
 
     def run(self, active: np.ndarray | None = None,
             zero_load: bool = False,
-            kv_slots: int | None = None) -> TrafficResult:
+            kv_slots: int | None = None, *,
+            replan=None, replan_rng=None):
         """Simulate with an optional per-request activity mask (Poisson
         thinning for rate sweeps) and return per-plan traffic metrics.
 
@@ -1809,11 +2432,32 @@ class FleetSim:
             kv_slots: Optional override of the static KV admission cap
                 (the cap is host post-processing, so budget sweeps reuse
                 one device launch shape).
+            replan: Optional ``repro.traffic.replan.ReplanConfig`` —
+                runs the **joint control plane** instead: probe, the
+                re-placement decide walk and the decided schedule's
+                evaluation execute as one device launch
+                (:func:`_ctrl_core`), and the return value becomes a
+                ``ReplanOutcome`` (parity anchor:
+                ``replan_traffic``).  Composes with no other option.
+            replan_rng: RNG for the controller's base candidate scores
+                (``replan`` only; default ``np.random.default_rng(0)``).
 
         Returns:
             A :class:`~repro.traffic.metrics.TrafficResult` with one
-            :class:`~repro.traffic.metrics.PlanTraffic` per plan.
+            :class:`~repro.traffic.metrics.PlanTraffic` per plan — or a
+            ``ReplanOutcome`` when ``replan`` is given.
         """
+        if replan is not None:
+            if active is not None or zero_load or kv_slots is not None:
+                raise ValueError(
+                    "run(replan=...) composes with no other run() option")
+            from .replan import replan_base_scores
+            rng = (np.random.default_rng(0) if replan_rng is None
+                   else replan_rng)
+            scores = replan_base_scores(
+                self.plans, self.topo, self.activation, self.workload,
+                self.compute, rng, replan)
+            return self.run_replan_grid(replan, base_scores=scores)[0]
         if zero_load:
             return self.run_legacy(active, zero_load=True,
                                    kv_slots=kv_slots)
@@ -1831,10 +2475,12 @@ class FleetSim:
         out["work_sum"] = self._expand_rows(out["work_sum"])
         return self._finalize(active, out, self.admission_on, kv_slots)
 
-    def run_many(self, active: np.ndarray, *,
+    def run_many(self, active: np.ndarray | None = None, *,
                  ttft_targets: np.ndarray | None = None,
                  tpot_targets: np.ndarray | None = None,
-                 kv_slots: int | None = None) -> list[TrafficResult]:
+                 kv_slots: int | None = None,
+                 replan=None, replan_rng=None, base_scores=None,
+                 cadences=None, mig_weights=None) -> list:
         """Run a whole sweep as one compile + one device launch.
 
         The F sweep entries ride a vmapped leading axis of the fused
@@ -1843,18 +2489,60 @@ class FleetSim:
         way the fused kernel is traced once (``FUSED_TRACE_COUNT``) and
         the per-entry results come back from a single launch.
 
+        With ``replan`` given the sweep becomes a **controller grid**:
+        cadence x migration-budget x admission-target cells batch the
+        leading axis of one joint-control-plane launch
+        (:meth:`run_replan_grid`) and the return value is one
+        ``ReplanOutcome`` per cell.
+
         Args:
             active: (F, R) bool participation masks (one row per sweep
-                entry; rows may repeat when only targets vary).
+                entry; rows may repeat when only targets vary).  Must be
+                None when ``replan`` is given (the controller grid is
+                always all-active).
             ttft_targets: Optional (F,) TTFT targets overriding the
                 construction-time admission config (AIMD runs only).
+                Under ``replan``: the admission-target grid axis.
             tpot_targets: Optional (F,) TPOT targets, same contract.
             kv_slots: Optional static-cap override (host post-processing).
+            replan: Optional ``ReplanConfig`` switching to the joint
+                control plane.
+            replan_rng: RNG for the controller's base candidate scores
+                (used when ``base_scores`` is None).
+            base_scores: Optional precomputed (n_slots, C) base score
+                table (``replan_base_scores``).
+            cadences: Optional replan-cadence grid axis (slots between
+                decisions; default: the config's ``period_slots``).
+            mig_weights: Optional migration-budget grid axis (s/MB
+                switch pricing; default the config's weight).
 
         Returns:
             One :class:`~repro.traffic.metrics.TrafficResult` per sweep
-            entry, in order.
+            entry, in order — or one ``ReplanOutcome`` per grid cell
+            (cadence-major, then migration weight, then target) when
+            ``replan`` is given.
         """
+        if replan is not None:
+            if active is not None or kv_slots is not None:
+                raise ValueError(
+                    "run_many(replan=...) composes only with the "
+                    "target/cadence/migration grid axes")
+            if base_scores is None:
+                from .replan import replan_base_scores
+                rng = (np.random.default_rng(0) if replan_rng is None
+                       else replan_rng)
+                base_scores = replan_base_scores(
+                    self.plans, self.topo, self.activation, self.workload,
+                    self.compute, rng, replan)
+            return self.run_replan_grid(
+                replan, base_scores=base_scores, cadences=cadences,
+                mig_weights=mig_weights, ttft_targets=ttft_targets,
+                tpot_targets=tpot_targets)
+        if cadences is not None or mig_weights is not None \
+                or base_scores is not None:
+            raise ValueError("controller grid axes need replan=...")
+        if active is None:
+            raise ValueError("run_many needs (F, R) activity masks")
         masks = np.asarray(active, dtype=bool)
         if masks.ndim != 2 or masks.shape[1] != self.n_requests:
             raise ValueError(f"active must be (F, {self.n_requests})")
@@ -1870,6 +2558,289 @@ class FleetSim:
                            self.admission_on, kv_slots)
             for f in range(masks.shape[0])
         ]
+
+    def run_replan_grid(self, rcfg, *, base_scores,
+                        cadences=None, mig_weights=None,
+                        ttft_targets=None, tpot_targets=None) -> list:
+        """One joint-control-plane launch over a controller grid.
+
+        Probe, decide walk and schedule-row evaluation execute inside a
+        single device program (:func:`_ctrl_core`), batched over the
+        grid's leading axis — F = cadences x migration weights x
+        admission targets, cell order cadence-major.  The host
+        controller (``repro.traffic.replan.replan_traffic``) stays the
+        semantic anchor; on CPU the fused controller reproduces its
+        switch decisions and served/shed sets bit for bit.  Paths where
+        the host controller remains authoritative raise here:
+        continuous batching, probe rings, calibrated per-satellite
+        service (its decode-batch estimate depends on the evaluated
+        plan pool) and candidate pools that already contain schedules.
+
+        Args:
+            rcfg: ``ReplanConfig`` (mode/hysteresis/pricing; its
+                ``period_slots`` / ``migration_weight_s_per_mb`` seed
+                the grid axes when none are given).
+            base_scores: (n_topo_slots, C) backlog-free candidate
+                scores per slot (``replan_base_scores``) — the decide
+                law adds the backlog penalty on device.
+            cadences: Iterable of decision cadences in slots (>= 1).
+            mig_weights: Iterable of migration prices (s/MB, >= 0).
+            ttft_targets: Optional admission-target axis (raw seconds,
+                zipped with ``tpot_targets``; admission runs only).
+            tpot_targets: Optional TPOT targets (zips with
+                ``ttft_targets``).
+
+        Returns:
+            One ``ReplanOutcome`` per grid cell: last-round decisions,
+            the stitched candidates+schedule ``TrafficResult``, the
+            probe result (backlog mode) and this simulator as ``sim``.
+        """
+        from .replan import (REPLAN_MODES, ReplanDecision, ReplanOutcome,
+                             ReplanReport)
+
+        qcfg = self.qcfg
+        acfg = qcfg.admission
+        if rcfg.mode not in REPLAN_MODES:
+            raise ValueError(f"unknown replan mode: {rcfg.mode!r}")
+        if self.batching is not None:
+            raise NotImplementedError(
+                "joint control plane: continuous batching stays on the "
+                "host controller (replan_traffic)")
+        if self.probes is not None:
+            raise NotImplementedError(
+                "joint control plane: probe rings are not recorded on "
+                "the control launch — use replan_traffic for probed "
+                "rounds")
+        if self.service_model.per_satellite:
+            raise NotImplementedError(
+                "joint control plane: calibrated per-satellite service "
+                "recomputes its decode-batch estimate per evaluated "
+                "plan pool — the host controller is authoritative")
+        if any(not s.is_constant for s in self.schedules):
+            raise ValueError(
+                "run_replan_grid needs a static candidate pool (plain "
+                "plans); schedules cannot be re-decided")
+        if (ttft_targets is not None or tpot_targets is not None) \
+                and not self.admission_on:
+            raise ValueError(
+                "admission-target axes need an admission config")
+        if self.admission_on and getattr(acfg, "gain_scale", None) \
+                is not None:
+            raise NotImplementedError(
+                "joint control plane: per-plan admission gains are "
+                "pool-indexed and do not transfer to the decided "
+                "schedule row")
+
+        C = self.n_plans
+        n_slots = self.n_topo_slots
+        T, R, M = self.n_bins, self.n_requests, self.n_tokens
+        bs = np.asarray(base_scores, dtype=np.float64)
+        if bs.shape != (n_slots, C):
+            raise ValueError(f"base_scores must be ({n_slots}, {C})")
+
+        cads = ([int(rcfg.period_slots)] if cadences is None
+                else [int(c) for c in cadences])
+        migw = ([float(rcfg.migration_weight_s_per_mb)]
+                if mig_weights is None
+                else [float(w) for w in mig_weights])
+        if any(c < 1 for c in cads):
+            raise ValueError("cadences must be >= 1")
+        if any(w < 0 for w in migw):
+            raise ValueError("migration weights must be >= 0")
+        tts = [None] if ttft_targets is None else list(ttft_targets)
+        tps = [None] * len(tts) if tpot_targets is None \
+            else list(tpot_targets)
+        if len(tps) != len(tts):
+            raise ValueError("ttft_targets and tpot_targets must zip")
+        cells = [(c, w, i) for c in cads for w in migw
+                 for i in range(len(tts))]
+        F = len(cells)
+
+        if self.admission_on:
+            m = acfg.target_margin
+            tt = np.array([m * (acfg.ttft_target_s if tts[i] is None
+                                else tts[i]) for _, _, i in cells])
+            tp = np.array([m * (acfg.tpot_target_s if tps[i] is None
+                                else tps[i]) for _, _, i in cells])
+        else:
+            tt, tp = np.zeros(F), np.zeros(F)
+
+        ct = self._ctrl_tables()
+        K1 = ct["n_bounds"] + 1
+        dmask = np.zeros((F, K1), dtype=bool)
+        for f, (cad, _w, _i) in enumerate(cells):
+            for k in range(K1):
+                dmask[f, k] = (k == 0) or (rcfg.mode != "off"
+                                           and k % cad == 0)
+        bpe = (qcfg.migration_bytes_per_expert
+               if rcfg.bytes_per_expert is None else rcfg.bytes_per_expert)
+        cc = dict(
+            base_scores=bs[np.arange(K1) % n_slots],
+            decide_mask=dmask,
+            mig_w=np.array([w for _, w, _ in cells]),
+            bytes_mat=ct["n_moved"] * bpe,
+            pen1_gw=ct["pen1_gw"], pen1_ex=ct["pen1_ex"],
+            pen2_gw=ct["pen2_gw"], pen2_ex=ct["pen2_ex"],
+            slot_tok=self.slots,
+            gw_srow=ct["gw_srow"], ex_srow=ct["ex_srow"],
+            ch_local=ct["ch_local"], ch_work=ct["ch_work"],
+            ch_offs=ct["ch_offs"], ch_srow=ct["ch_srow"],
+            ch_plan=ct["ch_plan"], ch_slot=ct["ch_slot"],
+            ch_bins0=ct["ch_bins0"], ch_fin0=ct["ch_fin0"],
+        )
+        if ct["n_mig_chunks"] and ct["mig_bounds"]:
+            cc["mig_plane"] = ct["mig_plane"]
+        if self.admission_on:
+            cc.update(
+                ch_req=ct["ch_req"], adm_ok0=ct["adm_ok0"],
+                adm_base_ttft=ct["adm_base_ttft"],
+                adm_station=ct["adm_station"],
+                adm_dec_ok=ct["adm_dec_ok"],
+                adm_dec_vals=ct["adm_dec_vals"],
+                att_feas_c=ct["att_feas_c"],
+                att_extra_c=ct["att_extra_c"],
+                gw_srow_bin=ct["gw_srow_bin"],
+                exp_srow_bin=ct["exp_srow_bin"],
+                slot_of_bin=ct["slot_of_bin"])
+        n_rounds = (max(1, int(rcfg.controller_iterations))
+                    if rcfg.mode == "backlog" else 1)
+        meta = _CtrlMeta(
+            n_iter=max(1, qcfg.iterations), n_bins=T,
+            n_rows=self.n_rows, n_rows_sched=ct["n_rows_sched"],
+            n_cand=C, n_slots=n_slots, n_bounds=ct["n_bounds"],
+            n_rounds=n_rounds, adm_on=self.admission_on,
+            deposit_mode=self._deposit_mode(),
+            mode_backlog=(rcfg.mode == "backlog"),
+            hysteresis=float(rcfg.hysteresis),
+            ref_q=(float(acfg.reference_quantile)
+                   if self.admission_on else 0.0),
+            decide_bins=ct["decide_bins"],
+            n_mig_chunks=ct["n_mig_chunks"],
+            mig_bounds=ct["mig_bounds"])
+
+        # Probe chunk table: the all-active compaction of _launch (every
+        # grid cell offers the full request set).  The probe fixed point
+        # depends on the admission (TTFT, TPOT) target alone — not on
+        # cadence or migration budget — so the table is built at the
+        # deduplicated admission-cell width Fu and the device gathers
+        # the probe back to F (``probe_gather``).  A grid whose cells
+        # share one admission target (e.g. a cadence x budget sweep)
+        # runs the probe exactly once.
+        uniq, inv = np.unique(np.stack([tt, tp], axis=1), axis=0,
+                              return_inverse=True)
+        Fu = uniq.shape[0]
+        cc["probe_ttft"] = uniq[:, 0]
+        cc["probe_tpot"] = uniq[:, 1]
+        cc["probe_gather"] = inv.astype(np.int64).reshape(F)
+        P, SR = self.n_plans, self.n_rows
+        nch = self._f_work.size
+        f_id = np.repeat(np.arange(Fu), nch)
+        cid = np.tile(np.arange(nch), Fu)
+        n = cid.size
+        n_pad = max(-(-n // _CHUNK_BLOCK), 1) * _CHUNK_BLOCK
+        pml2 = 2 * P * M * self.n_layers
+        src = np.zeros(n_pad, dtype=np.int64)
+        src[:n] = f_id * pml2 + self._f_src[cid]
+        offs = np.zeros(n_pad, dtype=np.int64)
+        offs[:n] = self._f_offs[cid]
+        work = np.zeros(n_pad)
+        work[:n] = self._f_work[cid]
+        fprow = np.zeros(n_pad, dtype=np.int32)
+        fprow[:n] = f_id.astype(np.int32) * SR + self._f_rowc[cid]
+        chunks = dict(src=src, offs=offs, work=work, fprow=fprow)
+        if self.admission_on:
+            fpr = np.zeros(n_pad, dtype=np.int64)
+            fpr[:n] = f_id * (P * R) + self._f_pr[cid]
+            chunks["fpr"] = fpr
+        flat0 = (f_id * SR + self._f_rowc[cid]).astype(np.int64) * T \
+            + self._f_bins0[cid]
+        plane0 = np.bincount(
+            flat0, weights=self._f_work[cid] * self._f_fin0[cid],
+            minlength=Fu * SR * T).reshape(Fu, SR, T).astype(np.float64)
+        if self._mig_rm is not None:
+            plane0 += self._mig_rm[None]
+
+        with _x64():
+            out = _ctrl_exec(
+                self._device_tables(),
+                {k: jnp.asarray(v) for k, v in chunks.items()},
+                jnp.asarray(plane0.astype(np.float32)),
+                jnp.asarray(plane0.sum(axis=2)),
+                jnp.asarray(tt), jnp.asarray(tp),
+                {k: jnp.asarray(v) for k, v in cc.items()}, meta)
+            out = jax.tree_util.tree_map(np.asarray, out)
+
+        sp_all, telem = out["slot_plan"], out["telem"]
+        probe_o, sched_o = out["probe"], out["sched"]
+        srows = ct["srows"]
+
+        def expand_srows(a):
+            full = np.zeros(a.shape[:-1] + (self.n_stations,), a.dtype)
+            full[..., srows] = a
+            return full
+
+        names = list(self.batch.names)
+        outcomes = []
+        for f in range(F):
+            schedule = PlanSchedule(plans=self.plans, slot_plan=sp_all[f],
+                                    name=f"replan/{rcfg.mode}")
+            decisions = [
+                ReplanDecision(
+                    boundary=k, slot=k % n_slots,
+                    chosen=int(telem["chosen"][f, k]),
+                    switched=bool(telem["switched"][f, k]),
+                    scores=telem["scores"][f, k].copy(),
+                    migration_bytes=float(telem["mig_bytes"][f, k]))
+                for k in range(K1) if dmask[f, k]
+            ]
+            # Decision-event channel: the decide loop's device telemetry
+            # at this cell's decide boundaries, export-ready.
+            dk = np.flatnonzero(dmask[f])
+            trace = DecisionTrace(
+                period_s=float(qcfg.slot_period_s),
+                boundaries=dk.astype(np.int64),
+                slots=(dk % n_slots).astype(np.int64),
+                scores=telem["scores"][f, dk].astype(np.float64),
+                chosen=telem["chosen"][f, dk].astype(np.int64),
+                switched=telem["switched"][f, dk].astype(bool),
+                migration_bytes=telem["mig_bytes"][f, dk]
+                .astype(np.float64))
+            report = ReplanReport(schedule=schedule, decisions=decisions,
+                                  candidates=list(self.plans),
+                                  trace=trace)
+            probe_res = None
+            if rcfg.mode == "backlog":
+                po = {k2: v[f] for k2, v in probe_o.items()}
+                po["work_sum"] = self._expand_rows(po["work_sum"])
+                probe_res = self._finalize(np.ones(R, dtype=bool), po,
+                                           self.admission_on)
+            stitched = {
+                k2: np.concatenate([probe_o[k2][f], sched_o[k2][f]],
+                                   axis=0)
+                for k2 in ("ttft", "e2e", "tok_total", "tok_over",
+                           "shed", "retries")}
+            stitched["work_sum"] = np.concatenate(
+                [self._expand_rows(probe_o["work_sum"][f]),
+                 expand_srows(sched_o["work_sum"][f])[None]], axis=0)
+            plan_tok = sp_all[f][self.slots]
+            billed = float(sum(
+                mg.bytes_moved for _, mg in schedule.migrations_over(
+                    T * qcfg.dt_s, qcfg.slot_period_s,
+                    qcfg.migration_bytes_per_expert)))
+            res = self._finalize(
+                np.ones(R, dtype=bool), stitched, self.admission_on,
+                names=names + [schedule.name],
+                nan_tok=np.concatenate(
+                    [self.nan_tok,
+                     self.nan_tok[plan_tok, np.arange(M)][None]]),
+                fail_ingress=np.concatenate(
+                    [self.fail_ingress,
+                     self.fail_ingress[plan_tok[:R],
+                                       np.arange(R)][None]]),
+                migration_bytes=np.append(self.migration_bytes, billed))
+            outcomes.append(ReplanOutcome(report=report, result=res,
+                                          probe=probe_res, sim=self))
+        return outcomes
 
     def run_legacy(self, active: np.ndarray | None = None,
                    zero_load: bool = False,
@@ -1949,6 +2920,14 @@ class FleetSim:
                         work, wdec, cnt, self._batch_table,
                         self._batch_cap, self._batch_window)
             if adm_on:
+                pid_kw = None
+                if acfg.policy == "pid":
+                    gain = np.ones(P) if acfg.gain_scale is None \
+                        else np.asarray(acfg.gain_scale, dtype=np.float64)
+                    pid_kw = dict(kp=jnp.asarray(acfg.kp),
+                                  ki=jnp.asarray(acfg.ki),
+                                  kd=jnp.asarray(acfg.kd),
+                                  gain=jnp.asarray(gain))
                 wait, dropped, admit = admission_queue_scan(
                     jnp.asarray(work), jnp.asarray(qcfg.buffer_s),
                     qcfg.dt_s, ttft0, tpot0, ctrl, gw_idx, exp_idx,
@@ -1956,7 +2935,7 @@ class FleetSim:
                     margin * acfg.ttft_target_s,
                     margin * acfg.tpot_target_s,
                     acfg.increase, acfg.decrease, acfg.admit_min,
-                    batching=batch_kw)
+                    batching=batch_kw, pid=pid_kw)
                 # Monotone outer iteration: accumulate the trace as a
                 # running minimum so the shed set only grows and the
                 # fixed point converges from the congested side.
@@ -1995,7 +2974,12 @@ class FleetSim:
         return self._finalize(active, out, adm_on, kv_slots)
 
     def _finalize(self, active: np.ndarray, out: dict, adm_on: bool,
-                  kv_slots: int | None = None) -> TrafficResult:
+                  kv_slots: int | None = None, *,
+                  names: list | None = None,
+                  nan_tok: np.ndarray | None = None,
+                  fail_ingress: np.ndarray | None = None,
+                  migration_bytes: np.ndarray | None = None
+                  ) -> TrafficResult:
         """Host post-processing shared by every execution path.
 
         Turns one run's raw outcome tensors (``ttft``/``e2e`` (P, R),
@@ -2004,15 +2988,27 @@ class FleetSim:
         :class:`~repro.traffic.metrics.PlanTraffic` rows: delivery
         failure aggregation, the static KV admission cap, spans,
         utilization and the latency quantiles' NaN masking.
+
+        The plan axis P is taken from the outcome tensors (the joint
+        control plane stitches a decided schedule row onto the
+        candidate rows); the keyword overrides supply that extra row's
+        per-plan tables, defaulting to this simulator's own.
         """
         qcfg, req = self.qcfg, self.requests
-        P, R = self.n_plans, self.n_requests
+        R = self.n_requests
+        P = out["ttft"].shape[0]
+        names = self.batch.names if names is None else names
+        nan_tok = self.nan_tok if nan_tok is None else nan_tok
+        fail_ingress = (self.fail_ingress if fail_ingress is None
+                        else fail_ingress)
+        migration_bytes = (self.migration_bytes if migration_bytes is None
+                           else migration_bytes)
         kv = qcfg.kv_slots if kv_slots is None else kv_slots
         ttft, e2e = out["ttft"], out["e2e"]
         tok_total, shed, retries = out["tok_total"], out["shed"], \
             out["retries"]
 
-        fail_tok = self.nan_tok | out["tok_over"]
+        fail_tok = nan_tok | out["tok_over"]
         failed = fail_tok[:, :R] \
             | _segment_any(fail_tok[:, R:], self.tok_req, R)      # (P, R)
         if adm_on:
@@ -2020,7 +3016,7 @@ class FleetSim:
             # drops); admitted requests entered via a feasible attempt.
             failed = failed | shed
         else:
-            failed = failed | self.fail_ingress
+            failed = failed | fail_ingress
 
         # KV admission cap: reject arrivals that would exceed the
         # in-flight budget (first-order: in-flight counted over all
@@ -2059,7 +3055,7 @@ class FleetSim:
             with np.errstate(invalid="ignore"):
                 tpot = (e2e[p] - ttft[p]) / req.decode_len
             plans_out.append(PlanTraffic(
-                plan_name=self.batch.names[p],
+                plan_name=names[p],
                 active=active.copy(),
                 served=served[p],
                 ttft_s=np.where(served[p], ttft[p], np.nan),
@@ -2072,7 +3068,7 @@ class FleetSim:
                 shed=(shed[p] & active) if adm_on else None,
                 retries=np.where(served[p], retries[p], 0)
                 if adm_on else None,
-                migration_bytes=float(self.migration_bytes[p]),
+                migration_bytes=float(migration_bytes[p]),
             ))
         return TrafficResult(plans=plans_out, requests=req,
                              slots=self.slots, n_bins=self.n_bins,

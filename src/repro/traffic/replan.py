@@ -138,11 +138,18 @@ class ReplanDecision:
 
 @dataclasses.dataclass
 class ReplanReport:
-    """The controller's full trajectory and the schedule it assembled."""
+    """The controller's full trajectory and the schedule it assembled.
+
+    ``trace`` is the joint control plane's decision-event channel
+    (:class:`repro.obs.probes.DecisionTrace`) — set only by the fused
+    grid path, where the decisions are device telemetry rather than a
+    host walk; the host controller leaves it ``None``.
+    """
 
     schedule: PlanSchedule
     decisions: list[ReplanDecision]
     candidates: list
+    trace: "DecisionTrace | None" = None
 
     @property
     def n_switches(self) -> int:
@@ -287,6 +294,44 @@ def build_replan_schedule(
                         candidates=candidates)
 
 
+def replan_base_scores(
+    candidates: list,
+    topo: TopologySample,
+    activation: ActivationModel,
+    workload: MoEWorkload,
+    compute: ComputeConfig,
+    rng: np.random.Generator,
+    rcfg: ReplanConfig,
+) -> np.ndarray:
+    """Backlog-free candidate scores per topology slot, (n_slots, C).
+
+    Exactly the ``scores_at(slot, backlog=None)`` table of
+    :func:`build_replan_schedule` — zero-load mean latency plus the
+    drop penalty, with the shared common-random-number draws consumed
+    from ``rng`` once.  The joint control plane
+    (``FleetSim.run_replan_grid``) precomputes this host-side and adds
+    the backlog-inflation term on device, so the decide walk's scores
+    match the host controller's bit for bit.
+    """
+    candidates = list(candidates)
+    if not candidates:
+        raise ValueError("empty candidate pool")
+    batch = PlanBatch.from_plans(candidates, topo)
+    draws = np.stack([activation.sample(layer, rng, rcfg.n_tokens)
+                      for layer in range(activation.n_layers)])
+    out = np.empty((topo.n_slots, len(candidates)))
+    for slot in range(topo.n_slots):
+        res = evaluate_plans(
+            candidates, topo, activation, workload, compute, rng,
+            n_tokens=rcfg.n_tokens, batch=batch,
+            slots=np.full(rcfg.n_tokens, slot, dtype=np.int64),
+            draws=draws)
+        for c, r in enumerate(res):
+            base = r.mean_s if np.isfinite(r.mean_s) else rcfg.drop_penalty_s
+            out[slot, c] = base + r.drop_rate * rcfg.drop_penalty_s
+    return out
+
+
 @dataclasses.dataclass
 class ReplanOutcome:
     """Probe -> decide -> evaluate, bundled.
@@ -416,3 +461,61 @@ def replan_traffic(
         final_sim, result = evaluate(report.schedule)
     return ReplanOutcome(report=report, result=result,
                          probe=probe_res, sim=final_sim)
+
+
+def replan_traffic_fused(
+    candidates: list,
+    topo: TopologySample,
+    activation: ActivationModel,
+    workload: MoEWorkload,
+    compute: ComputeConfig,
+    requests: RequestBatch,
+    rng: np.random.Generator,
+    rcfg: ReplanConfig,
+    qcfg: QueueConfig,
+    ground: GroundSegment | None = None,
+    *,
+    cadences=None,
+    mig_weights=None,
+    ttft_targets=None,
+    tpot_targets=None,
+    **sim_kwargs,
+):
+    """The joint control plane: :func:`replan_traffic` in ONE launch.
+
+    Same signature and seed discipline as the host loop (one
+    ``rng.integers`` draw seeds the fleet, seed+1 seeds the scoring
+    draws — common random numbers match round for round), but probe,
+    decide walk and schedule evaluation execute inside a single fused
+    device program (``queueing._ctrl_core``).  On CPU the outcome's
+    decisions, switch boundaries and served/shed sets reproduce
+    :func:`replan_traffic` exactly; the host loop stays authoritative
+    for continuous batching, probe rings and calibrated per-satellite
+    service, which this path rejects.
+
+    With any of ``cadences`` / ``mig_weights`` / ``ttft_targets`` given,
+    the call becomes a controller *grid* — every cell batches the
+    leading axis of the same single launch — and returns one
+    :class:`ReplanOutcome` per cell (cadence-major order).  Otherwise a
+    single :class:`ReplanOutcome` is returned, with ``sim`` set to the
+    probe simulator (the host loop's ``sim`` is its final evaluation
+    simulator; the fused path never builds one).
+    """
+    if rcfg.bytes_per_expert is None:
+        rcfg = dataclasses.replace(
+            rcfg, bytes_per_expert=qcfg.migration_bytes_per_expert)
+    seed = int(rng.integers(0, 2**31 - 1))
+    sim = FleetSim(candidates, topo, activation, workload, compute,
+                   requests, np.random.default_rng(seed), qcfg=qcfg,
+                   ground=ground, **sim_kwargs)
+    scores = replan_base_scores(candidates, topo, activation, workload,
+                                compute, np.random.default_rng(seed + 1),
+                                rcfg)
+    outcomes = sim.run_replan_grid(
+        rcfg, base_scores=scores, cadences=cadences,
+        mig_weights=mig_weights, ttft_targets=ttft_targets,
+        tpot_targets=tpot_targets)
+    if (cadences is None and mig_weights is None and ttft_targets is None
+            and tpot_targets is None):
+        return outcomes[0]
+    return outcomes

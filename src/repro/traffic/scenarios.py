@@ -30,7 +30,8 @@ from .admission import AdmissionConfig
 from .ground import GroundSegment
 from .metrics import SLO, TrafficResult
 from .queueing import FleetSim, QueueConfig
-from .replan import ReplanConfig, ReplanReport, replan_traffic
+from .replan import (ReplanConfig, ReplanReport, replan_traffic,
+                     replan_traffic_fused)
 from .requests import RequestBatch, sample_requests
 
 
@@ -350,6 +351,7 @@ def run_scenario(
     constellation: Constellation | None = None,
     rate_scale: float = 1.0,
     bytes_per_expert: float = 1e6,
+    ctrl: str = "host",
     **sim_kwargs,
 ) -> ScenarioOutcome:
     """Run one named scenario end-to-end.
@@ -367,6 +369,14 @@ def run_scenario(
     and evaluates it alongside the static candidates, so the phase's
     result table carries one extra ``replan/<mode>`` row (for a storm
     scenario, the post phase re-places among the degraded plans).
+    ``ctrl`` picks the controller implementation for those phases:
+    ``"host"`` walks the pinned decide law round by round
+    (:func:`~repro.traffic.replan.replan_traffic`), ``"fused"`` runs
+    the same law inside one device launch per phase
+    (:func:`~repro.traffic.replan.replan_traffic_fused` — decision
+    parity with the host walk is pinned by ``tests/test_control_plane
+    .py``, and the report carries the on-device decision-event
+    channel).
     """
     if isinstance(scenario, str):
         scenario = get_scenario(scenario)
@@ -380,13 +390,19 @@ def run_scenario(
     qcfg = dataclasses.replace(scenario.queue_config(slot_period),
                                migration_bytes_per_expert=bytes_per_expert)
 
+    if ctrl not in ("host", "fused"):
+        raise ValueError(f"unknown controller {ctrl!r} "
+                         "(one of 'host', 'fused')")
+
     def _phase(phase_plans, phase_requests):
         """One phase: replan-controlled when the scenario asks for it."""
         if scenario.replan is not None:
-            out = replan_traffic(phase_plans, topo, activation, workload,
-                                 compute, phase_requests, rng,
-                                 scenario.replan, qcfg, ground=ground,
-                                 **sim_kwargs)
+            controller = replan_traffic if ctrl == "host" \
+                else replan_traffic_fused
+            out = controller(phase_plans, topo, activation, workload,
+                             compute, phase_requests, rng,
+                             scenario.replan, qcfg, ground=ground,
+                             **sim_kwargs)
             return out.result, out.sim, out.report
         sim = FleetSim(phase_plans, topo, activation, workload, compute,
                        phase_requests, rng, qcfg=qcfg, ground=ground,

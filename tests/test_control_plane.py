@@ -1,0 +1,381 @@
+"""Joint control plane: the fused replan+admission decide loop.
+
+``FleetSim.run_replan_grid`` folds probe, the pinned re-placement
+decide law and the decided schedule's evaluation into ONE device launch
+(``queueing._ctrl_core``); ``replan_traffic`` stays the host-walk
+anchor.  These tests pin, on CPU:
+
+* bitwise decision parity (switch boundaries, incumbent sequence,
+  scores, migration bytes) and result parity (served/shed sets, TTFT /
+  E2E / per-token traces) across modes, a switch-heavy world, the
+  hysteresis + migration gates, and the admission-coupled regimes
+  (AIMD and PID share the qhat signal with the replan score);
+* scenario-level parity: ``run_scenario(..., ctrl="fused")`` reproduces
+  the host controller on the registered replan scenarios;
+* ``replan=None`` launches stay bit-identical to the legacy host path
+  (the control plane rides the same kernel without moving its trace);
+* one controller grid (cadence x migration-budget x admission-target)
+  costs exactly one trace — the ``FUSED_TRACE_COUNT`` acceptance pin;
+* the on-device decision-event channel (``DecisionTrace`` /
+  ``joint_decision_events``) mirrors the decisions list.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        rand_intra_cg_plan, sample_topology, spacemoe_plan)
+from repro.obs import DecisionTrace, joint_decision_events
+from repro.traffic import (AdmissionConfig, FleetSim, QueueConfig,
+                           ReplanConfig, get_scenario, replan_traffic,
+                           replan_traffic_fused, run_scenario,
+                           sample_requests)
+from repro.traffic import queueing
+
+CFG = ConstellationConfig.scaled(8, 12, n_slots=10, survival_prob=1.0)
+WL = MoEWorkload.llama_moe_3p5b()
+COMP = ComputeConfig()
+
+
+def _quiet_world():
+    """Low-rate two-plan world: decisions mostly hold the incumbent."""
+    con = Constellation(CFG)
+    topo = sample_topology(con, LinkConfig(), np.random.default_rng(0))
+    activ = ActivationModel.zipf(4, 4, 2, seed=1)
+    plans = [spacemoe_plan(con, topo, activ),
+             rand_intra_cg_plan(con.cfg, 4, 4, np.random.default_rng(7))]
+    req = sample_requests(np.random.default_rng(2), rate_rps=3.0,
+                          horizon_s=60.0, n_stations=1, prompt_median=4,
+                          prompt_max=16, decode_mean=4, decode_max=8)
+    qcfg = QueueConfig(dt_s=0.05, tail_s=30.0, slot_period_s=20.0,
+                       buffer_s=3.0)
+    return topo, activ, plans, req, qcfg
+
+
+def _switch_world(admission: AdmissionConfig | None = None):
+    """Congested three-plan world that forces real plan switches."""
+    con = Constellation(CFG)
+    topo = sample_topology(con, LinkConfig(), np.random.default_rng(0))
+    activ = ActivationModel.zipf(4, 4, 2, seed=1)
+    plans = [rand_intra_cg_plan(con.cfg, 4, 4, np.random.default_rng(7)),
+             spacemoe_plan(con, topo, activ),
+             rand_intra_cg_plan(con.cfg, 4, 4, np.random.default_rng(11))]
+    req = sample_requests(np.random.default_rng(2), rate_rps=40.0,
+                          horizon_s=60.0, n_stations=2, prompt_median=8,
+                          prompt_max=32, decode_mean=8, decode_max=16)
+    qcfg = QueueConfig(dt_s=0.05, tail_s=30.0, slot_period_s=10.0,
+                       buffer_s=6.0 if admission is not None else 3.0,
+                       admission=admission)
+    return topo, activ, plans, req, qcfg
+
+
+def _assert_same_report(host, fused):
+    """Identical decision trajectory: boundaries, incumbents, scores."""
+    assert np.array_equal(host.schedule.slot_plan,
+                          fused.schedule.slot_plan)
+    assert len(host.decisions) == len(fused.decisions)
+    for dh, df in zip(host.decisions, fused.decisions):
+        assert (dh.boundary, dh.slot, dh.chosen, dh.switched) \
+            == (df.boundary, df.slot, df.chosen, df.switched), (dh, df)
+        np.testing.assert_array_equal(dh.scores, df.scores,
+                                      err_msg=str(dh))
+        assert dh.migration_bytes == df.migration_bytes
+
+
+def _assert_same_decisions(host, fused):
+    _assert_same_report(host.report, fused.report)
+
+
+def _assert_same_result(host, fused):
+    """Bitwise result parity: served/shed sets and latency traces."""
+    assert [p.plan_name for p in host.plans] \
+        == [p.plan_name for p in fused.plans]
+    for ph, pf in zip(host.plans, fused.plans):
+        np.testing.assert_array_equal(ph.served, pf.served,
+                                      err_msg=ph.plan_name)
+        if ph.shed is not None or pf.shed is not None:
+            np.testing.assert_array_equal(ph.shed, pf.shed,
+                                          err_msg=ph.plan_name)
+        np.testing.assert_array_equal(ph.ttft_s, pf.ttft_s,
+                                      err_msg=ph.plan_name)
+        np.testing.assert_array_equal(ph.e2e_s, pf.e2e_s,
+                                      err_msg=ph.plan_name)
+        np.testing.assert_array_equal(ph.token_total_s, pf.token_total_s,
+                                      err_msg=ph.plan_name)
+        assert ph.migration_bytes == pf.migration_bytes
+
+
+def _run_both(topo, activ, plans, req, qcfg, rcfg, seed=4):
+    host = replan_traffic(plans, topo, activ, WL, COMP, req,
+                          np.random.default_rng(seed), rcfg, qcfg)
+    fused = replan_traffic_fused(plans, topo, activ, WL, COMP, req,
+                                 np.random.default_rng(seed), rcfg, qcfg)
+    return host, fused
+
+
+# --------------------------------------------------------------------- #
+# Decision + result parity: fused controller vs the host walk
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("mode", ["backlog", "periodic", "off"])
+def test_fused_matches_host_all_modes(mode):
+    """Every controller mode reproduces the host walk bit for bit on a
+    quiet world (decisions mostly hold; scores must still agree)."""
+    topo, activ, plans, req, qcfg = _quiet_world()
+    host, fused = _run_both(topo, activ, plans, req, qcfg,
+                            ReplanConfig(mode=mode))
+    _assert_same_decisions(host, fused)
+    _assert_same_result(host.result, fused.result)
+    if mode == "backlog":
+        assert fused.probe is not None
+        _assert_same_result(host.probe, fused.probe)
+
+
+def test_fused_matches_host_switching_world():
+    """With the gates zeroed the congested world forces real switches,
+    and the fused controller lands every one of them on the host's
+    boundaries with the host's incumbent sequence."""
+    topo, activ, plans, req, qcfg = _switch_world()
+    host, fused = _run_both(
+        topo, activ, plans, req, qcfg,
+        ReplanConfig(mode="backlog", hysteresis=0.0,
+                     migration_weight_s_per_mb=0.0))
+    assert host.report.n_switches >= 3      # the world must actually switch
+    _assert_same_decisions(host, fused)
+    _assert_same_result(host.result, fused.result)
+
+
+def test_fused_matches_host_gated():
+    """Hysteresis and the migration-cost gate (the pinned decide law's
+    two dampers) produce identical switch suppression on device."""
+    topo, activ, plans, req, qcfg = _switch_world()
+    free = ReplanConfig(mode="backlog", hysteresis=0.0,
+                        migration_weight_s_per_mb=0.0)
+    gated = ReplanConfig(mode="backlog", hysteresis=0.02,
+                         migration_weight_s_per_mb=0.001)
+    host, fused = _run_both(topo, activ, plans, req, qcfg, gated)
+    _assert_same_decisions(host, fused)
+    _assert_same_result(host.result, fused.result)
+    # The gates must bite somewhere, or this test pins nothing.
+    host_free, _ = _run_both(topo, activ, plans, req, qcfg, free)
+    assert host.report.n_switches <= host_free.report.n_switches
+
+
+@pytest.mark.parametrize("policy", ["aimd", "pid"])
+def test_fused_matches_host_with_admission(policy):
+    """Joint controller: admission (AIMD / PID) and the replan score
+    read the same qhat signal inside one launch, and still reproduce
+    the host loop's decisions and served/shed sets exactly."""
+    topo, activ, plans, req, qcfg = _switch_world(
+        AdmissionConfig(policy=policy, ttft_target_s=60.0))
+    host, fused = _run_both(
+        topo, activ, plans, req, qcfg,
+        ReplanConfig(mode="backlog", hysteresis=0.0,
+                     migration_weight_s_per_mb=0.0))
+    assert host.report.n_switches >= 1
+    _assert_same_decisions(host, fused)
+    _assert_same_result(host.result, fused.result)
+
+
+# --------------------------------------------------------------------- #
+# Scenario-level parity (the registered replan scenarios)
+# --------------------------------------------------------------------- #
+
+
+def _scenario_world():
+    con = Constellation(CFG)
+    topo = sample_topology(con, LinkConfig(), np.random.default_rng(0))
+    activ = ActivationModel.zipf(4, 4, 2, seed=1)
+    plans = [spacemoe_plan(con, topo, activ),
+             rand_intra_cg_plan(con.cfg, 4, 4, np.random.default_rng(7))]
+    return con, topo, activ, plans
+
+
+def test_scenario_parity_regional_hotspot():
+    """run_scenario(ctrl="fused") == ctrl="host" on the hotspot replan
+    scenario: same schedule, decisions and per-plan traces."""
+    con, topo, activ, plans = _scenario_world()
+    sc = dataclasses.replace(
+        get_scenario("regional-hotspot-replan"), horizon_s=60.0,
+        tail_s=30.0, slot_period_s=15.0, decode_mean=4, decode_max=8,
+        prompt_median=4, prompt_max=16)
+    host = run_scenario(sc, plans, topo, activ, WL, COMP,
+                        np.random.default_rng(4), constellation=con,
+                        rate_scale=2.0, ctrl="host")
+    fused = run_scenario(sc, plans, topo, activ, WL, COMP,
+                         np.random.default_rng(4), constellation=con,
+                         rate_scale=2.0, ctrl="fused")
+    _assert_same_report(host.replan, fused.replan)
+    _assert_same_result(host.result, fused.result)
+    assert host.replan.trace is None          # host walk: no device telem
+    assert isinstance(fused.replan.trace, DecisionTrace)
+
+
+@pytest.mark.slow
+def test_scenario_parity_failure_storm():
+    """Both phases of the storm scenario re-place identically under the
+    fused controller (the post phase re-decides among degraded plans)."""
+    con, topo, activ, plans = _scenario_world()
+    sc = dataclasses.replace(
+        get_scenario("failure-storm-replan"), horizon_s=60.0, tail_s=30.0,
+        failure_at_s=30.0, slot_period_s=15.0, decode_mean=4, decode_max=8,
+        prompt_median=4, prompt_max=16)
+    host = run_scenario(sc, plans, topo, activ, WL, COMP,
+                        np.random.default_rng(4), constellation=con,
+                        rate_scale=3.0, ctrl="host")
+    fused = run_scenario(sc, plans, topo, activ, WL, COMP,
+                         np.random.default_rng(4), constellation=con,
+                         rate_scale=3.0, ctrl="fused")
+    for rh, rf in ((host.replan, fused.replan),
+                   (host.post_replan, fused.post_replan)):
+        assert rh is not None and rf is not None
+        assert np.array_equal(rh.schedule.slot_plan, rf.schedule.slot_plan)
+        for dh, df in zip(rh.decisions, rf.decisions):
+            assert (dh.boundary, dh.chosen, dh.switched) \
+                == (df.boundary, df.chosen, df.switched)
+    _assert_same_result(host.result, fused.result)
+    _assert_same_result(host.post_failure, fused.post_failure)
+
+
+# --------------------------------------------------------------------- #
+# replan=None launches stay on the unmodified kernel
+# --------------------------------------------------------------------- #
+
+
+def test_replan_none_bit_identical():
+    """``replan=None`` launches ride the unmodified fused trace: a
+    controller launch in between must not perturb a plain run bitwise,
+    and the plain run keeps the fleet bench's fused/legacy contract
+    (identical served sets, latencies to float32 round-off)."""
+    topo, activ, plans, req, qcfg = _quiet_world()
+    sim = FleetSim(plans, topo, activ, WL, COMP, req,
+                   np.random.default_rng(4), qcfg)
+    base = sim.run()
+    sim.run(replan=ReplanConfig(mode="backlog"),
+            replan_rng=np.random.default_rng(5))
+    again = sim.run()
+    for pa, pb in zip(base.plans, again.plans):
+        np.testing.assert_array_equal(pa.served, pb.served)
+        np.testing.assert_array_equal(pa.ttft_s, pb.ttft_s)
+        np.testing.assert_array_equal(pa.e2e_s, pb.e2e_s)
+        np.testing.assert_array_equal(pa.token_total_s, pb.token_total_s)
+    legacy = sim.run_legacy()
+    for pf, pl_ in zip(base.plans, legacy.plans):
+        np.testing.assert_array_equal(pf.served, pl_.served)
+        np.testing.assert_allclose(pf.ttft_s, pl_.ttft_s, rtol=1e-5)
+        np.testing.assert_allclose(pf.e2e_s, pl_.e2e_s, rtol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# One launch per controller grid (the FUSED_TRACE_COUNT pin)
+# --------------------------------------------------------------------- #
+
+
+def test_controller_grid_single_trace():
+    """A full 3x3x3 cadence x migration-budget x admission-target grid
+    batches the leading axis of ONE device program: exactly one trace,
+    27 outcomes, per-cell cadences visible in the decision counts."""
+    topo, activ, plans, req, qcfg = _quiet_world()
+    qcfg = dataclasses.replace(
+        qcfg, buffer_s=6.0,
+        admission=AdmissionConfig(policy="aimd", ttft_target_s=60.0))
+    sim = FleetSim(plans, topo, activ, WL, COMP, req,
+                   np.random.default_rng(4), qcfg)
+    rcfg = ReplanConfig(mode="backlog", hysteresis=0.0,
+                        migration_weight_s_per_mb=0.0)
+    cadences = [1, 2, 3]
+    mig_weights = [0.0, 0.01, 0.1]
+    ttft_targets = [30.0, 60.0, 90.0]
+
+    before = queueing.FUSED_TRACE_COUNT
+    outcomes = sim.run_many(replan=rcfg, cadences=cadences,
+                            mig_weights=mig_weights,
+                            ttft_targets=ttft_targets)
+    assert queueing.FUSED_TRACE_COUNT - before == 1, \
+        "the controller grid must compile as a single device program"
+    assert len(outcomes) == 27
+
+    # Cadence-major cell order: decision counts follow the decide mask.
+    n_bounds = len(outcomes[0].report.decisions) - 1 \
+        if cadences[0] == 1 else None
+    for f, out in enumerate(outcomes):
+        cad = cadences[f // 9]
+        ks = [d.boundary for d in out.report.decisions]
+        assert ks[0] == 0
+        assert all(k % cad == 0 for k in ks[1:])
+        assert isinstance(out.report.trace, DecisionTrace)
+    if n_bounds:
+        # Coarser cadences decide at strictly fewer boundaries.
+        assert len(outcomes[9].report.decisions) \
+            < len(outcomes[0].report.decisions)
+
+    # Relaunching the identical grid reuses the compile cache.
+    before = queueing.FUSED_TRACE_COUNT
+    sim.run_many(replan=rcfg, cadences=cadences, mig_weights=mig_weights,
+                 ttft_targets=ttft_targets)
+    assert queueing.FUSED_TRACE_COUNT == before
+
+
+def test_controller_grid_rejects_host_only_paths():
+    """Paths where the host controller stays authoritative raise
+    instead of silently diverging."""
+    from repro.traffic.batching import BatchingConfig
+    topo, activ, plans, req, qcfg = _quiet_world()
+    rcfg = ReplanConfig(mode="backlog")
+
+    sim = FleetSim(plans, topo, activ, WL, COMP, req,
+                   np.random.default_rng(4), qcfg,
+                   batching=BatchingConfig())
+    with pytest.raises(NotImplementedError, match="batching"):
+        sim.run(replan=rcfg)
+
+    qcfg_g = dataclasses.replace(
+        qcfg, admission=AdmissionConfig(policy="pid",
+                                        gain_scale=(1.0, 2.0)))
+    sim = FleetSim(plans, topo, activ, WL, COMP, req,
+                   np.random.default_rng(4), qcfg_g)
+    with pytest.raises(NotImplementedError, match="gain"):
+        sim.run(replan=rcfg)
+
+
+# --------------------------------------------------------------------- #
+# The decision-event channel
+# --------------------------------------------------------------------- #
+
+
+def test_decision_trace_mirrors_decisions():
+    """The device telemetry (DecisionTrace) and the host-visible
+    decisions list tell the same story, and the joint event channel
+    renders one instant per decision."""
+    topo, activ, plans, req, qcfg = _switch_world()
+    _, fused = _run_both(
+        topo, activ, plans, req, qcfg,
+        ReplanConfig(mode="backlog", hysteresis=0.0,
+                     migration_weight_s_per_mb=0.0))
+    tr = fused.report.trace
+    assert isinstance(tr, DecisionTrace)
+    dec = fused.report.decisions
+    assert tr.n_decisions == len(dec)
+    assert tr.n_switches == fused.report.n_switches > 0
+    np.testing.assert_array_equal(tr.boundaries,
+                                  [d.boundary for d in dec])
+    np.testing.assert_array_equal(tr.slots, [d.slot for d in dec])
+    np.testing.assert_array_equal(tr.chosen, [d.chosen for d in dec])
+    np.testing.assert_array_equal(tr.switched, [d.switched for d in dec])
+    np.testing.assert_array_equal(tr.migration_bytes,
+                                  [d.migration_bytes for d in dec])
+    for k, d in enumerate(dec):
+        np.testing.assert_array_equal(tr.scores[k], d.scores)
+    np.testing.assert_allclose(tr.t_s, tr.boundaries * qcfg.slot_period_s)
+
+    events = joint_decision_events(fused.report)
+    assert len(events) == len(dec)
+    assert all(e.kind == "joint" for e in events)
+    assert sum(e.name == "joint switch" for e in events) \
+        == fused.report.n_switches
+    # Host reports carry no device telemetry: the channel is empty.
+    host_report = dataclasses.replace(fused.report, trace=None)
+    assert joint_decision_events(host_report) == []

@@ -16,7 +16,9 @@ Acceptance-style content requirements are opt-in flags::
         --require-aimd --require-replan-switch
 
 ``--require-aimd`` demands >= 1 AIMD control instant,
-``--require-replan-switch`` >= 1 replan switch instant, and
+``--require-replan-switch`` >= 1 replan switch instant,
+``--require-joint-decision`` >= 1 joint control-plane decision instant
+(the fused grid's on-device decide telemetry), and
 ``--require-requests`` >= 1 exported request span — the control-plane
 coverage the observability PR pins on the replan scenarios.
 """
@@ -35,7 +37,8 @@ from repro.obs.schema import count_events, validate_trace  # noqa: E402
 
 def check_file(path: str, require_aimd: bool = False,
                require_replan_switch: bool = False,
-               require_requests: bool = False) -> list[str]:
+               require_requests: bool = False,
+               require_joint_decision: bool = False) -> list[str]:
     """Validate one trace file; returns a list of problems (empty = ok)."""
     try:
         with open(path) as f:
@@ -51,6 +54,12 @@ def check_file(path: str, require_aimd: bool = False,
         problems.append("no replan switch instants "
                         "(--require-replan-switch; run a *-replan "
                         "scenario that actually switches)")
+    if require_joint_decision \
+            and count_events(obj, "joint", ph="i") < 1:
+        problems.append("no joint control-plane decision instants "
+                        "(--require-joint-decision; run a replan "
+                        "scenario through the fused controller, e.g. "
+                        "serve.py --ctrl fused)")
     if require_requests and count_events(obj, "prefill", ph="X") < 1:
         problems.append("no request prefill spans (--require-requests)")
     return problems
@@ -63,6 +72,9 @@ def main(argv=None) -> int:
                     help="demand >= 1 AIMD control instant")
     ap.add_argument("--require-replan-switch", action="store_true",
                     help="demand >= 1 replan switch instant")
+    ap.add_argument("--require-joint-decision", action="store_true",
+                    help="demand >= 1 joint control-plane decision "
+                         "instant (fused controller runs)")
     ap.add_argument("--require-requests", action="store_true",
                     help="demand >= 1 exported request span")
     args = ap.parse_args(argv)
@@ -71,7 +83,8 @@ def main(argv=None) -> int:
     for path in args.traces:
         problems = check_file(path, args.require_aimd,
                               args.require_replan_switch,
-                              args.require_requests)
+                              args.require_requests,
+                              args.require_joint_decision)
         if problems:
             failed = True
             print(f"[check_trace] {path}: FAIL")
