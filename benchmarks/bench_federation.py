@@ -1,0 +1,283 @@
+"""bench_federation — planet-scale federation fast path.
+
+Two stages, both CI-gated through boolean flags (wall-clock, TTFT and
+RSS *values* are recorded but skip-listed by tools/check_bench.py):
+
+Hotspot overflow
+    A K=3 federation with every request homed onto constellation 0 (a
+    regional demand spike).  Federated overflow routing must beat the
+    K-independent baseline (overflow off — bitwise identical to running
+    each member alone, re-checked here) by ``GOODPUT_GAIN_MIN`` x
+    goodput at matched p99 TTFT, and the whole comparison — nested
+    2-entry sweep, every overflow round — must cost exactly one compile
+    trace.
+
+Million-user streaming
+    A ``--fast``-scaled (2e5) / full (1e6+) user trace generated with
+    :func:`repro.traffic.stream_requests` in bounded shards, served by a
+    K=2 federation in one fused launch.  Gates: host prep wall-time
+    (arrival streaming + per-lane chunk compaction) stays below the
+    fused device wall-time, and peak RSS stays under the documented
+    budget (see docs/architecture.md).
+
+Any gate failure raises ``SystemExit`` so the CI smoke fails loudly.
+"""
+from __future__ import annotations
+
+import json
+import resource
+
+import numpy as np
+
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        sample_topology, spacemoe_plan)
+from repro.traffic import (AdmissionConfig, FederationConfig, FleetSim,
+                           QueueConfig, RequestBatch, build_federation,
+                           build_ground_segment, poisson_arrivals,
+                           sample_decode_lens, sample_prompt_lens,
+                           stream_requests)
+from repro.traffic import queueing
+
+from .common import Timer, emit
+
+#: Federated-over-independent goodput floor under the hotspot.
+GOODPUT_GAIN_MIN = 1.3
+#: "Matched p99 TTFT": federated p99 may exceed independent p99 by at
+#: most this factor.
+P99_MATCH_FACTOR = 1.05
+#: Documented peak-RSS budgets for the streaming stage (MB).
+RSS_BUDGET_FAST_MB = 4096
+RSS_BUDGET_FULL_MB = 8192
+
+_WL = MoEWorkload.llama_moe_3p5b()
+_COMP = ComputeConfig()
+
+
+def _peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _member_factory(seed: int, cfg: ConstellationConfig, req: RequestBatch,
+                    qcfg: QueueConfig, n_layers: int, n_experts: int,
+                    top_k: int):
+    """Deterministic FleetSim factory (rebuildable on a shared bin grid)."""
+    def build(min_bins: int = 0) -> FleetSim:
+        con = Constellation(cfg)
+        topo = sample_topology(con, LinkConfig(), np.random.default_rng(seed))
+        activ = ActivationModel.zipf(n_layers, n_experts, top_k, seed=1)
+        ground = build_ground_segment(con, LinkConfig(),
+                                      min_elevation_deg=10.0)
+        return FleetSim([spacemoe_plan(con, topo, activ)], topo, activ,
+                        _WL, _COMP, req, np.random.default_rng(5),
+                        qcfg=qcfg, ground=ground, min_bins=min_bins)
+    return build
+
+
+# --------------------------------------------------------------------- #
+# Stage 1: hotspot overflow vs K independent constellations
+# --------------------------------------------------------------------- #
+
+
+def _hotspot_requests(horizon_s: float, rate_rps: float,
+                      seed: int = 8) -> RequestBatch:
+    rng = np.random.default_rng(seed)
+    t = poisson_arrivals(rate_rps, horizon_s, rng)
+    n = t.size
+    return RequestBatch(
+        arrival_s=t,
+        prompt_len=sample_prompt_lens(n, rng, median=4, sigma=0.4,
+                                      max_len=16),
+        decode_len=sample_decode_lens(n, rng, mean=4, max_len=8),
+        station=rng.integers(0, 8, n),
+    )
+
+
+def _parity_problems(fed, indep, masks) -> list[str]:
+    """Overflow-off member outcomes must be bitwise identical to running
+    each member's FleetSim alone on its home slice."""
+    problems: list[str] = []
+    fields = ("served", "shed", "retries", "ttft_s", "e2e_s", "tpot_s",
+              "station_util", "token_total_s")
+
+    def same(a: np.ndarray, b: np.ndarray) -> bool:
+        # Bitwise, but NaN == NaN (unserved requests carry NaN latency).
+        if np.issubdtype(np.asarray(a).dtype, np.floating):
+            return np.array_equal(a, b, equal_nan=True)
+        return np.array_equal(a, b)
+
+    for s, res in enumerate(indep):
+        for k, sim in enumerate(fed.sims):
+            alone = sim.run(masks[s] & (fed.home == k))
+            for pf, pa in zip(res.members[k].plans, alone.plans):
+                for name in fields:
+                    if not same(getattr(pf, name), getattr(pa, name)):
+                        problems.append(
+                            f"sweep {s} member {k} plan {pf.plan_name!r}: "
+                            f"{name} differs from standalone run")
+    return problems
+
+
+def _run_hotspot(fast: bool) -> dict:
+    cfg = ConstellationConfig.scaled(8, 12, n_slots=10, survival_prob=1.0)
+    req = _hotspot_requests(60.0, 5.0)
+    qcfg = QueueConfig(dt_s=0.05, tail_s=60.0,
+                       admission=AdmissionConfig(ttft_target_s=10.0))
+    # Regional spike: every request homed onto constellation 0.
+    home = np.zeros(req.n_requests, dtype=np.int64)
+    with Timer() as t_build:
+        fed = build_federation(
+            [_member_factory(s, cfg, req, qcfg, 4, 4, 2) for s in (0, 1, 2)],
+            FederationConfig(overflow=True), home=home)
+
+    # Nested 2-entry sweep: trace-pin check covers the sweep AND every
+    # overflow round below (same shapes -> compile-cache hits).
+    masks = np.stack([
+        np.ones(req.n_requests, dtype=bool),
+        np.random.default_rng(1).random(req.n_requests) < 0.7])
+    traces0 = queueing.FUSED_TRACE_COUNT
+    with Timer() as t_indep:
+        indep = fed.run_many(masks, overflow=False)
+    with Timer() as t_fed:
+        federated = fed.run_many(masks, overflow=True)
+    traces_used = queueing.FUSED_TRACE_COUNT - traces0
+
+    problems = _parity_problems(fed, indep, masks)
+
+    gi = indep[0].federated.goodput_tok_s
+    gf = federated[0].federated.goodput_tok_s
+    p99_i = indep[0].federated.quantile("ttft", 0.99)
+    p99_f = federated[0].federated.quantile("ttft", 0.99)
+    gain = gf / gi if gi > 0 else np.inf
+    return {
+        "n_members": len(fed.sims),
+        "n_requests": int(req.n_requests),
+        "goodput_indep_tok_s": round(float(gi), 3),
+        "goodput_fed_tok_s": round(float(gf), 3),
+        "goodput_gain_ratio": round(float(gain), 3),
+        "ttft_p99_indep_s": round(float(p99_i), 3),
+        "ttft_p99_fed_s": round(float(p99_f), 3),
+        "n_shed_indep": int(indep[0].federated.shed.sum()),
+        "n_shed_fed": int(federated[0].federated.shed.sum()),
+        "n_rerouted": int((federated[0].hops > 0).sum()),
+        "n_rounds": int(federated[0].n_rounds),
+        "traces_used": int(traces_used),
+        "build_wall_s": round(t_build.seconds, 3),
+        "indep_wall_s": round(t_indep.seconds, 3),
+        "fed_wall_s": round(t_fed.seconds, 3),
+        "goodput_gain_ok": bool(gain >= GOODPUT_GAIN_MIN),
+        "p99_matched_ok": bool(p99_f <= P99_MATCH_FACTOR * p99_i),
+        "single_trace_ok": bool(traces_used == 1),
+        "parity_ok": not problems,
+        "parity_problems": problems,
+    }
+
+
+# --------------------------------------------------------------------- #
+# Stage 2: million-user streaming trace in one fused launch
+# --------------------------------------------------------------------- #
+
+
+def _run_million(fast: bool) -> dict:
+    n_target = 2.0e5 if fast else 1.01e6
+    rate_max = 2500.0
+    horizon_s = n_target / (0.96 * rate_max)
+    budget_mb = RSS_BUDGET_FAST_MB if fast else RSS_BUDGET_FULL_MB
+
+    with Timer() as t_stream:
+        req, n_env = stream_requests(
+            np.random.default_rng(0),
+            lambda t: np.full_like(t, 0.96 * rate_max),
+            rate_max, horizon_s, n_stations=8, shard_s=60.0,
+            prompt_median=2, prompt_sigma=0.3, prompt_max=4,
+            decode_mean=1, decode_max=2)
+
+    cfg = ConstellationConfig.scaled(6, 8, n_slots=8, survival_prob=1.0)
+    qcfg = QueueConfig(dt_s=0.5, tail_s=60.0,
+                       admission=AdmissionConfig(ttft_target_s=20.0))
+    with Timer() as t_build:
+        fed = build_federation(
+            [_member_factory(s, cfg, req, qcfg, 2, 2, 1) for s in (0, 1)])
+
+    # Host prep (per-lane chunk compaction) vs device time, split via
+    # FederationSim._prepare / _execute.
+    K = len(fed.sims)
+    offered = np.stack([fed.home == k for k in range(K)])[None]
+    with Timer() as t_prep:
+        prep = fed._prepare(offered)
+    with Timer() as t_first:
+        fed._execute(prep)           # compile + launch
+    with Timer() as t_device:
+        out = fed._execute(prep)     # steady-state device wall
+    host_prep_s = t_stream.seconds + t_prep.seconds
+
+    n_shed = int(sum((out["shed"][k, 0] & offered[0, k]).sum()
+                     for k in range(K)))
+
+    rss_mb = _peak_rss_mb()
+    return {
+        "n_users": int(req.n_requests),
+        "n_envelope": int(n_env),
+        "n_members": K,
+        "n_bins": int(fed.n_bins),
+        "n_shed_measured": n_shed,
+        "stream_wall_s": round(t_stream.seconds, 3),
+        "build_wall_s": round(t_build.seconds, 3),
+        "prep_wall_s": round(t_prep.seconds, 3),
+        "compile_wall_s": round(t_first.seconds, 3),
+        "device_wall_s": round(t_device.seconds, 3),
+        "host_prep_wall_s": round(host_prep_s, 3),
+        "peak_rss_mb": round(rss_mb, 1),
+        "rss_budget_mb": budget_mb,
+        "prep_ok": bool(host_prep_s < t_device.seconds),
+        "rss_ok": bool(rss_mb < budget_mb),
+    }
+
+
+# --------------------------------------------------------------------- #
+# Driver
+# --------------------------------------------------------------------- #
+
+
+def run(fast: bool = True, json_path: str | None = None) -> dict:
+    hotspot = _run_hotspot(fast)
+    million = _run_million(fast)
+    out = {"fast": fast, "hotspot": hotspot, "million": million}
+
+    emit("federation_hotspot_gain",
+         hotspot["goodput_gain_ratio"],
+         f"goodput {hotspot['goodput_indep_tok_s']}->"
+         f"{hotspot['goodput_fed_tok_s']} tok/s, "
+         f"p99 ttft {hotspot['ttft_p99_indep_s']}->"
+         f"{hotspot['ttft_p99_fed_s']}s, "
+         f"{hotspot['n_rerouted']} rerouted in "
+         f"{hotspot['n_rounds']} rounds, "
+         f"{hotspot['traces_used']} trace")
+    emit("federation_million_users", million["n_users"],
+         f"host prep {million['host_prep_wall_s']}s vs device "
+         f"{million['device_wall_s']}s, peak rss "
+         f"{million['peak_rss_mb']}MB/{million['rss_budget_mb']}MB")
+
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(out, fh, indent=2, sort_keys=True)
+
+    gates = {
+        "hotspot.goodput_gain_ok": hotspot["goodput_gain_ok"],
+        "hotspot.p99_matched_ok": hotspot["p99_matched_ok"],
+        "hotspot.single_trace_ok": hotspot["single_trace_ok"],
+        "hotspot.parity_ok": hotspot["parity_ok"],
+        "million.prep_ok": million["prep_ok"],
+        "million.rss_ok": million["rss_ok"],
+    }
+    failed = [name for name, ok in gates.items() if not ok]
+    if failed:
+        for p in hotspot["parity_problems"]:
+            print(f"  parity: {p}")
+        raise SystemExit(f"bench_federation: gate(s) failed: "
+                         f"{', '.join(failed)}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

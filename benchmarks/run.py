@@ -67,8 +67,8 @@ def main() -> None:
                   file=sys.stderr)
 
     from . import (bench_admission, bench_batching, bench_calibration,
-                   bench_ctrl, bench_engine, bench_fig6, bench_fig7,
-                   bench_fleet, bench_kernels, bench_linkstate,
+                   bench_ctrl, bench_engine, bench_federation, bench_fig6,
+                   bench_fig7, bench_fleet, bench_kernels, bench_linkstate,
                    bench_multi_expert, bench_obs, bench_placement,
                    bench_replan, bench_roofline, bench_table2,
                    bench_traffic)
@@ -91,6 +91,8 @@ def main() -> None:
                  lambda: bench_ctrl.run(fast=args.fast)),
         "fleet": (bench_fleet,
                   lambda: bench_fleet.run(fast=args.fast)),
+        "federation": (bench_federation,
+                       lambda: bench_federation.run(fast=args.fast)),
         "table2": (bench_table2, lambda: bench_table2.run(
             n_tokens=n_tok, n_slots=60 if args.fast else None)),
         "fig6": (bench_fig6,

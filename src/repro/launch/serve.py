@@ -154,6 +154,13 @@ def main(argv=None) -> dict:
                          "steps in batches of up to B_MAX per time bin "
                          "at the service model's batch rate (0 = off, "
                          "the bit-identical FIFO kernel)")
+    ap.add_argument("--federation", type=int, default=0, metavar="K",
+                    help="with --traffic: additionally serve the scenario "
+                         "over a K-member constellation federation in one "
+                         "fused launch; admission-shed requests overflow "
+                         "to the next-best member (needs --admission "
+                         "aimd/pid for overflow; reports the pooled "
+                         "federation row plus one row per member)")
     ap.add_argument("--fail-device", type=int, default=-1,
                     help="elastic demo: fail this EP device and re-plan")
     args = ap.parse_args(argv)
@@ -323,6 +330,36 @@ def main(argv=None) -> dict:
                       f"over {len(rep.decisions)} decision(s)")
                 out[tag] = {"switches": rep.n_switches,
                             "migration_bytes": rep.total_migration_bytes}
+            if args.federation > 0:
+                from repro.traffic import FederationConfig, make_federation
+                from repro.traffic import queueing as _queueing
+                fed_sc = dataclasses.replace(sc, replan=None)
+                fed = make_federation(
+                    fed_sc, args.federation, ccfg, wl, comp,
+                    np.random.default_rng(6),
+                    fed_cfg=FederationConfig(
+                        overflow=fed_sc.admission is not None),
+                    rate_scale=args.rate_scale, n_layers=n_layers,
+                    n_experts=cfg.n_experts, top_k=cfg.top_k)
+                t_before = _queueing.FUSED_TRACE_COUNT
+                fres = fed.run()
+                frow = fres.federated.row(fed_sc.slo)
+                frows = [{"scenario": f"{sc.name}(fed)", **frow}]
+                for k, mem in enumerate(fres.members):
+                    mrow = mem.plans[fed.serve_plan].row(fed_sc.slo)
+                    mrow["plan"] = f"member{k}/{mrow['plan']}"
+                    frows.append({"scenario": f"{sc.name}(fed)", **mrow})
+                print(format_table(frows, prefix="[federation] "))
+                print(f"[federation] K={args.federation} members, "
+                      f"{fres.n_rounds} overflow round(s), "
+                      f"{int((fres.hops > 0).sum())} request(s) "
+                      f"re-routed, "
+                      f"{_queueing.FUSED_TRACE_COUNT - t_before} "
+                      f"trace(s)")
+                out["federation"] = {
+                    "rows": frows, "n_rounds": fres.n_rounds,
+                    "n_rerouted": int((fres.hops > 0).sum()),
+                }
             if args.trace:
                 from repro.obs import (build_flight_log,
                                        summarize_timeseries, write_trace)

@@ -23,8 +23,11 @@ from .admission import (AdmissionConfig, admission_queue_scan,
                         control_bin_flags, resolve_admission)
 from .batching import (BatchingConfig, batched_effective_work,
                        effective_work_np, windowed_counts)
+from .federation import (FederationConfig, FederationResult, FederationSim,
+                         build_federation)
 from .ground import (DEFAULT_STATIONS, GroundSegment, GroundStation,
-                     build_ground_segment, ground_delay_table)
+                     build_ground_segment, ground_delay_table,
+                     rank_constellations)
 from .metrics import (SLO, PlanTraffic, SaturationResult, TrafficResult,
                       format_table, saturation_sweep)
 from .queueing import (FleetSim, QueueConfig, simulate_traffic,
@@ -35,18 +38,21 @@ from .replan import (ReplanConfig, ReplanDecision, ReplanOutcome,
                      replan_traffic_fused)
 from .requests import (RequestBatch, diurnal_rate, hotspot_rate,
                        poisson_arrivals, sample_decode_lens,
-                       sample_prompt_lens, sample_requests, thinned_arrivals)
+                       sample_prompt_lens, sample_requests, stream_arrivals,
+                       stream_requests, thinned_arrivals)
 from .scenarios import (SCENARIOS, ScenarioOutcome, StormReport,
                         TrafficScenario, apply_failure_storm, get_scenario,
-                        make_sim, run_scenario)
+                        make_federation, make_sim, run_scenario)
 
 __all__ = [
     "AdmissionConfig", "admission_queue_scan", "control_bin_flags",
     "resolve_admission",
     "BatchingConfig", "batched_effective_work", "effective_work_np",
     "windowed_counts",
+    "FederationConfig", "FederationResult", "FederationSim",
+    "build_federation",
     "DEFAULT_STATIONS", "GroundSegment", "GroundStation",
-    "build_ground_segment", "ground_delay_table",
+    "build_ground_segment", "ground_delay_table", "rank_constellations",
     "SLO", "PlanTraffic", "SaturationResult", "TrafficResult",
     "format_table", "saturation_sweep",
     "FleetSim", "QueueConfig", "simulate_traffic", "station_waiting_times",
@@ -55,7 +61,8 @@ __all__ = [
     "replan_traffic", "replan_traffic_fused",
     "RequestBatch", "diurnal_rate", "hotspot_rate", "poisson_arrivals",
     "sample_decode_lens", "sample_prompt_lens", "sample_requests",
-    "thinned_arrivals",
+    "stream_arrivals", "stream_requests", "thinned_arrivals",
     "SCENARIOS", "ScenarioOutcome", "StormReport", "TrafficScenario",
-    "apply_failure_storm", "get_scenario", "make_sim", "run_scenario",
+    "apply_failure_storm", "get_scenario", "make_federation", "make_sim",
+    "run_scenario",
 ]

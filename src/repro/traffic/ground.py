@@ -289,3 +289,30 @@ def build_ground_segment(
         elevation_ranked_rad=elev_r,
         ground_delay_s=ground_delay_table(tuple(stations)),
     )
+
+
+def rank_constellations(costs: np.ndarray) -> np.ndarray:
+    """Deterministic cross-constellation preference order per request.
+
+    The federation-level generalization of the per-constellation
+    ``ingress_ranked`` table: given each constellation's ingress cost
+    for each request (uplink + gateway hop; ``+inf`` marks a
+    constellation whose ground segment cannot ingest the request at
+    all), rank the constellations best-first.  A stable argsort breaks
+    ties — equal costs, and the all-``+inf`` tail — by constellation
+    index, so the federation scheduler's routing is reproducible
+    across platforms.
+
+    Args:
+        costs: (K, R) per-constellation ingress cost per request
+            (``np.inf`` = infeasible).
+
+    Returns:
+        (R, K) constellation indices, best first; infeasible
+        constellations sort last (callers must still consult the cost
+        to know where the feasible prefix ends).
+    """
+    costs = np.asarray(costs, dtype=np.float64)
+    if costs.ndim != 2:
+        raise ValueError(f"costs must be (K, R), got {costs.shape}")
+    return np.argsort(costs, axis=0, kind="stable").T

@@ -139,6 +139,27 @@ class PlanTraffic:
             return 0.0
         return self.n_active / self.span_s
 
+    def with_added_latency(self, extra_s: np.ndarray) -> "PlanTraffic":
+        """Copy with per-request latency added to TTFT and E2E.
+
+        The federation scheduler bills inter-constellation forwarding
+        into the latencies of overflow-routed requests this way (the
+        PR 3 gateway-retry pattern lifted one level up): the same shift
+        lands on TTFT and E2E, so TPOT — their difference over the
+        decode length — is unchanged, and NaN (unserved) entries stay
+        NaN.
+
+        Args:
+            extra_s: (R,) seconds to add per request (0 for requests
+                that were never forwarded).
+
+        Returns:
+            A new :class:`PlanTraffic`; ``self`` is untouched.
+        """
+        extra = np.asarray(extra_s, dtype=np.float64)
+        return dataclasses.replace(
+            self, ttft_s=self.ttft_s + extra, e2e_s=self.e2e_s + extra)
+
     def quantile(self, which: str, q: float) -> float:
         """Latency quantile over served requests.
 

@@ -735,10 +735,22 @@ def _fleet_fixed_point(consts, chunks, work0, work0_sum, ttft_target,
             # Monotone outer iteration (see run_legacy): the admit trace
             # accumulates as a running minimum so the shed set only grows.
             admit_floor = jnp.minimum(c["admit_floor"], admit)
-            adm = jnp.transpose(
-                admit_floor[q["att_bin"], :, :, q["att_station"]],
-                (2, 3, 0, 1))                             # (F, P, A, R)
-            ok = (q["adm_u"][None, None] < adm) & lead(q["att_feasible"])
+            if q["att_bin"].ndim == 3:
+                # Federation lanes: the attempt tables ride a leading F
+                # axis (each member constellation's retry gateways and
+                # arrival bins follow its own ground visibility), so
+                # the admit trace is read per (lane, attempt, request).
+                fi = jnp.arange(F)[:, None, None]
+                adm = jnp.moveaxis(
+                    admit_floor[q["att_bin"], fi, :, q["att_station"]],
+                    3, 1)                                 # (F, P, A, R)
+            else:
+                adm = jnp.transpose(
+                    admit_floor[q["att_bin"], :, :, q["att_station"]],
+                    (2, 3, 0, 1))                         # (F, P, A, R)
+            u = (q["adm_u"][:, None] if q["adm_u"].ndim == 3
+                 else q["adm_u"][None, None])
+            ok = (u < adm) & lead(q["att_feasible"])
             shed = ~ok.any(axis=2)                        # (F, P, R)
             retries = jnp.where(shed, 0, jnp.argmax(ok, axis=2))
             att_x = q["att_extra"] if fb else jnp.broadcast_to(
@@ -2301,10 +2313,18 @@ class FleetSim:
 
         # Host-side chunk compaction: keep (f, chunk) pairs whose
         # request is active, in the static row-grouped order.  Padding
-        # rides along with zero work.
+        # rides along with zero work.  The compaction streams one sweep
+        # row at a time — peak host memory is O(n_chunks + active), not
+        # the O(F * n_chunks) dense activity matrix a 2-D np.nonzero
+        # would materialize — with the concatenation preserving the
+        # f-major, chunk-ascending order bit-for-bit.
         P, R = self.n_plans, self.n_requests
         T, SR = self.n_bins, self.n_rows
-        f_id, cid = np.nonzero(masks[:, self._f_req])
+        cids = [np.flatnonzero(masks[f, self._f_req]) for f in range(F)]
+        f_id = np.repeat(np.arange(F),
+                         np.array([c.size for c in cids], dtype=np.int64))
+        cid = (np.concatenate(cids) if cids
+               else np.empty(0, dtype=np.int64))
         n = cid.size
         n_pad = max(-(-n // _CHUNK_BLOCK), 1) * _CHUNK_BLOCK
         pml2 = 2 * P * self.n_tokens * self.n_layers

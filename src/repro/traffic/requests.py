@@ -13,10 +13,18 @@ Arrival models
   station's rate),
 * heavy-tail lengths: lognormal prompt lengths, geometric decode
   lengths, both clipped — the standard shape of LLM serving traces.
+
+Planet-scale traces
+-------------------
+:func:`stream_arrivals` / :func:`stream_requests` run the same thinning
+law one bounded time shard at a time, so a federation bench can push a
+1e6+-user envelope through generation while only the kept survivors
+ever materialize — peak RSS is O(shard), not O(envelope).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
@@ -65,8 +73,25 @@ class RequestBatch:
         )
 
     def request_of_token(self) -> np.ndarray:
-        """(total_decode_tokens,) request index of every decode token."""
-        return np.repeat(np.arange(self.n_requests), self.decode_len)
+        """(total_decode_tokens,) request index of every decode token.
+
+        Memoized: the recorder/metrics paths call this once per plan
+        row, and at 1e6-user scale the ``np.repeat`` is a measurable
+        host cost.  The memo key covers the identity and the content
+        signature of ``decode_len`` (length + token total), so
+        replacing the array — the only supported mutation, e.g. via
+        ``dataclasses.replace`` — invalidates it; the cached array is
+        returned read-only so callers cannot corrupt the shared copy.
+        """
+        key = (id(self.decode_len), self.n_requests,
+               self.total_decode_tokens)
+        cached = getattr(self, "_token_req_memo", None)
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        out = np.repeat(np.arange(self.n_requests), self.decode_len)
+        out.setflags(write=False)
+        object.__setattr__(self, "_token_req_memo", (key, out))
+        return out
 
 
 # --------------------------------------------------------------------- #
@@ -106,15 +131,94 @@ def hotspot_rate(t: np.ndarray, base_rps: float, boost: float,
     return base_rps * (1.0 + boost * np.exp(-0.5 * ((t - center_s) / width_s) ** 2))
 
 
+def _thinning_probs(rates: np.ndarray, rate_max_rps: float,
+                    clip: bool) -> np.ndarray:
+    """Validated keep-probabilities ``rate(t)/rate_max``.
+
+    Lewis-Shedler thinning is only exact when the envelope dominates
+    the instantaneous rate; a ``rate_fn`` that exceeds ``rate_max_rps``
+    used to silently saturate the keep-probability at 1 and bias the
+    trace low.  Now it raises — or, with ``clip=True``, clips with a
+    warning (the caller accepts the rate-capped trace knowingly).
+    """
+    rates = np.asarray(rates, dtype=np.float64)
+    # Tiny tolerance: a rate_fn that *equals* the envelope at its peak
+    # may overshoot by float rounding; that is not an envelope bug.
+    tol = rate_max_rps * 1e-12
+    if rates.size and float(rates.max()) > rate_max_rps + tol:
+        if not clip:
+            raise ValueError(
+                f"thinning envelope violated: rate_fn peaks at "
+                f"{float(rates.max()):g} rps > envelope "
+                f"{rate_max_rps:g} rps — the thinned trace would be "
+                f"biased low; raise rate_max_rps (or pass clip=True "
+                f"to accept a rate-capped trace)")
+        warnings.warn(
+            f"thinning envelope violated (rate_fn peak "
+            f"{float(rates.max()):g} > {rate_max_rps:g} rps); clipping "
+            f"— the trace is rate-capped at the envelope",
+            RuntimeWarning, stacklevel=3)
+        rates = np.minimum(rates, rate_max_rps)
+    return rates / rate_max_rps
+
+
 def thinned_arrivals(rate_fn, rate_max_rps: float, horizon_s: float,
-                     rng: np.random.Generator) -> np.ndarray:
+                     rng: np.random.Generator, *,
+                     clip: bool = False) -> np.ndarray:
     """Non-homogeneous Poisson via Lewis-Shedler thinning: draw at the
-    envelope rate, keep each arrival with prob rate(t)/rate_max."""
+    envelope rate, keep each arrival with prob rate(t)/rate_max.
+
+    Raises ``ValueError`` if ``rate_fn`` ever exceeds the envelope
+    (``clip=True`` clips with a warning instead)."""
     t = poisson_arrivals(rate_max_rps, horizon_s, rng)
     if len(t) == 0:
         return t
-    keep = rng.random(len(t)) < np.asarray(rate_fn(t)) / rate_max_rps
+    keep = rng.random(len(t)) < _thinning_probs(rate_fn(t), rate_max_rps,
+                                                clip)
     return t[keep]
+
+
+def stream_arrivals(rate_fn, rate_max_rps: float, horizon_s: float,
+                    rng: np.random.Generator, *,
+                    shard_s: float = 600.0,
+                    clip: bool = False) -> tuple[np.ndarray, int]:
+    """Sharded Lewis-Shedler thinning for planet-scale envelopes.
+
+    Distribution-identical to :func:`thinned_arrivals` (a thinned
+    Poisson process is Poisson at the thinned rate regardless of how
+    the envelope is generated), but the envelope process materializes
+    one bounded time shard at a time: per shard the arrival count is
+    Poisson(rate_max * shard) and the times are sorted uniforms (the
+    conditional-uniform property), each kept with probability
+    ``rate_fn(t)/rate_max`` before the next shard is drawn.  Peak
+    memory is O(rate_max * shard_s + kept), not O(envelope) — the
+    mechanism behind the million-user federation bench.
+
+    Returns:
+        ``(kept_times, n_generated)`` — kept arrival times (sorted,
+        within ``[0, horizon_s)``) and the total number of *envelope*
+        arrivals generated (the "users offered" count at planet scale).
+    """
+    if rate_max_rps <= 0 or horizon_s <= 0:
+        return np.empty(0, dtype=np.float64), 0
+    shard_s = min(float(shard_s), horizon_s)
+    kept: list[np.ndarray] = []
+    n_generated = 0
+    a = 0.0
+    while a < horizon_s:
+        b = min(a + shard_s, horizon_s)
+        n = int(rng.poisson(rate_max_rps * (b - a)))
+        n_generated += n
+        if n:
+            t = np.sort(rng.uniform(a, b, size=n))
+            keep = rng.random(n) < _thinning_probs(
+                rate_fn(t), rate_max_rps, clip)
+            if keep.any():
+                kept.append(t[keep])
+        a = b
+    out = (np.concatenate(kept) if kept
+           else np.empty(0, dtype=np.float64))
+    return out, n_generated
 
 
 # --------------------------------------------------------------------- #
@@ -227,3 +331,51 @@ def sample_requests(
         decode_len=sample_decode_lens(n, rng, decode_mean, decode_max),
         station=st,
     )
+
+
+def stream_requests(
+    rng: np.random.Generator,
+    rate_fn,
+    rate_max_rps: float,
+    horizon_s: float,
+    n_stations: int,
+    *,
+    shard_s: float = 600.0,
+    station_weights: np.ndarray | None = None,
+    prompt_median: int = 256,
+    prompt_sigma: float = 1.0,
+    prompt_max: int = 4096,
+    decode_mean: int = 64,
+    decode_max: int = 1024,
+) -> tuple[RequestBatch, int]:
+    """Planet-scale trace sampling with bounded peak memory.
+
+    The envelope process (``rate_max_rps``, potentially millions of
+    users over the horizon) streams through :func:`stream_arrivals` in
+    bounded shards; only arrivals kept by the thinning law
+    ``rate_fn(t)/rate_max`` materialize into the returned
+    :class:`RequestBatch`.  Stations are sampled i.i.d. by
+    ``station_weights`` for the kept arrivals (valid because thinning
+    and station assignment are independent), lengths with the same
+    heavy-tail samplers as :func:`sample_requests`.
+
+    Returns:
+        ``(batch, n_generated)`` — the kept-request trace and the
+        total number of envelope arrivals generated (the offered-user
+        count the federation bench reports at the 1e6+ scale).
+    """
+    t, n_generated = stream_arrivals(rate_fn, rate_max_rps, horizon_s,
+                                     rng, shard_s=shard_s)
+    n = len(t)
+    weights = (np.full(n_stations, 1.0 / n_stations)
+               if station_weights is None
+               else np.asarray(station_weights, dtype=np.float64))
+    weights = weights / weights.sum()
+    batch = RequestBatch(
+        arrival_s=t,
+        prompt_len=sample_prompt_lens(n, rng, prompt_median, prompt_sigma,
+                                      prompt_max),
+        decode_len=sample_decode_lens(n, rng, decode_mean, decode_max),
+        station=rng.choice(n_stations, size=n, p=weights),
+    )
+    return batch, n_generated

@@ -339,6 +339,106 @@ def make_sim(
                     rng, qcfg=qcfg, ground=ground, **sim_kwargs)
 
 
+def make_federation(
+    scenario: TrafficScenario | str,
+    n_members: int,
+    constellation_cfg,
+    workload: MoEWorkload,
+    compute: ComputeConfig,
+    rng: np.random.Generator,
+    fed_cfg=None,
+    rate_scale: float = 1.0,
+    requests: RequestBatch | None = None,
+    home: np.ndarray | None = None,
+    n_layers: int = 4,
+    n_experts: int = 4,
+    top_k: int = 2,
+    min_elevation_deg: float = 10.0,
+    **sim_kwargs,
+):
+    """Build a K-member :class:`~repro.traffic.federation.FederationSim`
+    world for a named scenario.
+
+    Each member is an independently-planned constellation (its own
+    topology sample, ground visibility and SpaceMoE placement plan over
+    a fresh :class:`~repro.core.Constellation` of the given config),
+    all serving the scenario's single global request trace; the members
+    are built on one shared time-bin grid via
+    :func:`~repro.traffic.federation.build_federation`, so the whole
+    federation — including a nested rate sweep — costs one device
+    launch.
+
+    Args:
+        scenario: Scenario name or instance (supplies the arrival
+            process and queue/admission config).
+        n_members: K, member constellations.
+        constellation_cfg: One ``ConstellationConfig`` shared by all
+            members (each samples its own topology/outages), or a list
+            of K configs.
+        workload: MoE workload shared by the federation.
+        compute: Compute config shared by the federation.
+        rng: Source of the member topology draws (split per member).
+        fed_cfg: Optional
+            :class:`~repro.traffic.federation.FederationConfig`.
+        rate_scale: Arrival-rate multiplier for the global trace.
+        requests: Optional pre-built global trace (overrides the
+            scenario's arrival process — the million-user bench feeds
+            ``stream_requests`` output here).
+        home: Optional (R,) member index per request (hotspot benches
+            concentrate load on one member this way).
+        n_layers / n_experts / top_k: Activation-model grid.
+        min_elevation_deg: Gateway visibility threshold per member.
+        **sim_kwargs: Extra :class:`FleetSim` keyword arguments.
+
+    Returns:
+        The :class:`~repro.traffic.federation.FederationSim`.
+    """
+    from repro.core import LinkConfig, sample_topology, spacemoe_plan
+    from .federation import build_federation
+    from .ground import build_ground_segment
+
+    if isinstance(scenario, str):
+        scenario = get_scenario(scenario)
+    cfgs = (list(constellation_cfg)
+            if isinstance(constellation_cfg, (list, tuple))
+            else [constellation_cfg] * n_members)
+    if len(cfgs) != n_members:
+        raise ValueError(f"need {n_members} constellation configs")
+
+    # One global trace: station ids are drawn against member 0's ground
+    # segment (members share the gateway *sites*; visibility differs).
+    link = LinkConfig()
+    cons = [Constellation(c) for c in cfgs]
+    grounds = [build_ground_segment(c, link,
+                                    min_elevation_deg=min_elevation_deg)
+               for c in cons]
+    if requests is None:
+        requests = scenario.requests(rng, grounds[0].n_stations,
+                                     rate_scale=rate_scale)
+    # Fixed per-member seeds: a factory must be deterministic — a
+    # member rebuilt on the shared bin grid (build_federation's second
+    # pass) has to sample the *same* topology.
+    seeds = rng.integers(2**32, size=n_members)
+
+    def factory(k):
+        def build(min_bins=0):
+            con, ground = cons[k], grounds[k]
+            r = np.random.default_rng(seeds[k])
+            topo = sample_topology(con, link, r)
+            activ = ActivationModel.zipf(n_layers, n_experts, top_k,
+                                         seed=k + 1)
+            plans = [spacemoe_plan(con, topo, activ)]
+            slot_period = con.cfg.orbital_period_s / topo.n_slots
+            qcfg = scenario.queue_config(slot_period)
+            return FleetSim(plans, topo, activ, workload, compute,
+                            requests, r, qcfg=qcfg, ground=ground,
+                            min_bins=min_bins, **sim_kwargs)
+        return build
+
+    return build_federation([factory(k) for k in range(n_members)],
+                            fed_cfg, home=home, ground=grounds[0])
+
+
 def run_scenario(
     scenario: TrafficScenario | str,
     plans: list[PlacementPlan | MultiExpertPlan],

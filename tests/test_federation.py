@@ -1,0 +1,304 @@
+"""Planet-scale federation guards: one compile trace for a K-member
+federation under a nested rate sweep, bitwise per-member parity with
+standalone FleetSim runs when overflow is off, monotone overflow
+routing with TTFT-billed inter-constellation forwards, shared-bin-grid
+construction, member validation, and the sharded million-user-scale
+arrival/streaming machinery (envelope violation regression included)."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (ActivationModel, ComputeConfig, Constellation,
+                        ConstellationConfig, LinkConfig, MoEWorkload,
+                        rand_intra_cg_plan, sample_topology, spacemoe_plan)
+from repro.traffic import (AdmissionConfig, FederationConfig, FederationSim,
+                           FleetSim, QueueConfig, build_federation,
+                           build_ground_segment, sample_requests,
+                           stream_arrivals, stream_requests,
+                           thinned_arrivals)
+from repro.traffic import queueing
+
+CFG = ConstellationConfig.scaled(8, 12, n_slots=10, survival_prob=1.0)
+WL = MoEWorkload.llama_moe_3p5b()
+COMP = ComputeConfig()
+
+
+def _factory(seed, req, qcfg, n_plans=1):
+    """One member world: own topology draw + ground visibility + plans."""
+    def build(min_bins=0):
+        con = Constellation(CFG)
+        topo = sample_topology(con, LinkConfig(),
+                               np.random.default_rng(seed))
+        activ = ActivationModel.zipf(4, 4, 2, seed=1)
+        ground = build_ground_segment(con, LinkConfig(),
+                                      min_elevation_deg=10.0)
+        plans = [spacemoe_plan(con, topo, activ)]
+        if n_plans > 1:
+            plans.append(rand_intra_cg_plan(CFG, 4, 4,
+                                            np.random.default_rng(seed)))
+        return FleetSim(plans, topo, activ, WL, COMP, req,
+                        np.random.default_rng(5), qcfg=qcfg,
+                        ground=ground, min_bins=min_bins)
+    return build
+
+
+def _requests(horizon_s, rate_rps, seed=8):
+    return sample_requests(np.random.default_rng(seed), rate_rps=rate_rps,
+                           horizon_s=horizon_s, n_stations=8,
+                           prompt_median=4, prompt_max=16, decode_mean=4,
+                           decode_max=8)
+
+
+def _federation(horizon_s=40.0, rate_rps=4.0, ttft_target=8.0, seeds=(0, 1, 2),
+                n_plans=(1, 1, 1), **fed_kwargs):
+    req = _requests(horizon_s, rate_rps)
+    qcfg = QueueConfig(dt_s=0.05, tail_s=40.0,
+                       admission=AdmissionConfig(ttft_target_s=ttft_target))
+    return build_federation(
+        [_factory(s, req, qcfg, n_plans=p) for s, p in zip(seeds, n_plans)],
+        **fed_kwargs), req
+
+
+# --------------------------------------------------------------------- #
+# One launch for the whole federation
+# --------------------------------------------------------------------- #
+
+
+def test_federation_nested_sweep_is_one_trace():
+    """K=3 members under a 2-point nested rate sweep (6 lanes) compile
+    exactly one new trace of the fused kernel — overflow re-launches
+    reuse the cache entry — and a same-shape rerun compiles none."""
+    fed, req = _federation(horizon_s=37.0, rate_rps=3.7)
+    masks = np.stack([
+        np.ones(req.n_requests, dtype=bool),
+        np.random.default_rng(0).random(req.n_requests) < 0.5])
+    before = queueing.FUSED_TRACE_COUNT
+    results = fed.run_many(masks)
+    assert queueing.FUSED_TRACE_COUNT == before + 1
+    assert len(results) == 2
+    assert results[0].n_rounds >= 1
+    before = queueing.FUSED_TRACE_COUNT
+    fed.run_many(masks)
+    assert queueing.FUSED_TRACE_COUNT == before
+
+
+# --------------------------------------------------------------------- #
+# Bitwise parity with standalone members (overflow off)
+# --------------------------------------------------------------------- #
+
+
+def test_overflow_off_members_bitwise_match_standalone_runs():
+    """With overflow disabled, every member's per-plan outcome — across
+    both sweep entries and across members of *different* plan counts
+    (exercising the edge-repeat plan padding) — is bitwise identical to
+    running that FleetSim alone on its home slice of the trace."""
+    fed, req = _federation(horizon_s=41.0, n_plans=(2, 1, 1))
+    assert fed._p_max == 2                 # padding genuinely exercised
+    masks = np.stack([
+        np.ones(req.n_requests, dtype=bool),
+        np.random.default_rng(1).random(req.n_requests) < 0.6])
+    results = fed.run_many(masks, overflow=False)
+    for s in range(2):
+        for k, sim in enumerate(fed.sims):
+            alone = sim.run(masks[s] & (fed.home == k))
+            for pf, pa in zip(results[s].members[k].plans, alone.plans):
+                np.testing.assert_array_equal(pf.served, pa.served)
+                np.testing.assert_array_equal(pf.shed, pa.shed)
+                np.testing.assert_array_equal(pf.retries, pa.retries)
+                np.testing.assert_array_equal(pf.ttft_s, pa.ttft_s)
+                np.testing.assert_array_equal(pf.e2e_s, pa.e2e_s)
+                np.testing.assert_array_equal(pf.tpot_s, pa.tpot_s)
+                np.testing.assert_array_equal(pf.station_util,
+                                              pa.station_util)
+                np.testing.assert_array_equal(pf.token_total_s,
+                                              pa.token_total_s)
+
+
+# --------------------------------------------------------------------- #
+# Overflow routing: monotone fixed point + latency billing
+# --------------------------------------------------------------------- #
+
+
+def test_overflow_reroutes_shed_requests_and_converges():
+    """Under a shedding load, overflow moves rejected requests to the
+    next-ranked member: the pooled shed set shrinks versus independent
+    operation, the fixed point converges within K rounds, offered masks
+    stay disjoint (a request is never served twice), hops respect the
+    K-1 budget, and rejections are permanent (hops only count forward
+    moves along each request's ranking)."""
+    fed, req = _federation(horizon_s=43.0, rate_rps=4.3)
+    off = fed.run(overflow=False)
+    on = fed.run(overflow=True)
+    assert off.federated.shed.sum() > 0            # load genuinely sheds
+    assert on.federated.shed.sum() < off.federated.shed.sum()
+    assert (on.hops > 0).any()
+    assert on.n_rounds <= fed.n_members
+    assert (on.hops <= fed.n_members - 1).all()
+    # Disjoint final offers: each request sits at <= 1 member.
+    assert (on.offered.sum(axis=0) <= 1).all()
+    # Requests that overflowed and got served landed on a member that
+    # ranks *after* their home in their own preference order.
+    moved = (on.hops > 0) & on.federated.served
+    assert moved.any()
+    for r in np.flatnonzero(moved)[:50]:
+        rank = list(fed.ranking[r])
+        assert rank.index(on.assigned[r]) >= on.hops[r]
+    # Serving members' outcomes stay internally consistent: every
+    # served overflow request has finite billed latencies.
+    assert np.isfinite(on.federated.ttft_s[moved]).all()
+    assert np.isfinite(on.federated.e2e_s[moved]).all()
+
+
+def test_overflow_forward_latency_bills_ttft_not_tpot():
+    """Raising the forwarding delay shifts a rerouted request's TTFT and
+    E2E by exactly hops * delta and leaves TPOT bitwise unchanged
+    (routing itself is delay-independent, so the two runs serve
+    identical sets)."""
+    fed, req = _federation(horizon_s=47.0, rate_rps=4.1)
+    lo = fed.run()                                   # derived default delay
+    hi_cfg = FederationConfig(forward_delay_s=fed.forward_delay_s + 2.5)
+    fed_hi = FederationSim(fed.sims, hi_cfg, home=None)
+    hi = fed_hi.run()
+    np.testing.assert_array_equal(lo.federated.served, hi.federated.served)
+    np.testing.assert_array_equal(lo.hops, hi.hops)
+    served = lo.federated.served
+    shift = lo.hops * 2.5
+    np.testing.assert_allclose(hi.federated.ttft_s[served],
+                               lo.federated.ttft_s[served] + shift[served],
+                               rtol=0, atol=1e-9)
+    np.testing.assert_allclose(hi.federated.e2e_s[served],
+                               lo.federated.e2e_s[served] + shift[served],
+                               rtol=0, atol=1e-9)
+    np.testing.assert_array_equal(lo.federated.tpot_s, hi.federated.tpot_s)
+    assert (lo.hops > 0).any()                       # billing exercised
+
+
+def test_home_override_concentrates_load():
+    """An explicit home vector pins every feasible request on one member
+    (the hotspot-bench pattern); infeasible homes fall back to the cost
+    ranking."""
+    fed, req = _federation(horizon_s=38.0)
+    home = np.zeros(req.n_requests, dtype=np.int64)
+    fed_hot = FederationSim(fed.sims, FederationConfig(), home=home)
+    feasible0 = fed_hot.feasible[0]
+    assert (fed_hot.home[feasible0] == 0).all()
+    res = fed_hot.run(overflow=False)
+    # Everything feasible-at-0 is offered to member 0 and nothing else.
+    np.testing.assert_array_equal(res.offered[0], feasible0)
+    assert not res.offered[1:].any() or (
+        fed_hot.home[res.offered[1:].any(axis=0)] != 0).all()
+
+
+# --------------------------------------------------------------------- #
+# Construction: shared bin grid + member validation
+# --------------------------------------------------------------------- #
+
+
+def test_build_federation_equalizes_bin_grids():
+    """Members whose natural horizons disagree are rebuilt on the
+    federation-wide bin grid (the fused kernel's T is static)."""
+    req = _requests(40.0, 2.0)
+    q_short = QueueConfig(dt_s=0.05, tail_s=20.0,
+                          admission=AdmissionConfig(ttft_target_s=10.0))
+    q_long = QueueConfig(dt_s=0.05, tail_s=60.0,
+                         admission=AdmissionConfig(ttft_target_s=10.0))
+    fed = build_federation([_factory(0, req, q_short),
+                            _factory(1, req, q_long)])
+    assert fed.sims[0].n_bins == fed.sims[1].n_bins
+    # Direct construction with mismatched grids refuses loudly.
+    with pytest.raises(ValueError, match="time bins"):
+        FederationSim([_factory(0, req, q_short)(),
+                       _factory(1, req, q_long)()])
+
+
+def test_validation_rejects_incompatible_members():
+    req = _requests(35.0, 2.0)
+    qcfg = QueueConfig(dt_s=0.05, tail_s=40.0,
+                       admission=AdmissionConfig(ttft_target_s=10.0))
+    base = _factory(0, req, qcfg)()
+    # Different request trace.
+    other_req = _requests(35.0, 2.0, seed=9)
+    with pytest.raises(ValueError, match="request trace"):
+        FederationSim([base, _factory(1, other_req, qcfg)()])
+    # Admission on one member only.
+    q_off = dataclasses.replace(qcfg, admission=None)
+    with pytest.raises(ValueError, match="admission"):
+        FederationSim([base, _factory(1, req, q_off)()])
+    # Overflow needs the controller.
+    with pytest.raises(ValueError, match="overflow"):
+        FederationSim([_factory(0, req, q_off)(),
+                       _factory(1, req, q_off)()],
+                      FederationConfig(overflow=True))
+    # Different controller law.
+    q_law = dataclasses.replace(
+        qcfg, admission=AdmissionConfig(ttft_target_s=10.0, decrease=0.3))
+    with pytest.raises(ValueError, match="admission law"):
+        FederationSim([base, _factory(1, req, q_law)()])
+    # Per-member *targets* are explicitly allowed.
+    q_tgt = dataclasses.replace(
+        qcfg, admission=AdmissionConfig(ttft_target_s=25.0))
+    FederationSim([base, _factory(1, req, q_tgt)()])
+
+
+# --------------------------------------------------------------------- #
+# Million-user-scale input machinery (satellites 1 + 2)
+# --------------------------------------------------------------------- #
+
+
+def test_thinned_arrivals_rejects_envelope_violation():
+    """Regression: a rate_fn exceeding the envelope used to silently
+    saturate the keep-probability at 1 and bias the trace low — now it
+    raises, and clip=True downgrades to a warning."""
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="envelope"):
+        thinned_arrivals(lambda t: np.full_like(t, 3.0), 2.0, 50.0, rng)
+    with pytest.warns(RuntimeWarning, match="envelope"):
+        t = thinned_arrivals(lambda t: np.full_like(t, 3.0), 2.0, 50.0,
+                             rng, clip=True)
+    assert (np.diff(t) >= 0).all()
+    # A rate_fn that merely *touches* the envelope stays legal
+    # (float-rounding tolerance).
+    thinned_arrivals(lambda t: np.full_like(t, 2.0), 2.0, 50.0, rng)
+
+
+def test_stream_arrivals_bounded_shards_match_envelope_semantics():
+    rng = np.random.default_rng(3)
+    rate_fn = lambda t: 20.0 * (1.0 + 0.5 * np.sin(t / 30.0))  # noqa: E731
+    times, n_env = stream_arrivals(rate_fn, 30.0, 900.0, rng, shard_s=100.0)
+    assert (np.diff(times) >= 0).all()
+    assert times.size and 0.0 <= times[0] and times[-1] < 900.0
+    assert n_env >= times.size                     # thinning only removes
+    # Rate sanity: kept arrivals approximate the integrated rate.
+    expect = 20.0 * 900.0 + 20.0 * 0.5 * 30.0 * (1 - np.cos(900.0 / 30.0))
+    assert abs(times.size - expect) / expect < 0.05
+    # Envelope violations raise exactly like the unsharded path.
+    with pytest.raises(ValueError, match="envelope"):
+        stream_arrivals(lambda t: np.full_like(t, 40.0), 30.0, 100.0,
+                        np.random.default_rng(0))
+
+
+def test_stream_requests_builds_valid_batch():
+    rng = np.random.default_rng(11)
+    req, n_env = stream_requests(rng, lambda t: np.full_like(t, 25.0),
+                                 30.0, 400.0, n_stations=8, shard_s=50.0)
+    assert n_env >= req.n_requests
+    assert (np.diff(req.arrival_s) >= 0).all()
+    assert (req.station >= 0).all() and (req.station < 8).all()
+    assert (req.prompt_len >= 1).all() and (req.decode_len >= 1).all()
+
+
+def test_request_of_token_memo_invalidates_on_replace():
+    req = _requests(30.0, 1.0)
+    a = req.request_of_token()
+    b = req.request_of_token()
+    assert a is b                                   # memo hit
+    assert not a.flags.writeable                    # shared copy is frozen
+    np.testing.assert_array_equal(
+        a, np.repeat(np.arange(req.n_requests), req.decode_len))
+    sub = req.subset(np.arange(req.n_requests) % 2 == 0)
+    c = sub.request_of_token()
+    assert c is not a
+    np.testing.assert_array_equal(
+        c, np.repeat(np.arange(sub.n_requests), sub.decode_len))

@@ -1,0 +1,153 @@
+"""Ground-segment edge cases: zero-visibility windows, deterministic
+ranked-visibility tie-breaks, single-gateway worlds with no retry
+fallback, and the federation-level constellation ranking."""
+import numpy as np
+import pytest
+
+from repro.core import Constellation, ConstellationConfig, LinkConfig
+from repro.traffic import (DEFAULT_STATIONS, GroundSegment, GroundStation,
+                           build_ground_segment, ground_delay_table,
+                           rank_constellations)
+
+CFG = ConstellationConfig.scaled(6, 8, n_slots=6, survival_prob=1.0)
+
+
+def _segment(min_elevation_deg=10.0, stations=DEFAULT_STATIONS, n_ranked=4):
+    con = Constellation(CFG)
+    return build_ground_segment(con, LinkConfig(), stations=stations,
+                                min_elevation_deg=min_elevation_deg,
+                                n_ranked=n_ranked)
+
+
+# --------------------------------------------------------------------- #
+# Zero-visible-gateway windows
+# --------------------------------------------------------------------- #
+
+
+def test_zero_visibility_window_is_consistent_across_tables():
+    """An impossible elevation mask leaves every (slot, station) pair
+    dark: -1 ingress, +inf uplink, floor elevation — in both the rank-0
+    arrays and the full ranked tables — and coverage reads 0."""
+    g = _segment(min_elevation_deg=89.99)
+    assert g.coverage() == 0.0
+    assert (g.ingress_sat == -1).all()
+    assert np.isinf(g.uplink_s).all()
+    assert (g.ingress_ranked == -1).all()
+    assert np.isinf(g.uplink_ranked_s).all()
+    assert (g.elevation_ranked_rad == -np.pi / 2).all()
+    # Request-level lookups keep the sentinel semantics.
+    sat, up = g.for_requests(np.zeros(3, dtype=int),
+                             np.array([0, 1, 2]))
+    assert (sat == -1).all() and np.isinf(up).all()
+
+
+def test_partial_visibility_pads_ranked_tail_with_sentinels():
+    """Where fewer than n_ranked satellites clear the mask, the ranked
+    tail is exactly (-1, +inf) — never a stale satellite id."""
+    g = _segment(min_elevation_deg=25.0)
+    dark = g.ingress_ranked < 0
+    assert dark.any()                       # mask actually bites somewhere
+    assert np.isinf(g.uplink_ranked_s[dark]).all()
+    lit = ~dark
+    assert np.isfinite(g.uplink_ranked_s[lit]).all()
+    # Visible prefix: once a rank is dark, every deeper rank is dark too
+    # (elevations are sorted descending, so -inf entries sort last).
+    assert (dark[..., :-1] <= dark[..., 1:]).all()
+
+
+# --------------------------------------------------------------------- #
+# Ranked-visibility determinism under ties
+# --------------------------------------------------------------------- #
+
+
+def test_ranked_visibility_ties_break_by_satellite_index():
+    """Two gateways at the identical site see the identical sky, and a
+    rebuild reproduces the tables bit-for-bit — the stable argsort
+    leaves no platform-dependent tie order."""
+    twin = (GroundStation("site-a", 12.0, 34.0),
+            GroundStation("site-b", 12.0, 34.0))
+    g1 = _segment(stations=twin)
+    g2 = _segment(stations=twin)
+    np.testing.assert_array_equal(g1.ingress_ranked[:, 0],
+                                  g1.ingress_ranked[:, 1])
+    np.testing.assert_array_equal(g1.uplink_ranked_s[:, 0],
+                                  g1.uplink_ranked_s[:, 1])
+    np.testing.assert_array_equal(g1.ingress_ranked, g2.ingress_ranked)
+    np.testing.assert_array_equal(g1.uplink_ranked_s, g2.uplink_ranked_s)
+
+
+def test_retry_stations_orders_by_forward_plus_uplink_and_drops_origin():
+    g = _segment()
+    R = 32
+    rng = np.random.default_rng(0)
+    slots = rng.integers(0, g.n_slots, R)
+    origin = rng.integers(0, g.n_stations, R)
+    alt = g.retry_stations(slots, origin, n_alternatives=g.n_stations - 1)
+    assert alt.shape == (R, g.n_stations - 1)
+    # The origin never appears; every other gateway appears exactly once.
+    for r in range(R):
+        assert origin[r] not in alt[r]
+        assert len(set(alt[r])) == g.n_stations - 1
+    # Ranking follows forward-delay + best-uplink cost (monotone score;
+    # an invisible-gateway tail diffs inf - inf = NaN, which is still a
+    # correctly-ordered tie).
+    score = g.uplink_s[slots] + g.ground_delay_s[origin]       # (R, S)
+    ranked_scores = np.take_along_axis(score, alt, axis=1)
+    with np.errstate(invalid="ignore"):
+        d = np.diff(ranked_scores, axis=1)
+    assert ((d >= 0) | np.isnan(d)).all()
+
+
+# --------------------------------------------------------------------- #
+# Single-gateway worlds: retry has no fallback
+# --------------------------------------------------------------------- #
+
+
+def test_single_gateway_world_has_no_retry_fallback():
+    """With one gateway there is no alternative to retry at: the table
+    is empty at any requested depth, and the ground-delay matrix is the
+    1x1 zero."""
+    g = _segment(stations=(GroundStation("only", 40.0, -100.0),))
+    assert g.n_stations == 1
+    alt = g.retry_stations(np.zeros(5, dtype=int), np.zeros(5, dtype=int),
+                           n_alternatives=3)
+    assert alt.shape == (5, 0)
+    assert g.ground_delay_s.shape == (1, 1)
+    assert g.ground_delay_s[0, 0] == 0.0
+
+
+def test_ground_delay_table_symmetric_zero_diagonal():
+    d = ground_delay_table(DEFAULT_STATIONS)
+    np.testing.assert_allclose(d, d.T)
+    assert (np.diag(d) == 0.0).all()
+    off = d[~np.eye(len(DEFAULT_STATIONS), dtype=bool)]
+    assert (off > 0).all()
+
+
+# --------------------------------------------------------------------- #
+# Federation-level constellation ranking
+# --------------------------------------------------------------------- #
+
+
+def test_rank_constellations_orders_by_cost_with_index_tie_break():
+    costs = np.array([
+        [0.5, np.inf, 1.0, 2.0],
+        [0.5, np.inf, 0.5, 1.0],
+        [0.2, 3.0, 0.5, np.inf],
+    ])
+    ranking = rank_constellations(costs)
+    assert ranking.shape == (4, 3)
+    # Request 0: member 2 cheapest, then the 0.5 tie breaks 0 before 1.
+    np.testing.assert_array_equal(ranking[0], [2, 0, 1])
+    # Request 1: only member 2 is feasible; the +inf tail keeps index
+    # order.
+    np.testing.assert_array_equal(ranking[1], [2, 0, 1])
+    # Request 2: 0.5 tie between members 1 and 2 breaks by index.
+    np.testing.assert_array_equal(ranking[2], [1, 2, 0])
+    # Request 3: infeasible member 2 sorts last.
+    np.testing.assert_array_equal(ranking[3], [1, 0, 2])
+
+
+def test_rank_constellations_rejects_bad_shape():
+    with pytest.raises(ValueError):
+        rank_constellations(np.zeros(3))

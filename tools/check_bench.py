@@ -54,6 +54,7 @@ SKIP_SUBSTRINGS = (
     "jax", "table_hash", "host", "measured", "predicted", "ratio",
     "build_s", "sweep_s", "steady_s", "first_s", "stages", "elapsed",
     "ttft", "e2e", "tpot", "wait", "latency", "_ms", "seconds",
+    "peak_rss",
 )
 
 #: (substring, rtol, atol) — loosest match wins; order is irrelevant.

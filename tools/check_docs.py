@@ -9,14 +9,18 @@ Three stdlib-only checks, run by the CI ``docs`` job and by
    offline-deterministic).
 2. **Snippet parity** — the first fenced ``python`` block in README.md
    must be byte-identical to the marked snippet region of
-   ``examples/readme_quickstart.py``, and the first block after the
-   "Tracing a run" heading to ``examples/readme_tracing.py``, so the
-   README code cannot drift from the files that are actually executed.
+   ``examples/readme_quickstart.py``, the first block after the
+   "Tracing a run" heading to ``examples/readme_tracing.py``, and the
+   first block after the "Planet-scale federation" heading to
+   ``examples/readme_federation.py``, so the README code cannot drift
+   from the files that are actually executed.
 3. **Snippet execution** (skippable with ``--no-exec``) — runs
    ``examples/readme_quickstart.py`` with ``PYTHONPATH=src`` and
    requires a SpaceMoE result row on stdout; runs
    ``examples/readme_tracing.py`` in a scratch directory and
-   schema-validates the trace it writes via ``tools/check_trace.py``.
+   schema-validates the trace it writes via ``tools/check_trace.py``;
+   runs ``examples/readme_federation.py`` and requires the pooled
+   federation row plus the reroute summary on stdout.
 
     python tools/check_docs.py [--no-exec]
 """
@@ -99,6 +103,11 @@ def check_snippet(errors: list[str]) -> None:
         errors.append(
             "README.md tracing block != examples/readme_tracing.py "
             "snippet region — update one to match the other")
+    if readme_python_block(after_heading="### Planet-scale federation") \
+            != snippet_region("readme_federation.py"):
+        errors.append(
+            "README.md federation block != examples/readme_federation.py "
+            "snippet region — update one to match the other")
 
 
 def run_quickstart(errors: list[str]) -> None:
@@ -143,6 +152,23 @@ def run_tracing(errors: list[str]) -> None:
                           f"{(check.stdout + check.stderr)[-2000:]}")
 
 
+def run_federation(errors: list[str]) -> None:
+    """Execute the federation snippet and require the pooled federation
+    row plus the reroute summary on stdout."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "examples" / "readme_federation.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    if proc.returncode != 0:
+        errors.append(f"federation snippet failed (rc={proc.returncode}):\n"
+                      f"{proc.stderr[-2000:]}")
+    elif "federation" not in proc.stdout or "rerouted" not in proc.stdout:
+        errors.append("federation snippet ran but printed no pooled "
+                      "federation row / reroute summary")
+
+
 def main(argv: list[str] | None = None) -> int:
     """Run all checks; print a report and return a process exit code."""
     ap = argparse.ArgumentParser()
@@ -156,6 +182,7 @@ def main(argv: list[str] | None = None) -> int:
     if not args.no_exec:
         run_quickstart(errors)
         run_tracing(errors)
+        run_federation(errors)
 
     docs = ", ".join(str(d.relative_to(REPO)) for d in iter_doc_files())
     if errors:
@@ -166,7 +193,7 @@ def main(argv: list[str] | None = None) -> int:
     print(f"docs check OK: {n_links} links across [{docs}], README "
           f"snippets in sync"
           + ("" if args.no_exec
-             else ", quickstart + tracing snippets executed"))
+             else ", quickstart + tracing + federation snippets executed"))
     return 0
 
 
